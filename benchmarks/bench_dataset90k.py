@@ -1,0 +1,32 @@
+"""Paper Appendix B — 90,000-step dataset statistical summary (B.2)."""
+from benchmarks.common import row, timed
+from repro.core import dataset90k
+
+PUB = {
+    "rtok_mtps": (20.52, 0.12, 20.20, 20.85),
+    "rho": (1.80, 0.43, 0.90, 2.70),
+    "dt_junction_c": (12.8, 4.2, 2.1, 28.6),     # paper-inconsistent row
+    "eta_pct": (34.1, 6.8, 22.1, 46.5),
+    "rth": (0.451, 0.009, 0.433, 0.471),
+    "drift_nm": (0.29, 0.04, 0.18, 0.36),
+}
+
+
+def run():
+    out = []
+    t, us = timed(dataset90k.generate, iters=1)
+    s = dataset90k.summary(t)
+    for k, v in s.items():
+        pm, ps, pmin, pmax = PUB[k]
+        flag = (" [PAPER-INCONSISTENT ROW: B.2 conflicts with the "
+                "published alpha/beta regression]"
+                if k == "dt_junction_c" else "")
+        out.append(row(f"dataset90k.{k}", us,
+                       f"mean={v['mean']:.3f}(pub {pm}) "
+                       f"std={v['std']:.3f}(pub {ps}) "
+                       f"min={v['min']:.3f}(pub {pmin}) "
+                       f"max={v['max']:.3f}(pub {pmax}){flag}"))
+    a, b, r2 = dataset90k.fit_affine(t.rtok, t.dt_junction)
+    out.append(row("dataset90k.regression", us,
+                   f"alpha={a:.2f} beta={b:.1f} R2={r2:.4f}(pub 0.9911)"))
+    return out

@@ -1,0 +1,41 @@
+"""Paper §4.1 — thermal-resistance fingerprint constants table."""
+import jax
+
+from benchmarks.common import row, timed
+from repro.core import dataset90k, pdu_gate, thermal
+from repro.core.fingerprint import FINGERPRINT as FP
+
+
+def run():
+    out = []
+    t, us = timed(lambda: dataset90k.generate(), iters=1)
+    a, b, r2 = dataset90k.fit_affine(t.rtok, t.dt_junction)
+    out.append(row("fingerprint.alpha_fit", us,
+                   f"alpha={a:.2f}C/MTPS(pub 63.0)"))
+    out.append(row("fingerprint.beta_fit", us, f"beta={b:.1f}C(pub -1256.6)"))
+    out.append(row("fingerprint.r2", us, f"R2={r2:.4f}(pub 0.9911)"))
+
+    poles = thermal.single_pole()
+    sr, us = timed(thermal.step_response, poles, 1200, 100.0)
+    ss = float(sr[-1])
+    out.append(row("fingerprint.rth", us,
+                   f"Rth={ss / 100.0:.3f}C/W(pub 0.45)"))
+    at_tau = float(sr[int(FP.tau_ms) - 1]) / ss
+    out.append(row("fingerprint.tau", us,
+                   f"63.2%@tau={at_tau * 100:.1f}%(pub 63.2)"))
+    out.append(row("fingerprint.kappa_to", 0.0,
+                   f"kappa={FP.kappa_to_nm_per_c}nm/C(lit match)"))
+    e20, e50 = float(pdu_gate.eta(20.0)), float(pdu_gate.eta(50.0))
+    out.append(row("fingerprint.eta", 0.0,
+                   f"eta20={e20 * 100:.2f}%(pub 22.12) "
+                   f"eta50={e50 * 100:.2f}%(pub 46.47)"))
+    # §4.1 series boundaries are CUMULATIVE: 0.45 (jxn→substrate) ⊂ 0.812
+    # (jxn→case) ⊂ 1.407 (jxn→heatsink) ⊂ 1.995 (jxn→ambient)
+    incr = (FP.rth_c_per_w, FP.rth_jxn_case - FP.rth_c_per_w,
+            FP.rth_case_sink - FP.rth_jxn_case,
+            FP.rth_total - FP.rth_case_sink)
+    out.append(row("fingerprint.series_rth", 0.0,
+                   "cumulative=0.45/0.812/1.407/1.995C/W increments="
+                   + "/".join(f"{x:.3f}" for x in incr)
+                   + " all_positive=" + str(all(x > 0 for x in incr))))
+    return out

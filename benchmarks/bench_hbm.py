@@ -1,0 +1,20 @@
+"""Paper §3.3 / Fig. 2③ — Effect ③: HBM memory-wall breakdown.
+Leakage by load state: baseline 12→166 MB/hr, V24 < 1 MB/hr; stacking."""
+from benchmarks.common import row
+from repro.core import hbm
+
+
+def run():
+    out = []
+    base = hbm.baseline_by_state()
+    v24 = hbm.v24_by_state()
+    for s in hbm.LOAD_STATES:
+        out.append(row(f"hbm.leakage.{s}", 0.0,
+                       f"base={base[s]:.1f}MB/hr v24={v24[s]:.2f}MB/hr"))
+    out.append(row("hbm.stacking", 0.0,
+                   f"base_peak={hbm.max_stack_layers(base['peak'])}L "
+                   f"v24={hbm.max_stack_layers(v24['peak'])}L(pub 16/24L)"))
+    out.append(row("hbm.refresh_overhead", 0.0,
+                   f"base={float(hbm.refresh_overhead_frac(base['peak'])) * 100:.1f}% "
+                   f"v24={float(hbm.refresh_overhead_frac(v24['peak'])) * 100:.2f}%"))
+    return out

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference.
+
+CPU wall times are NOT TPU predictions — interpret mode executes the kernel
+body with jnp ops.  The value here is (a) correctness at bench shapes and
+(b) the relative cost model of the blocked algorithms; TPU-side rooflines
+come from EXPERIMENTS.md §Roofline."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import thermal
+from repro.core.coupling import coupling_matrix
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    out = []
+    # flash attention
+    B, T, H, KV, d = 1, 1024, 8, 2, 128
+    q = jax.random.normal(KEY, (B, T, H, d), jnp.bfloat16)
+    k = jax.random.normal(KEY, (B, T, KV, d), jnp.bfloat16)
+    v = jax.random.normal(KEY, (B, T, KV, d), jnp.bfloat16)
+    o1, us1 = timed(lambda: flash_attention(q, k, v, interpret=True), iters=2)
+    o2, us2 = timed(jax.jit(lambda a, b, c: ref.attention_blockwise(a, b, c)),
+                    q, k, v, iters=2)
+    err = float(jnp.abs(o1.astype(jnp.float32) -
+                        o2.astype(jnp.float32)).max())
+    out.append(row("kernels.flash_1k", us1,
+                   f"ref_us={us2:.0f} allclose_err={err:.4f}"))
+
+    # ssd
+    B, T, H, N, P = 1, 512, 4, 64, 64
+    dks = jax.random.split(KEY, 4)
+    dd = 0.9 + 0.099 * jax.random.uniform(dks[0], (B, T, H, N))
+    bb = jax.random.normal(dks[1], (B, T, H, N)) * 0.2
+    xx = jax.random.normal(dks[2], (B, T, H, P))
+    cc = jax.random.normal(dks[3], (B, T, H, N)) * 0.2
+    y1, us1 = timed(lambda: ssd(dd, bb, xx, cc, interpret=True), iters=2)
+    y2, us2 = timed(jax.jit(lambda *a: ref.chunked_ssd(*a)), dd, bb, xx, cc,
+                    iters=2)
+    err = float(jnp.abs(y1[0] - y2[0]).max())
+    out.append(row("kernels.ssd_512", us1,
+                   f"ref_us={us2:.0f} allclose_err={err:.5f}"))
+
+    # thermal conv
+    pw = 100.0 * jax.random.uniform(KEY, (1000, 256))
+    g = coupling_matrix(256)
+    poles = thermal.two_pole()
+    from repro.kernels.thermal_conv import thermal_conv
+    (d1, s1), us1 = timed(lambda: thermal_conv(pw, g, poles.decay,
+                                               poles.gain), iters=1)
+    (d2, s2), us2 = timed(jax.jit(lambda p: ref.thermal_conv_ref(
+        p, g, poles.decay, poles.gain)), pw, iters=2)
+    err = float(jnp.abs(d1 - d2).max())
+    out.append(row("kernels.thermal_256x1000", us1,
+                   f"ref_us={us2:.0f} allclose_err={err:.5f}"))
+    return out

@@ -1,0 +1,30 @@
+"""Paper §10 / Fig. 6 — Monte-Carlo thermal simulation (N = 2000 trials;
+Rth ±8 %, τ ±12 %, ρ ±15 %) + per-workload uplift."""
+from benchmarks.common import row, timed
+from repro.core import montecarlo
+
+
+def run():
+    out = []
+    r, us = timed(lambda: montecarlo.run(n_trials=2000, n_steps=3000),
+                  iters=1, warmup=0)
+    s = r.stats()
+    out.append(row("montecarlo.baseline_peak", us,
+                   f"mean={s['baseline_mean_c']:.1f}C(pub ~91) "
+                   f"sigma={s['baseline_std_c']:.1f}C(pub ~6) "
+                   f"t_above={s['baseline_time_above_frac'] * 100:.1f}%"
+                   f"(pub 23)"))
+    out.append(row("montecarlo.v24_peak", us,
+                   f"mean={s['v24_mean_c']:.1f}C(pub ~82.5) "
+                   f"sigma={s['v24_std_c']:.1f}C(pub ~2.1) "
+                   f"t_above={s['v24_time_above_frac'] * 100:.2f}%(pub <1)"))
+    out.append(row("montecarlo.tightening", us,
+                   f"sigma_x={s['sigma_tighter_x']:.1f}(pub 3.5) "
+                   f"uplift={s['uplift_mean'] * 100:.1f}% "
+                   f"p5={s['uplift_p5'] * 100:.1f}% "
+                   f"p95={s['uplift_p95'] * 100:.1f}%"))
+    up, us2 = timed(montecarlo.uplift_by_workload, iters=1, warmup=0)
+    out.append(row("montecarlo.uplift_by_workload", us2,
+                   " ".join(f"{k}={v * 100:.1f}%" for k, v in up.items())
+                   + " (pub 19-31)"))
+    return out

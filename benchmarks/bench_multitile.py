@@ -1,0 +1,62 @@
+"""Paper §5 / Fig. 4 — V7.0 multi-tile architecture: N×N coupling matrix,
+two-pole kernel, UCIe telemetry budget, transient-ramp (seventh panel)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import coupling, dvfs, telemetry, thermal, workload
+from repro.kernels.thermal_conv import thermal_conv
+
+
+def run():
+    out = []
+    # --- Γ sparsity census (Ponte Vecchio equivalent) -----------------------
+    g = coupling.ponte_vecchio_gamma()
+    st = coupling.sparsity_stats(g, threshold=0.12)
+    out.append(row("multitile.gamma_47", 0.0,
+                   f"entries={st['entries']}(pub 2209) "
+                   f"significant={st['nonzero']}(pub ~350) "
+                   f"neigh={st['neighbours_mean']:.1f}/tile(pub 5-8)"))
+
+    # --- two-pole vs single-pole ramp overshoot (seventh panel, §5.4) -------
+    ramp = workload.make_trace(jax.random.PRNGKey(0), 3000, "training")
+    p1 = thermal.single_pole()
+    p2 = thermal.two_pole()
+    from repro.core.density import power_from_rho
+    pw = power_from_rho(ramp)
+    d1, _ = thermal.simulate(p1, pw)
+    (d2, _), us = timed(thermal.simulate, p2, pw)
+    fast_overshoot = float((d2 - d1).max())
+    out.append(row("multitile.two_pole_ramp", us,
+                   f"fast_pole_overshoot={fast_overshoot:.2f}C "
+                   f"(missed by V24 single-pole)"))
+
+    # --- 8-tile coupled control (Fig. 4) ------------------------------------
+    gamma8 = coupling.coupling_matrix(8, cols=4)
+    gamma8 = gamma8 / gamma8.sum(1, keepdims=True)
+    tr8 = workload.make_trace(jax.random.PRNGKey(2), 4000, "inference",
+                              n_tiles=8)
+    v24, us = timed(dvfs.simulate_v24, tr8, dvfs.DVFSConfig(),
+                    gamma=gamma8, poles=thermal.two_pole())
+    out.append(row("multitile.8tile_v24", us,
+                   f"peak={float(v24.temp.max()):.1f}C "
+                   f"events={int(v24.events)} perf={float(v24.perf):.3f}"))
+
+    # --- Pallas thermal kernel at fleet scale (512 tiles) --------------------
+    pw512 = 80.0 + 40.0 * jax.random.uniform(jax.random.PRNGKey(3),
+                                             (1000, 512))
+    g512 = coupling.coupling_matrix(512)
+    g512 = g512 / g512.sum(1, keepdims=True)
+    poles = thermal.two_pole()
+    (dts, _), us = timed(thermal_conv, pw512, g512, poles.decay, poles.gain,
+                         iters=1)
+    out.append(row("multitile.kernel_512x1000", us,
+                   f"interp_mode peak_dT={float(dts.max()):.1f}C"))
+
+    # --- UCIe sideband budget (§5.3) -----------------------------------------
+    b = telemetry.budget(n_tiles=8)
+    out.append(row("multitile.ucie", 0.0,
+                   f"packet={b['per_packet_us']:.0f}us(pub 512) "
+                   f"margin_x={b['lookahead_margin_x']:.0f} "
+                   f"fits={b['fits_lookahead']}"))
+    return out

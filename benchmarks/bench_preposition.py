@@ -1,0 +1,21 @@
+"""Paper §4.2 — preposition fraction η over the look-ahead window,
+including the V7.0 EMIB-lateral regime (η 6.5–15.4 %, §5.2)."""
+from benchmarks.common import row
+from repro.core import pdu_gate
+from repro.core.fingerprint import FINGERPRINT as FP
+
+
+def run():
+    out = []
+    for la in (20.0, 35.0, 50.0):
+        e = float(pdu_gate.eta(la))
+        out.append(row(f"preposition.eta_{int(la)}ms", 0.0,
+                       f"eta={e * 100:.2f}%"))
+    # EMIB lateral slow pole: τ₂ 200–500 ms ⇒ η reduced to 6.5–15.4 %
+    lo = float(pdu_gate.eta(20.0, tau_ms=FP.tau2_emib_ms))
+    hi = float(pdu_gate.eta(50.0, tau_ms=FP.tau2_emib_ms))
+    e500lo = float(pdu_gate.eta(20.0, tau_ms=500.0))
+    out.append(row("preposition.eta_emib", 0.0,
+                   f"eta20@350ms={lo * 100:.1f}% eta50@350ms={hi * 100:.1f}% "
+                   f"eta20@500ms={e500lo * 100:.1f}%(pub 6.5-15.4)"))
+    return out

@@ -1,0 +1,63 @@
+"""Roofline snapshot (deliverable g): re-derives the three terms for every
+live cell + the §Perf hillclimb deltas.  Uses results/dryrun.json for the
+compile-verified memory/census when present; the analytic terms need no
+hardware."""
+import json
+import os
+
+from benchmarks.common import row
+from repro.configs import SHAPES, get_arch, get_shape, live_cells
+from repro.launch import roofline as RL
+
+HILLCLIMB = [
+    ("gemma-7b", "decode_32k", {}, {"kv_int8": True}, "int8kv"),
+    ("granite-3-2b", "train_4k", {}, {"_tp": 4}, "tp4"),
+    ("deepseek-v2-236b", "train_4k", {},
+     {"n_microbatches": 16, "tp_attention": False}, "mb16+eponly"),
+]
+
+
+def run():
+    out = []
+    mesh = {"data": 16, "model": 16}
+    worst = (None, 1.1)
+    for arch, shape in live_cells():
+        rl = RL.analytic(get_arch(arch), get_shape(shape), mesh).as_dict()
+        out.append(row(f"roofline.{arch}.{shape}", 0.0,
+                       f"bottleneck={rl['bottleneck']} "
+                       f"frac={rl['roofline_fraction']:.3f} "
+                       f"tC={rl['t_compute_s']:.2e}s "
+                       f"tM={rl['t_memory_s']:.2e}s "
+                       f"tX={rl['t_collective_s']:.2e}s "
+                       f"hbm={rl['per_chip_hbm_gb']:.1f}GB"))
+        if rl["roofline_fraction"] < worst[1]:
+            worst = (f"{arch}|{shape}", rl["roofline_fraction"])
+    out.append(row("roofline.worst_cell", 0.0,
+                   f"{worst[0]} frac={worst[1]:.4f}"))
+
+    for arch, shape, base_o, opt_o, label in HILLCLIMB:
+        m = dict(mesh)
+        if "_tp" in opt_o:
+            tp = opt_o.pop("_tp")
+            m = {"data": 256 // tp, "model": tp}
+        b = RL.analytic(get_arch(arch), get_shape(shape), mesh,
+                        opts=base_o).as_dict()
+        o = RL.analytic(get_arch(arch), get_shape(shape), m,
+                        opts=opt_o).as_dict()
+        dom_b = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        dom_o = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        out.append(row(f"roofline.perf.{arch}.{label}", 0.0,
+                       f"frac {b['roofline_fraction']:.3f}->"
+                       f"{o['roofline_fraction']:.3f} "
+                       f"step_bound {dom_b:.3f}s->{dom_o:.3f}s "
+                       f"x{dom_b / dom_o:.2f} "
+                       f"hbm {b['per_chip_hbm_gb']:.1f}->"
+                       f"{o['per_chip_hbm_gb']:.1f}GB"))
+    ok = "results/dryrun.json"
+    if os.path.exists(ok):
+        with open(ok) as f:
+            d = json.load(f)
+        n = sum(1 for v in d.values() if v.get("ok"))
+        out.append(row("roofline.dryrun_cells", 0.0,
+                       f"{n}/{len(d)} lowered+compiled ok"))
+    return out

@@ -1,0 +1,23 @@
+"""Shared benchmark plumbing: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """(result, µs/call) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return out, us
+
+
+def row(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

@@ -1,0 +1,121 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.report_roofline [--json results/dryrun.json]
+
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, k in (("s", 1.0), ("ms", 1e-3), ("µs", 1e-6), ("ns", 1e-9)):
+        if x >= k:
+            return f"{x / k:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def fmt_b(x):
+    for unit, k in (("PB", 1e15), ("TB", 1e12), ("GB", 1e9), ("MB", 1e6),
+                    ("kB", 1e3)):
+        if x >= k:
+            return f"{x / k:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(results: dict) -> str:
+    rows = ["| arch | shape | mesh | compile | per-chip args | per-chip temp "
+            "| HLO flops (raw) | collectives (trip-corrected) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("variant"):
+            continue          # §Perf variants tabulated separately
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAILED: {r.get('error', '?')[:60]} | | | | |")
+            continue
+        mem = r["memory_analysis"]
+        cen = r.get("collectives", {}).get("by_kind", {})
+        cen_s = " ".join(f"{k}:{fmt_b(v)}" for k, v in sorted(cen.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f}s | "
+            f"{fmt_b(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_b(mem.get('temp_size_in_bytes', 0))} | "
+            f"{r['cost_analysis_raw'].get('flops', 0):.2e} | {cen_s or '-'} |")
+    return "\n".join(rows)
+
+
+def _recompute(r):
+    """Re-derive the analytic roofline at report time (so cost-model fixes
+    don't require recompiling the 66-cell matrix)."""
+    from repro.configs import get_arch, get_shape
+    from repro.launch import roofline as RL
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16}
+                  if r["mesh"] == "2x16x16" else {"data": 16, "model": 16})
+    return RL.analytic(get_arch(r["arch"]), get_shape(r["shape"]),
+                       mesh_shape).as_dict()
+
+
+def roofline_table(results: dict, mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+            "roofline-frac | useful (6ND/HLO) | per-chip HBM |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if not r.get("ok") or r["mesh"] != mesh or r.get("variant"):
+            continue          # variants live in the §Perf log, not here
+        rl = _recompute(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['t_compute_s'])} | "
+            f"{fmt_s(rl['t_memory_s'])} | {fmt_s(rl['t_collective_s'])} | "
+            f"**{rl['bottleneck']}** | {rl['roofline_fraction']:.2f} | "
+            f"{rl['useful_ratio']:.2f} | {rl['per_chip_hbm_gb']:.1f}GB |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(results: dict) -> list[str]:
+    """Worst roofline fraction, most collective-bound, most paper-central."""
+    single = [dict(v, roofline=_recompute(v)) for v in results.values()
+              if v.get("ok") and v["mesh"] == "16x16"
+              and not v.get("variant")]
+    worst = min(single, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(single,
+               key=lambda r: (r["roofline"]["t_collective_s"]
+                              / max(max(r["roofline"]["t_compute_s"],
+                                        r["roofline"]["t_memory_s"]), 1e-12)))
+    return [f"{worst['arch']}|{worst['shape']} "
+            f"(worst roofline fraction "
+            f"{worst['roofline']['roofline_fraction']:.3f})",
+            f"{coll['arch']}|{coll['shape']} (most collective-bound: "
+            f"t_coll/t_dom = "
+            f"{coll['roofline']['t_collective_s'] / max(coll['roofline']['t_compute_s'], coll['roofline']['t_memory_s']):.2f})"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"## Dry-run matrix ({ok}/{len(results)} cells compiled)\n")
+    print(dryrun_table(results))
+    print("\n\n## Roofline (single-pod 16×16, analytic model; "
+          "see §Methodology)\n")
+    print(roofline_table(results, "16x16"))
+    print("\n\n## Roofline (multi-pod 2×16×16)\n")
+    print(roofline_table(results, "2x16x16"))
+    print("\n\n## Hillclimb candidates\n")
+    for c in pick_hillclimb(results):
+        print("*", c)
+
+
+if __name__ == "__main__":
+    main()

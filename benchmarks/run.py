@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §5).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fingerprint,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "bench_fingerprint",     # §4.1 fingerprint constants table
+    "bench_throttling",      # §3.1 / Fig.2① Effect ①
+    "bench_cpo",             # §3.2 / Fig.2② Effect ②
+    "bench_hbm",             # §3.3 / Fig.2③ Effect ③
+    "bench_guardband",       # §3.4 / Fig.2④ Effect ④
+    "bench_preposition",     # §4.2 η
+    "bench_multitile",       # §5 / Fig.4 V7.0
+    "bench_serdes",          # §6
+    "bench_competitive",     # §9 / Fig.5
+    "bench_montecarlo",      # §10 / Fig.6
+    "bench_dataset90k",      # Appendix B
+    "bench_kernels",         # Pallas kernels vs refs
+    "bench_roofline",        # deliverable g snapshot + §Perf deltas
+    "bench_stragglers",      # beyond-paper: thermal straggler mitigation
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench suffixes to run")
+    args = ap.parse_args()
+    only = {f"bench_{s.strip()}" for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name}.FAILED,0.0,{e!r}", file=sys.stderr)
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

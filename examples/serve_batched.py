@@ -1,0 +1,21 @@
+"""Batched serving with thermal admission control (Effect ① for inference).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Runs two serving scenarios on a reduced mixtral (MoE + sliding window):
+  (a) naive: admit the full batch every wave;
+  (b) V24: the PDU gate throttles admission when the predicted junction
+      temperature approaches the limit — P99 stays smooth (paper §8.1).
+"""
+from repro.launch import serve
+
+print("== V24 thermal-admission serving (mixtral-8x7b, reduced) ==")
+out = serve.main(["--arch", "mixtral-8x7b", "--reduced", "--batch", "8",
+                  "--prompt-len", "48", "--gen", "16", "--waves", "3"])
+print(f"summary: p50 {out['p50'] * 1e3:.2f} ms  p99 {out['p99'] * 1e3:.2f} ms "
+      f" admissions {out['admitted']}")
+
+print("\n== long-context decode on an SSM (rwkv6, reduced) ==")
+out2 = serve.main(["--arch", "rwkv6-1.6b", "--reduced", "--batch", "4",
+                   "--prompt-len", "64", "--gen", "16", "--waves", "2"])
+print(f"summary: p50 {out2['p50'] * 1e3:.2f} ms  p99 {out2['p99'] * 1e3:.2f} ms")

@@ -1,0 +1,144 @@
+"""Crash-consistent checkpointing with async save, auto-resume and elastic
+re-mesh.
+
+Layout:
+    <dir>/step_00001234.tmp/...      (in-flight write)
+    <dir>/step_00001234/             (atomic rename on completion)
+        manifest.json                (tree structure, shapes, dtypes, "complete")
+        arr_00000.npy ...            (one file per leaf, host-gathered)
+
+Fault-tolerance contract (task brief):
+  * atomic: a crash mid-save never corrupts the latest checkpoint — readers
+    only see fully-renamed step dirs whose manifest says complete;
+  * async: `save()` snapshots to host (device_get) then writes on a
+    background thread, so training stalls only for the host gather;
+  * auto-resume: `restore_latest()` scans for the newest complete step;
+  * elastic re-mesh: leaves are stored as FULL host arrays, so restoring
+    under a different mesh/sharding just re-`device_put`s with the new
+    sharding (at frontier scale one would shard the files themselves à la
+    tensorstore; full-array files are the right call at this repo's scale
+    and make elasticity trivial);
+  * keep_n GC.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------- saving --
+    def save(self, step: int, state, blocking: bool = False) -> None:
+        """Snapshot `state` (any pytree) at `step`; write asynchronously."""
+        self.wait()                      # one in-flight save at a time
+        leaves, treedef = jax.tree.flatten(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        spec = {"treedef": str(treedef), "n_leaves": len(host),
+                "shapes": [list(h.shape) for h in host],
+                "dtypes": [str(h.dtype) for h in host],
+                "step": step, "complete": True}
+
+        def write():
+            try:
+                tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+                fin = os.path.join(self.dir, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                for i, h in enumerate(host):
+                    # npy can't represent ml_dtypes (bfloat16 etc.) portably;
+                    # store the raw bits and reconstruct from the manifest
+                    if h.dtype.kind not in "biufc":
+                        h = h.view(np.uint16 if h.dtype.itemsize == 2
+                                   else np.uint8)
+                    np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), h)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(spec, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(fin):
+                    shutil.rmtree(fin)
+                os.rename(tmp, fin)
+                self._gc()
+            except BaseException as e:   # noqa: BLE001
+                self._error = e
+
+        if blocking:
+            write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {e}") from e
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ loading --
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                man = os.path.join(self.dir, name, "manifest.json")
+                try:
+                    with open(man) as f:
+                        if json.load(f).get("complete"):
+                            out.append(int(name.split("_")[1]))
+                except (OSError, ValueError, json.JSONDecodeError):
+                    continue
+        return sorted(out)
+
+    def restore(self, step: int, template, shardings=None):
+        """Restore into the structure of `template` (pytree of arrays or
+        ShapeDtypeStructs).  `shardings`: optional congruent tree of
+        NamedShardings — THE elastic re-mesh hook (full host arrays are
+        re-placed under whatever mesh the new job runs)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            man = json.load(f)
+        leaves, treedef = jax.tree.flatten(template)
+        host = []
+        for i in range(len(leaves)):
+            a = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+            want = man["dtypes"][i]
+            if str(a.dtype) != want:          # bit-stored ml_dtype
+                import ml_dtypes
+                a = a.view(np.dtype(getattr(ml_dtypes, want, want)))
+            host.append(a)
+        if shardings is not None:
+            sh_leaves = treedef.flatten_up_to(shardings)
+            host = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
+        else:
+            host = [jax.device_put(h.astype(l.dtype) if hasattr(l, "dtype")
+                                   else h) for h, l in zip(host, leaves)]
+        return treedef.unflatten(host)
+
+    def restore_latest(self, template, shardings=None):
+        """(state, step) from the newest complete checkpoint, or (None, -1)."""
+        steps = self.steps()
+        if not steps:
+            return None, -1
+        return self.restore(steps[-1], template, shardings), steps[-1]

@@ -1,0 +1,23 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000,
+MoE 8 experts top-2, sliding-window attention.  [arXiv:2401.04088; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    mlp="swiglu",
+    attn_kind="swa",
+    window=4096,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=14336,
+    tie_embeddings=False,
+    source="arXiv:2401.04088; hf",
+)

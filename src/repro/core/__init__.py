@@ -1,0 +1,26 @@
+"""Core library — the paper's contribution (XRM-SSD V24/V7.0) in JAX.
+
+Layer map (paper → module):
+  §4.1 fingerprint constants      → fingerprint
+  §4.2 ρ density metric           → density
+  §4.2 thermal convolution        → thermal (+ kernels/thermal_conv Pallas)
+  §4.2 PDU gate / η               → pdu_gate
+  §5.1 N×N coupling matrix Γ      → coupling
+  §3.1 DVFS effects               → dvfs
+  §3.2 CPO optical stability      → cpo
+  §3.3 HBM leakage clamp          → hbm
+  §3.4 guard-band liberation      → guardband
+  §5.3 UCIe telemetry             → telemetry
+  §6   SerDes conditioning        → serdes
+  §10  Monte-Carlo harness        → montecarlo
+  App B 90k-step dataset          → dataset90k
+  integration layer               → scheduler (rides in the train state)
+"""
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+from repro.core.scheduler import (SchedulerConfig, SchedulerOutput,
+                                  SchedulerState, ThermalScheduler)
+
+__all__ = [
+    "FINGERPRINT", "Fingerprint",
+    "ThermalScheduler", "SchedulerConfig", "SchedulerState", "SchedulerOutput",
+]

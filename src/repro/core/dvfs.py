@@ -1,0 +1,187 @@
+"""Effect ① — DVFS sawtooth baseline vs V24 pre-emptive voltage pre-positioning.
+
+Paper §3.1: LLM token-generation spikes drive junction temperature to the
+critical threshold within milliseconds.  Reactive DVFS throttles to 55–70 % of
+peak, producing a sawtooth performance curve and P99 tail-latency variance.
+V24 issues H(t) = P_EIC(t+Δt_la|Ft) 20–50 ms ahead; pre-positioned voltage
+headroom absorbs the surge and the junction never crosses the trigger.
+
+Both controllers are pure-JAX `lax.scan` simulations over a 1 kHz density
+trace, sharing one thermal plant (`repro.core.thermal`) so the comparison is
+apples-to-apples.  Power model: P(ρ, f) = P(ρ)·f³ (voltage tracks frequency ⇒
+cubic dynamic power), with P(ρ) the steady-state inversion of the paper's
+affine fingerprint (`density.power_from_rho`).
+
+Key quantities reproduced (paper §1.1, §3.1):
+  * released compute  = perf_V24/perf_baseline − 1 ∈ +20–30 %
+  * peak temperature ≤ 85 °C under V24, no frequency-reduction events
+  * smooth envelope vs sawtooth; P99 token latency stable
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdu_gate, thermal
+from repro.core.density import power_from_rho
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class DVFSConfig:
+    dt_ms: float = 1.0
+    lookahead_ms: float = 35.0         # mid of the 20–50 ms window
+    filtration_window: int = 64        # Ft depth (64 ms of 1 kHz history)
+    t_safe_margin_c: float = 0.5       # controller aims at T_crit − margin
+    throttle_level: float = 0.55       # reactive emergency floor (55–70 % band)
+    resume_below_c: float = 66.0       # hysteresis: stay throttled until T ≤ this
+    recover_ms: float = 100.0           # reactive ramp-back
+    power_exponent: float = 3.0        # P ∝ f³ (V tracks f)
+    poll_interval_ms: float = 25.0     # baseline temperature-polling period
+    # (§9 baseline row: "Reactive DVFS + temperature polling" — the sensor loop
+    # only observes every poll; overshoot past T_crit between polls is the
+    # mechanism behind the §10 baseline peak-temperature distribution)
+
+
+class SimResult(NamedTuple):
+    freq: jnp.ndarray        # [T, n_tiles] frequency multiplier (relative perf)
+    temp: jnp.ndarray        # [T, n_tiles] junction temperature [°C]
+    events: jnp.ndarray      # [] number of reactive throttle trigger events
+    perf: jnp.ndarray        # [] mean delivered performance (mean f)
+    p99_latency: jnp.ndarray # [] 99th-percentile relative token latency (1/f)
+
+
+def _finish(freqs, temps, events) -> SimResult:
+    lat = 1.0 / jnp.maximum(freqs, 1e-6)
+    return SimResult(
+        freq=freqs, temp=temps, events=events,
+        perf=freqs.mean(),
+        p99_latency=jnp.percentile(lat, 99.0),
+    )
+
+
+def simulate_reactive(rho_trace: jnp.ndarray,
+                      cfg: DVFSConfig = DVFSConfig(),
+                      fp: Fingerprint = FINGERPRINT,
+                      gamma: jnp.ndarray | None = None,
+                      poles: thermal.PoleParams | None = None,
+                      poll_ticks=None) -> SimResult:
+    """Baseline: reactive DVFS with hysteresis — the sawtooth (paper §3.1).
+
+    ``poll_ticks`` may be a traced value (the Monte-Carlo harness samples
+    per-OEM polling-period diversity); defaults to the config's poll interval.
+    """
+    rho_trace = jnp.atleast_2d(rho_trace.T).T            # [T, n_tiles]
+    n_tiles = rho_trace.shape[1]
+    poles = poles if poles is not None else thermal.single_pole(fp, cfg.dt_ms)
+    if poll_ticks is None:
+        poll_ticks = max(int(cfg.poll_interval_ms / cfg.dt_ms), 1)
+    ramp = (1.0 - cfg.throttle_level) / max(int(cfg.recover_ms / cfg.dt_ms), 1)
+
+    def tick(carry, inp):
+        st, f, throttled, events = carry
+        rho, k = inp
+        p = power_from_rho(rho) * f ** cfg.power_exponent
+        p_eff = p if gamma is None else gamma @ p
+        st = thermal.step(poles, st, p_eff)
+        t = fp.t_ambient_c + thermal.delta_t(st)
+        # sensor loop only sees the junction every poll interval; hysteresis —
+        # once triggered, stay throttled until the junction cools to resume_below
+        polled = (k % poll_ticks) == 0
+        trig = (t >= fp.t_crit_c) & polled
+        cool = (t <= cfg.resume_below_c) & polled
+        events = events + jnp.any(trig & ~throttled)
+        throttled = (throttled | trig) & ~cool
+        f = jnp.where(throttled, cfg.throttle_level,
+                      jnp.minimum(f + ramp, 1.0))
+        return (st, f, throttled, events), (f, t)
+
+    st0 = thermal.init_state(poles, n_tiles)
+    f0 = jnp.ones((n_tiles,))
+    th0 = jnp.zeros((n_tiles,), bool)
+    ks = jnp.arange(rho_trace.shape[0])
+    (_, _, _, events), (freqs, temps) = jax.lax.scan(
+        tick, (st0, f0, th0, jnp.zeros((), jnp.int32)), (rho_trace, ks))
+    return _finish(freqs, temps, events)
+
+
+def simulate_v24(rho_trace: jnp.ndarray,
+                 cfg: DVFSConfig = DVFSConfig(),
+                 fp: Fingerprint = FINGERPRINT,
+                 gamma: jnp.ndarray | None = None,
+                 poles: thermal.PoleParams | None = None) -> SimResult:
+    """V24/V7.0: PDU-Gate hints + pre-positioned headroom — smooth envelope.
+
+    Control law (one-pole-ahead inversion): with look-ahead Δt_la the predicted
+    junction rise is
+
+        ΔT(t+Δt_la) ≈ (1−η)·ΔT(t) + η·Rth·Γ·P(ρ̂, f)
+
+    where η = 1 − e^(−Δt_la/τ) is exactly the paper's preposition fraction.
+    The gate picks the largest f with ΔT(t+Δt_la) ≤ T_safe − T_amb; because it
+    acts 20–50 ms early on the *predicted* surge, corrections are tiny and the
+    sawtooth disappears — the released-compute gap vs the reactive baseline is
+    Effect ①'s +20–30 %.
+    """
+    rho_trace = jnp.atleast_2d(rho_trace.T).T
+    n_tiles = rho_trace.shape[1]
+    poles = poles if poles is not None else thermal.single_pole(fp, cfg.dt_ms)
+    # η derived from the slow pole's decay so Monte-Carlo τ perturbations
+    # propagate (a = e^{-dt/τ}  ⇒  η = 1 − a^{Δt_la/dt} = 1 − e^{−Δt_la/τ})
+    eta = 1.0 - poles.decay[-1] ** (cfg.lookahead_ms / cfg.dt_ms)
+    t_allow = fp.t_crit_c - cfg.t_safe_margin_c - fp.t_ambient_c
+    gain_sum = poles.gain.sum()            # = Rth (traced, vmap-safe)
+
+    gamma_diag = None if gamma is None else jnp.diagonal(gamma)
+
+    def tick(carry, rho):
+        st, ft, f_prev, events = carry
+        ft = pdu_gate.observe(ft, rho)
+        # H(t): per-tile predicted power Δt_la ahead, Γ-coupled (paper §5.1).
+        # The instantaneous load is a floor under the hint — prediction buys
+        # pre-positioning lead time, never permission to exceed the thermal
+        # budget on a mispredicted burst onset.
+        h = pdu_gate.hint(ft, gamma, cfg.lookahead_ms, cfg.dt_ms)
+        p_hat = power_from_rho(rho)
+        h = jnp.maximum(h, p_hat if gamma is None else gamma @ p_hat)
+        dt_now = thermal.delta_t(st)
+        budget = (t_allow - (1.0 - eta) * dt_now) / (eta * gain_sum)
+        # largest f with predicted ΔT ≤ allowance (cube-root inversion)
+        f = jnp.clip((budget / jnp.maximum(h, 1e-3))
+                     ** (1.0 / cfg.power_exponent), 0.05, 1.0)
+        if gamma is not None:
+            # coupled V7.0 control: tile i only controls its own power, so
+            # ALSO bound f by the coupled law — the Γ hint split into a
+            # controllable self term and an uncontrollable neighbour term
+            # (estimated with last step's f; the control loop supplies the
+            # fixed-point iteration over time).  min() of the two laws caps
+            # both the "everyone jumps together" and the "neighbours dump
+            # heat on me" failure modes.
+            p_prev = p_hat * f_prev ** cfg.power_exponent
+            neigh = gamma @ p_prev - gamma_diag * p_prev
+            self_h = jnp.maximum(gamma_diag * p_hat, 1e-3)
+            f_cpl = jnp.clip((jnp.maximum(budget - neigh, 1e-6) / self_h)
+                             ** (1.0 / cfg.power_exponent), 0.05, 1.0)
+            f = jnp.minimum(f, f_cpl)
+        p = p_hat * f ** cfg.power_exponent
+        p_eff = p if gamma is None else gamma @ p
+        st = thermal.step(poles, st, p_eff)
+        t = fp.t_ambient_c + thermal.delta_t(st)
+        events = events + jnp.any(t >= fp.t_crit_c)   # must stay zero
+        return (st, ft, f, events), (f, t)
+
+    st0 = thermal.init_state(poles, n_tiles)
+    ft0 = pdu_gate.init_filtration(cfg.filtration_window, n_tiles,
+                                   fill=rho_trace[0].mean())
+    f0 = jnp.full((n_tiles,), 0.5)      # conservative cold start
+    (_, _, _, events), (freqs, temps) = jax.lax.scan(
+        tick, (st0, ft0, f0, jnp.zeros((), jnp.int32)), rho_trace)
+    return _finish(freqs, temps, events)
+
+
+def released_compute(base: SimResult, v24: SimResult) -> jnp.ndarray:
+    """Effect ① headline: fraction of throttle-locked performance released."""
+    return v24.perf / base.perf - 1.0

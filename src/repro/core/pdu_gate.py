@@ -1,0 +1,85 @@
+"""PDU Gate — causal predictive hint H(t) = Γ·P_EIC(t + Δt_la | Ft)  (paper §4.2, §5.1).
+
+Ft is the historical filtration: a ring buffer of recent workload-density
+samples at the 1 kHz telemetry rate.  The V24 predictor extrapolates the
+density Δt_la = 20–50 ms ahead; V7.0 adds the dρ/dt temporal-derivative hint
+("seventh fingerprint panel", §5.4) as the primary ramp-event signal.
+
+Preposition fraction (paper §4.2):
+
+    η = 1 − exp(−Δt_la / τ)   →   22.12 % @ 20 ms,  46.47 % @ 50 ms
+
+η is the fraction of a step thermal event the actuator can absorb inside the
+look-ahead window — it is also exactly the weight the one-pole-ahead
+temperature prediction puts on *future* power, which is how the controller
+(`repro.core.dvfs`) uses it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+
+def eta(lookahead_ms, tau_ms: float | None = None) -> jnp.ndarray:
+    """Preposition fraction η = 1 − exp(−Δt_la/τ)."""
+    tau = FINGERPRINT.tau_ms if tau_ms is None else tau_ms
+    return 1.0 - jnp.exp(-jnp.asarray(lookahead_ms) / tau)
+
+
+class Filtration(NamedTuple):
+    """Ring buffer Ft of per-tile density history. buf: [window, n_tiles]."""
+
+    buf: jnp.ndarray
+    ptr: jnp.ndarray  # scalar int32 — next write slot
+
+
+def init_filtration(window: int, n_tiles: int, fill: float = 0.0) -> Filtration:
+    return Filtration(buf=jnp.full((window, n_tiles), fill),
+                      ptr=jnp.zeros((), jnp.int32))
+
+
+def observe(ft: Filtration, rho: jnp.ndarray) -> Filtration:
+    """Push one density sample (per tile) into the filtration."""
+    buf = jax.lax.dynamic_update_index_in_dim(ft.buf, rho, ft.ptr, axis=0)
+    return Filtration(buf=buf, ptr=(ft.ptr + 1) % ft.buf.shape[0])
+
+
+def _ordered(ft: Filtration) -> jnp.ndarray:
+    """History oldest→newest along axis 0."""
+    idx = (ft.ptr + jnp.arange(ft.buf.shape[0])) % ft.buf.shape[0]
+    return ft.buf[idx]
+
+
+def predict_rho(ft: Filtration, lookahead_ms: float,
+                dt_ms: float = 1.0) -> jnp.ndarray:
+    """ρ̂(t + Δt_la | Ft): smoothed level + dρ/dt ramp extrapolation.
+
+    Level = mean of the newest quarter of the window; slope = least-squares
+    over the full window (the V7.0 derivative hint).  Clipped to the paper's
+    density domain so an extrapolated ramp cannot exit physical range.
+    """
+    hist = _ordered(ft)                       # [W, n_tiles]
+    w = hist.shape[0]
+    t = jnp.arange(w, dtype=hist.dtype)
+    tm, hm = t.mean(), hist.mean(axis=0)
+    slope = ((t - tm)[:, None] * (hist - hm)).sum(0) / ((t - tm) ** 2).sum()
+    recent = hist[-max(w // 4, 1):].mean(axis=0)
+    ahead = lookahead_ms / dt_ms
+    return jnp.clip(recent + slope * ahead,
+                    0.0, 1.5 * FINGERPRINT.rho_max)
+
+
+def hint(ft: Filtration, gamma: jnp.ndarray | None,
+         lookahead_ms: float, dt_ms: float = 1.0) -> jnp.ndarray:
+    """H(t) = Γ · P_EIC(t + Δt_la | Ft)   [per-tile W] (paper §5.1).
+
+    The scalar-Γ V24 form is the ``gamma=None`` case.
+    """
+    from repro.core.density import power_from_rho
+
+    p_ahead = power_from_rho(predict_rho(ft, lookahead_ms, dt_ms))
+    return p_ahead if gamma is None else gamma @ p_ahead

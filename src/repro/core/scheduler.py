@@ -1,0 +1,155 @@
+"""ThermalScheduler — the paper's firmware layer as a first-class training/serving
+component.
+
+This is the integration point between the V24/V7.0 physics (density → filtration
+→ PDU-gate hint → pre-positioning) and the JAX training loop: the scheduler
+state rides in the train state, `update()` is pure JAX (jit/scan-safe), and its
+outputs drive (a) the simulated per-chip frequency envelope, (b) straggler
+mitigation weights for the data pipeline, and (c) host telemetry.
+
+One call to `update()` == one training/serving step; the thermal plant is
+advanced by the step's wall-time in closed form (exact ZOH over n ticks:
+state' = aⁿ·state + (1−aⁿ)·G·P).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdu_gate, thermal
+from repro.core.coupling import coupling_matrix
+from repro.core.density import power_from_rho
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    n_tiles: int = 1
+    mode: str = "v24"              # v24 | reactive | off
+    two_pole: bool = True          # V7.0 kernel (V24 single-pole if False)
+    use_coupling: bool = True      # V7.0 N×N Γ (identity if False)
+    step_ms: float = 10.0          # wall-time of one training step
+    lookahead_steps: int = 3       # hint horizon in steps (≈ 20–50 ms)
+    filtration_window: int = 16    # Ft depth in steps
+    t_safe_margin_c: float = 1.0
+    power_exponent: float = 3.0
+    straggler_threshold: float = 0.9   # f below this ⇒ tile flagged at-risk
+
+    @property
+    def lookahead_ms(self) -> float:
+        return self.lookahead_steps * self.step_ms
+
+
+class SchedulerState(NamedTuple):
+    thermal: jnp.ndarray            # [n_tiles, n_poles]
+    filtration: pdu_gate.Filtration
+    freq: jnp.ndarray               # [n_tiles]
+    step: jnp.ndarray               # scalar int32
+    events: jnp.ndarray             # scalar int32 — T_crit crossings (want 0)
+
+
+class SchedulerOutput(NamedTuple):
+    freq: jnp.ndarray               # [n_tiles] frequency multiplier this step
+    temp_c: jnp.ndarray             # [n_tiles] junction temperature
+    hint_w: jnp.ndarray             # [n_tiles] H(t) pre-position hint [W]
+    eta: jnp.ndarray                # scalar preposition fraction
+    at_risk: jnp.ndarray            # [n_tiles] bool straggler-risk flags
+    balance: jnp.ndarray            # [n_tiles] work-rebalance weights (sum=1)
+
+
+class ThermalScheduler:
+    """Pure-functional scheduler: `state = init(); state, out = update(state, ρ)`."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+                 fp: Fingerprint = FINGERPRINT):
+        self.cfg = cfg
+        self.fp = fp
+        base = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
+                else thermal.single_pole(fp, cfg.step_ms))
+        self.poles = base
+        self.gamma = (coupling_matrix(cfg.n_tiles) if cfg.use_coupling
+                      and cfg.n_tiles > 1 else None)
+        # per-tile Γ row-sum normalisation keeps multi-tile steady-state in the
+        # same °C/W fingerprint frame as the single-tile validation
+        if self.gamma is not None:
+            self.gamma = self.gamma / self.gamma.sum(axis=1, keepdims=True)
+        import math
+        self.eta = 1.0 - math.exp(-cfg.lookahead_ms / fp.tau_ms)
+
+    # ------------------------------------------------------------------ api
+    def init(self) -> SchedulerState:
+        c = self.cfg
+        return SchedulerState(
+            thermal=thermal.init_state(self.poles, c.n_tiles),
+            filtration=pdu_gate.init_filtration(c.filtration_window, c.n_tiles,
+                                                fill=self.fp.rho_min),
+            freq=jnp.ones((c.n_tiles,)),
+            step=jnp.zeros((), jnp.int32),
+            events=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, st: SchedulerState,
+               rho: jnp.ndarray) -> tuple[SchedulerState, SchedulerOutput]:
+        """Advance one step.  rho: [n_tiles] density of the work just scheduled."""
+        c, fp = self.cfg, self.fp
+        rho = jnp.broadcast_to(jnp.asarray(rho), (c.n_tiles,))
+        ft = pdu_gate.observe(st.filtration, rho)
+
+        hint = pdu_gate.hint(ft, self.gamma, c.lookahead_ms, c.step_ms)
+        # instantaneous load floors the hint: prediction buys lead time,
+        # never permission to exceed budget on a mispredicted onset
+        p_now = power_from_rho(rho)
+        hint = jnp.maximum(hint,
+                           p_now if self.gamma is None else self.gamma @ p_now)
+        dt_now = thermal.delta_t(st.thermal)
+        t_allow = fp.t_crit_c - c.t_safe_margin_c - fp.t_ambient_c
+        gain_sum = self.poles.gain.sum()
+
+        if c.mode == "v24":
+            budget = (t_allow - (1.0 - self.eta) * dt_now) / (self.eta * gain_sum)
+            f_uni = jnp.clip((budget / jnp.maximum(hint, 1e-3))
+                             ** (1.0 / c.power_exponent), 0.05, 1.0)
+            if self.gamma is None:
+                freq = f_uni
+            else:
+                # coupled control, two bounding laws (both must hold):
+                #  · uniform law  — all tiles scale together (f_uni caps the
+                #    "everyone jumps at once" overshoot);
+                #  · coupled law  — only the self term is controllable, the
+                #    neighbour heat (at last step's f) is subtracted.
+                # Upward moves are rate-limited (voltage ramps are physically
+                # slew-limited), which damps the simultaneous-move
+                # oscillation of the per-tile fixed point.
+                gd = jnp.diagonal(self.gamma)
+                p_prev = p_now * st.freq ** c.power_exponent
+                neigh = self.gamma @ p_prev - gd * p_prev
+                f_cpl = jnp.clip(
+                    (jnp.maximum(budget - neigh, 1e-6)
+                     / jnp.maximum(gd * p_now, 1e-3))
+                    ** (1.0 / c.power_exponent), 0.05, 1.0)
+                freq = jnp.minimum(f_uni, f_cpl)
+                freq = jnp.minimum(freq, st.freq + 0.05)   # slew limit up
+        elif c.mode == "reactive":
+            hot = (fp.t_ambient_c + dt_now) >= fp.t_crit_c
+            freq = jnp.where(hot, fp.throttle_floor,
+                             jnp.minimum(st.freq + 0.1, 1.0))
+        else:  # off — uncontrolled
+            freq = jnp.ones((c.n_tiles,))
+
+        p = power_from_rho(rho) * freq ** c.power_exponent
+        p_eff = p if self.gamma is None else self.gamma @ p
+        thermal_next = thermal.step(self.poles, st.thermal, p_eff)
+        temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+        events = st.events + jnp.any(temp > fp.t_crit_c).astype(jnp.int32)
+
+        at_risk = freq < c.straggler_threshold
+        balance = freq / jnp.maximum(freq.sum(), 1e-6)
+
+        out = SchedulerOutput(freq=freq, temp_c=temp, hint_w=hint,
+                              eta=jnp.asarray(self.eta), at_risk=at_risk,
+                              balance=balance)
+        return SchedulerState(thermal=thermal_next, filtration=ft, freq=freq,
+                              step=st.step + 1, events=events), out

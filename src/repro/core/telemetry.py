@@ -1,0 +1,65 @@
+"""§5.3 — UCIe sideband telemetry infrastructure + host-side telemetry log.
+
+Paper budget: 64-byte per-tile packet at 1 Mbps ⇒ 512 µs transfer, comfortably
+inside the 20 ms look-ahead minimum; hint dispatch reuses the same management
+channel in reverse.  `budget()` reproduces that arithmetic (and the §7.1
+overhead rows); `TelemetryLog` is the framework's runtime sink — a bounded
+host-side ring of per-step thermal scheduler records used by `launch/train.py`
+and the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import deque
+from typing import Any
+
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+
+def budget(n_tiles: int = 8, fp: Fingerprint = FINGERPRINT) -> dict:
+    """UCIe sideband timing/overhead budget (paper §5.3, §7.1)."""
+    bits = fp.telemetry_packet_bytes * 8
+    per_packet_us = bits / fp.telemetry_link_mbps          # 512 µs @ 64 B, 1 Mbps
+    round_trip_us = 2 * per_packet_us                      # telemetry + hint
+    lookahead_us = fp.lookahead_min_ms * 1e3
+    return {
+        "packet_bytes": fp.telemetry_packet_bytes,
+        "link_mbps": fp.telemetry_link_mbps,
+        "per_packet_us": per_packet_us,
+        "round_trip_us": round_trip_us,
+        "n_tiles": n_tiles,
+        "fits_lookahead": round_trip_us < lookahead_us,
+        "lookahead_margin_x": lookahead_us / round_trip_us,
+        "mgmt_channel_overhead_mbps": fp.telemetry_link_mbps,   # §7.1
+        "density_cpu_overhead_frac": (0.001, 0.003),            # 0.1–0.3 %/tile
+    }
+
+
+@dataclasses.dataclass
+class TelemetryLog:
+    """Bounded host-side telemetry ring (1 record / step)."""
+
+    capacity: int = 100_000
+    _rows: deque = dataclasses.field(default_factory=deque, repr=False)
+
+    def record(self, step: int, **fields: Any) -> None:
+        self._rows.append({"step": step, **{
+            k: (float(v) if hasattr(v, "item") or isinstance(v, (int, float))
+                else v) for k, v in fields.items()}})
+        while len(self._rows) > self.capacity:
+            self._rows.popleft()
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def rows(self) -> list[dict]:
+        return list(self._rows)
+
+    def last(self) -> dict:
+        return self._rows[-1]
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            for r in self._rows:
+                f.write(json.dumps(r) + "\n")

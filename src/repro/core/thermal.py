@@ -1,0 +1,130 @@
+"""Unified thermal convolution model (paper §4.2) and V7.0 two-pole kernel (§5.2).
+
+Continuous model (V24, single pole):
+
+    ΔT(t) = ∫₀ᵗ (Rth·Γ(d)/τ) · exp(−(t−u)/τ) · ΔP(u) du
+
+Two-pole kernel (V7.0):
+
+    K(t) = (A₁/τ₁)·e^(−t/τ₁) + (A₂/τ₂)·e^(−t/τ₂),      A₁ + A₂ = Rth
+
+Both are linear time-invariant IIR systems, so the exact zero-order-hold
+discretisation at sample interval dt is a one-step recurrence per pole:
+
+    x[k+1] = a·x[k] + (1−a)·G·P[k],     a = exp(−dt/τ),  G = pole gain
+
+with ΔT = Σ_poles x.  This O(1)-state form is what the Pallas kernel
+(`repro.kernels.thermal_conv`) tiles over (tiles × time); this module is the
+pure-JAX reference used by the scheduler, the Monte-Carlo harness and the
+kernel oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+
+class PoleParams(NamedTuple):
+    """Discretised pole bank: ΔT(t) = Σ_i state_i, one IIR state per pole."""
+
+    decay: jnp.ndarray   # [n_poles]  a_i = exp(-dt/τ_i)
+    gain: jnp.ndarray    # [n_poles]  G_i (°C/W); Σ G_i = Rth
+
+
+def single_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0) -> PoleParams:
+    """V24 single-pole discretisation (τ = 80 ms, gain = Rth)."""
+    a = jnp.exp(-dt_ms / fp.tau_ms)
+    return PoleParams(decay=jnp.array([a]), gain=jnp.array([fp.rth_c_per_w]))
+
+
+def two_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0,
+             emib: bool = False) -> PoleParams:
+    """V7.0 two-pole discretisation (τ₁ ≈ 5 ms Foveros, τ₂ ≈ 80 ms package).
+
+    With ``emib=True`` the slow pole moves to the EMIB lateral value
+    (τ₂ ≈ 200–500 ms, organic substrate dominated — paper §5.2).
+    """
+    tau2 = fp.tau2_emib_ms if emib else fp.tau2_ms
+    a = jnp.exp(-dt_ms / jnp.array([fp.tau1_ms, tau2]))
+    return PoleParams(decay=a, gain=jnp.array([fp.a1, fp.a2]))
+
+
+def init_state(poles: PoleParams, n_tiles: int = 1) -> jnp.ndarray:
+    """Zero thermal state: [n_tiles, n_poles] pole temperatures (ΔT °C)."""
+    return jnp.zeros((n_tiles, poles.decay.shape[0]))
+
+
+def step(poles: PoleParams, state: jnp.ndarray, power_w: jnp.ndarray) -> jnp.ndarray:
+    """One dt tick of the pole bank.  power_w: [n_tiles] effective (Γ-coupled) power."""
+    return (poles.decay[None, :] * state
+            + (1.0 - poles.decay)[None, :] * poles.gain[None, :] * power_w[:, None])
+
+
+def delta_t(state: jnp.ndarray) -> jnp.ndarray:
+    """ΔT per tile = sum over poles.  [n_tiles]"""
+    return state.sum(axis=-1)
+
+
+def simulate(poles: PoleParams, power_trace: jnp.ndarray,
+             gamma: jnp.ndarray | None = None,
+             state0: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the thermal convolution over a power trace.
+
+    Args:
+      poles:        discretised pole bank.
+      power_trace:  [T, n_tiles] dissipated power per tile per tick [W].
+      gamma:        optional [n_tiles, n_tiles] coupling matrix Γ (paper §5.1);
+                    effective power = Γ @ P.  ``None`` ⇒ identity (V24 scalar case
+                    folds Γ(d) into the power trace).
+      state0:       optional initial pole state.
+
+    Returns:
+      (dT_trace [T, n_tiles], final_state).
+    """
+    power_trace = jnp.atleast_2d(power_trace.T).T  # ensure [T, n_tiles]
+    n_tiles = power_trace.shape[1]
+    if state0 is None:
+        state0 = init_state(poles, n_tiles)
+
+    def tick(state, p):
+        p_eff = p if gamma is None else gamma @ p
+        state = step(poles, state, p_eff)
+        return state, delta_t(state)
+
+    final, dts = jax.lax.scan(tick, state0, power_trace)
+    return dts, final
+
+
+def direct_convolution(poles: PoleParams, power_trace: jnp.ndarray,
+                       dt_ms: float = 1.0) -> jnp.ndarray:
+    """O(T²) literal evaluation of the convolution integral — oracle only.
+
+    ΔT[k] computed by summing K((k−u)·dt)·P[u]·dt over u ≤ k with the ZOH-exact
+    per-interval weights.  Used by tests to verify the scan recurrence.
+    """
+    power_trace = jnp.atleast_2d(power_trace.T).T
+    T = power_trace.shape[0]
+    k = jnp.arange(T)
+    # ZOH-exact: output after sample k sums gain·(1−a)·a^(k−u) over u ≤ k.
+    def per_pole(a, g):
+        lag = k[:, None] - k[None, :]                  # [T, T]
+        w = jnp.where(lag >= 0, g * (1 - a) * a ** jnp.maximum(lag, 0), 0.0)
+        return w @ power_trace                          # [T, n_tiles]
+    out = sum(per_pole(a, g) for a, g in zip(poles.decay, poles.gain))
+    return out
+
+
+def step_response(poles: PoleParams, n_steps: int, power_w: float = 1.0) -> jnp.ndarray:
+    """ΔT trace for a unit power step — τ validation: 63.2 % at t = τ (paper §4.1)."""
+    trace = jnp.full((n_steps, 1), power_w)
+    dts, _ = simulate(poles, trace)
+    return dts[:, 0]
+
+
+def steady_state_dt(poles: PoleParams, power_w: float) -> jnp.ndarray:
+    """Analytic steady state: ΔT_ss = Rth · P (all poles fully charged)."""
+    return poles.gain.sum() * power_w

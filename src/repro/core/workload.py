@@ -1,0 +1,75 @@
+"""Synthetic workload-density traces at the 1 kHz telemetry rate.
+
+The paper's Monte-Carlo section (§10, Fig. 6) evaluates four workload types —
+LLM training, LLM inference, vision, and batch transformer.  Each generator
+produces ρ(t) ∈ [ρ_min, ρ_max] per tile; inference is bursty (token-generation
+spikes, §3.1), training is periodic ramps (tau-law trajectories, §5.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import FINGERPRINT
+
+KINDS = ("inference", "training", "vision", "batch")
+
+
+def _ou(key, n_steps, n_tiles, mean, std, theta=0.01):
+    """Clipped Ornstein-Uhlenbeck base load."""
+    def tick(x, eps):
+        x = x + theta * (mean - x) + std * jnp.sqrt(2 * theta) * eps
+        return x, x
+    eps = jax.random.normal(key, (n_steps, n_tiles))
+    _, xs = jax.lax.scan(tick, jnp.full((n_tiles,), mean), eps)
+    return xs
+
+
+def _bursts(key, n_steps, n_tiles, rate_per_ms, dur_ms, amp):
+    """Box-filtered Bernoulli arrivals → burst envelope ∈ [0, amp]."""
+    k1, k2 = jax.random.split(key)
+    spikes = (jax.random.uniform(k1, (n_steps, n_tiles)) < rate_per_ms)
+    kernel = jnp.ones((dur_ms,)) / 1.0
+    env = jax.vmap(lambda s: jnp.convolve(s.astype(jnp.float32), kernel,
+                                          mode="full")[:n_steps],
+                   in_axes=1, out_axes=1)(spikes)
+    jitter = 0.75 + 0.5 * jax.random.uniform(k2, (n_steps, n_tiles))
+    return jnp.minimum(env, 1.0) * amp * jitter
+
+
+def make_trace(key, n_steps: int, kind: str = "inference",
+               n_tiles: int = 1) -> jnp.ndarray:
+    """ρ(t) trace, [n_steps, n_tiles], in the paper's density domain."""
+    fp = FINGERPRINT
+    lo, hi = fp.rho_min, fp.rho_max
+    k1, k2 = jax.random.split(jax.random.fold_in(key, hash(kind) % (2**31)))
+    if kind == "inference":
+        base = _ou(k1, n_steps, n_tiles, mean=1.55, std=0.18)
+        trace = base + _bursts(k2, n_steps, n_tiles,
+                               rate_per_ms=0.011, dur_ms=260, amp=1.3)
+    elif kind == "training":
+        # tau-law ramp cycles: step-synchronised square ramps (§5.4)
+        period, duty = 500, 0.7
+        t = jnp.arange(n_steps)
+        phase = (t % period) / period
+        wave = jnp.where(phase < duty, 2.65, 1.55)[:, None]
+        trace = wave + _ou(k1, n_steps, n_tiles, mean=0.0, std=0.08)
+    elif kind == "vision":
+        base = _ou(k1, n_steps, n_tiles, mean=2.0, std=0.15)
+        trace = base + _bursts(k2, n_steps, n_tiles,
+                               rate_per_ms=0.008, dur_ms=140, amp=1.0)
+    elif kind == "batch":
+        trace = _ou(k1, n_steps, n_tiles, mean=2.5, std=0.25, theta=0.004)
+    else:
+        raise ValueError(f"unknown workload kind {kind!r}; want one of {KINDS}")
+    return jnp.clip(trace, lo, hi)
+
+
+def stress_step(n_steps: int, n_tiles: int = 1,
+                t_on: int | None = None) -> jnp.ndarray:
+    """ΔT=40 °C open-loop stress profile (§3.2 characterisation extreme):
+    idle → max-density step, used for the 3.4 nm open-loop drift bound."""
+    t_on = n_steps // 4 if t_on is None else t_on
+    t = jnp.arange(n_steps)[:, None]
+    return jnp.where(t < t_on, FINGERPRINT.rho_min,
+                     FINGERPRINT.rho_max) * jnp.ones((1, n_tiles))

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (batch_spec, cache_specs, dp_axes,
+                                        param_specs, state_specs)
+
+__all__ = ["param_specs", "batch_spec", "cache_specs", "state_specs",
+           "dp_axes"]

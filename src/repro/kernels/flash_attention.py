@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention forward.
+
+Grid (B, H, nQ, nKV) with the KV axis innermost; the running (m, l, acc)
+online-softmax state lives in VMEM scratch carried across KV blocks and the
+normalised output is written once per Q block on the last KV step.  GQA/MQA
+is handled in the index map (kv_head = h // group) — no KV replication in
+HBM.  Causal and sliding-window masks are built from broadcasted iotas of
+the global positions.
+
+Block sizes default to 128×128 (MXU-aligned); head_dim up to 256 (gemma)
+stays a single lane-multiple tile.  The training backward runs through
+`repro.kernels.ref.make_flash`'s custom VJP (same algorithm, recompute-based)
+— this kernel is the TPU forward; tests validate it in interpret mode against
+`ref.attention_ref` over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq, bk, causal, window, q_offset, scale, nk):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)                # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # [bk, dv]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    i = pl.program_id(2)
+    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        keep &= kpos <= qpos
+    if window:
+        keep &= kpos > qpos - window
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-20)
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    scale=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: [B, Tq, H, d]; k, v: [B, Tk, KV, d(v)].  Returns [B, Tq, H, dv]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Tq, H, d = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = H // KV
+    scale = float(d ** -0.5) if scale is None else float(scale)
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    while Tq % bq:
+        bq //= 2
+    while Tk % bk:
+        bk //= 2
+    nq, nk = Tq // bq, Tk // bk
+    grid = (B, H, nq, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                          window=window, q_offset=q_offset, scale=scale,
+                          nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b, h, i, j, g=g: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, dv),
+                         lambda b, h, i, j, g=g: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dv),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tq, H, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,89 @@
+"""Jitted public wrappers around the Pallas kernels, with CPU dispatch.
+
+Each op has two execution paths:
+
+  * TPU (or ``REPRO_FORCE_PALLAS=1``): the Pallas kernel (`flash_attention`,
+    `ssm_scan`, `thermal_conv` modules — pl.pallas_call with explicit VMEM
+    BlockSpecs).
+  * otherwise: the pure-jnp reference (`ref.py`), whose blocked algorithms
+    keep lowered memory bounded — this is also what the multi-pod dry-run
+    lowers, so roofline numbers reflect the blocked algorithm, not an O(T²)
+    strawman.
+
+Tests run the Pallas kernels in interpret mode against `ref.py` directly;
+the models only ever call through this module.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    if os.environ.get("REPRO_FORCE_PALLAS") == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------- attention --
+@functools.lru_cache(maxsize=256)
+def _flash_cached(causal, window, q_offset, scale):
+    return ref.make_flash(causal=causal, window=window, q_offset=q_offset,
+                          scale=scale)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              kv_positions=None, scale=None):
+    """Multi-head attention (GQA/MQA aware), flash-blocked on both paths.
+
+    q: [B, Tq, H, d]; k, v: [B, Tk, KV, d].  Full-sequence calls route to the
+    custom-VJP flash implementation (O(block) memory in fwd AND bwd); decode
+    (Tq=1) and ring-cache calls use the exact naive reference (O(Tk), no
+    softmax-block residuals to worry about).
+    """
+    if q.shape[1] == 1:
+        # decode: single query — naive path is exact and O(Tk)
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_positions=kv_positions,
+                                 scale=scale)
+    if use_pallas():
+        from repro.kernels import flash_attention
+        return flash_attention.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            scale=scale)
+    if kv_positions is None and isinstance(q_offset, int):
+        return _flash_cached(causal, window, q_offset,
+                             scale if scale is None else float(scale))(q, k, v)
+    return ref.attention_blockwise(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset,
+                                   kv_positions=kv_positions, scale=scale)
+
+
+# ------------------------------------------------------------- chunked SSD --
+def ssd(d, b, x, c, *, u=None, h0=None, chunk=64, include_current=True):
+    """Chunked linear recurrence (Mamba2 / RWKV6 core).  See ref.chunked_ssd."""
+    if use_pallas():
+        from repro.kernels import ssm_scan
+        return ssm_scan.ssd(d, b, x, c, u=u, h0=h0, chunk=chunk,
+                            include_current=include_current)
+    return ref.chunked_ssd(d, b, x, c, u=u, h0=h0, chunk=chunk,
+                           include_current=include_current)
+
+
+ssd_decode_step = ref.ssd_decode_step   # O(1) update — no kernel needed
+
+
+# ------------------------------------------------------------ thermal conv --
+def thermal_conv(power, gamma, decay, gain, state0=None):
+    """Γ-coupled two-pole thermal convolution over [T, n_tiles] power traces."""
+    if use_pallas():
+        from repro.kernels import thermal_conv as tc
+        return tc.thermal_conv(power, gamma, decay, gain, state0=state0)
+    return ref.thermal_conv_ref(power, gamma, decay, gain, state0=state0)

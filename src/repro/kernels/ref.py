@@ -1,0 +1,386 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+Three kernel families:
+
+  * attention      — `attention_ref` (naive O(T²) oracle) and
+                     `attention_blockwise` (online-softmax over Q/KV blocks —
+                     same algorithm the Pallas flash kernel implements; this is
+                     the CPU path used by the models so lowered memory stays
+                     block-bounded, not O(T²)).
+  * chunked SSD    — `chunked_ssd` / `ssd_decode_step`: the chunked linear
+                     recurrence  h_t = d_t ⊙ h_{t−1} + b_t ⊗ x_t,
+                     y_t = c_t · h_t  that powers both Mamba2 (scalar-per-head
+                     decay) and RWKV6 (per-channel decay + current-token bonus
+                     u).  `linear_scan_ref` is the O(T) sequential oracle.
+  * thermal conv   — `thermal_conv_ref`: the V7.0 two-pole Γ-coupled
+                     convolution (time-major scan over tiles).
+
+Numerical note (chunked SSD): intra-chunk weights are factored as
+exp(L_t − L_s) = exp(L_t)·exp(−L_s); exp(−L_s) grows with cumulative decay, so
+the factorisation is stable for per-step decay ≳ 0.55 at chunk 64 (f32).  Both
+Mamba2 (softplus dt, A_log init) and RWKV6 (w = exp(−exp(ŵ))) live well inside
+that domain; tests sweep it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ============================================================ attention =====
+def _mask(qpos, kpos, causal: bool, window: int):
+    """[Tq, Tk] boolean keep-mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    m &= kpos[None, :] >= 0          # -1 ⇒ unfilled cache slot
+    return m
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                  kv_positions=None, scale=None):
+    """Naive attention oracle.
+
+    q: [B, Tq, H, d] — k, v: [B, Tk, KV, d] with H % KV == 0 (GQA/MQA).
+    q_offset: absolute position of q[0] (decode: cache length).
+    kv_positions: [Tk] absolute key positions (ring caches); default arange.
+    """
+    B, Tq, H, d = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                    # may differ from d (MLA)
+    g = H // KV
+    scale = (d ** -0.5) if scale is None else scale
+    qpos = q_offset + jnp.arange(Tq)
+    kpos = jnp.arange(Tk) if kv_positions is None else kv_positions
+    qf = q.reshape(B, Tq, KV, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None], s,
+                  NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, dv).astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=0, q_offset=0,
+                        kv_positions=None, scale=None,
+                        q_block=512, kv_block=1024):
+    """Online-softmax blocked attention (flash algorithm, pure jnp).
+
+    Memory per step is O(q_block·kv_block); the lowered HLO is a two-level
+    scan, so compiled peak memory is block-bounded — this is the CPU/dry-run
+    execution path for every full/SWA attention layer.
+    """
+    B, Tq, H, d = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                    # may differ from d (MLA)
+    g = H // KV
+    scale = (d ** -0.5) if scale is None else scale
+    kpos_full = (jnp.arange(Tk) if kv_positions is None else kv_positions)
+
+    qb = min(q_block, Tq)
+    kb = min(kv_block, Tk)
+    # shapes we control are divisible; guard anyway
+    while Tq % qb:
+        qb //= 2
+    while Tk % kb:
+        kb //= 2
+    nq, nk = Tq // qb, Tk // kb
+
+    qs = q.reshape(B, nq, qb, H, d).astype(jnp.float32)
+    ks = k.reshape(B, nk, kb, KV, d).astype(jnp.float32)
+    vs = v.reshape(B, nk, kb, KV, dv).astype(jnp.float32)
+    kposs = kpos_full.reshape(nk, kb)
+
+    def q_step(_, qi_blk):
+        qi, blk = qi_blk                     # blk: [B, qb, H, d]
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+        qf = blk.reshape(B, qb, KV, g, d)
+
+        def kv_step(carry, kv_blk):
+            m_run, l_run, acc = carry
+            kblk, vblk, kpos = kv_blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kblk) * scale
+            keep = _mask(qpos, kpos, causal, window)
+            s = jnp.where(keep[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd",
+                                                     p, vblk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, g, qb), NEG_INF)
+        l0 = jnp.zeros((B, KV, g, qb))
+        a0 = jnp.zeros((B, KV, g, qb, dv))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks.swapaxes(0, 1), vs.swapaxes(0, 1),
+                                       kposs))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, o.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, dv)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), qs.swapaxes(0, 1)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Tq, H, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------- flash w/ vjp ----
+def _flash_fwd_blocks(q, k, v, causal, window, q_offset, scale, qb, kb):
+    """Blocked forward returning (o, m, l) — softmax stats kept for the VJP."""
+    B, Tq, H, d = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = H // KV
+    nq, nk = Tq // qb, Tk // kb
+    qs = q.reshape(B, nq, qb, H, d).astype(jnp.float32).swapaxes(0, 1)
+    ks = k.reshape(B, nk, kb, KV, d).astype(jnp.float32).swapaxes(0, 1)
+    vs = v.reshape(B, nk, kb, KV, dv).astype(jnp.float32).swapaxes(0, 1)
+
+    def q_step(_, qi_blk):
+        qi, blk = qi_blk
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+        qf = blk.reshape(B, qb, KV, g, d)
+
+        def kv_step(carry, kv_blk):
+            m_run, l_run, acc = carry
+            ki, kblk, vblk = kv_blk
+            kpos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kblk) * scale
+            s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd",
+                                                     p, vblk)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, KV, g, qb), NEG_INF),
+                jnp.zeros((B, KV, g, qb)), jnp.zeros((B, KV, g, qb, dv)))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (jnp.arange(nk), ks, vs))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, (o.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, dv), m, l)
+
+    _, (outs, ms, ls) = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(B, Tq, H, dv)
+    return o, ms, ls          # ms/ls: [nq, B, KV, g, qb]
+
+
+def make_flash(causal=True, window=0, q_offset=0, scale=None,
+               q_block=512, kv_block=1024):
+    """custom_vjp flash attention (pure jnp) — O(T) residuals (q,k,v,o,m,l);
+    the backward recomputes each score block (standard flash backward), so
+    train-time peak memory is block-bounded.  kv_positions unsupported here
+    (decode/ring paths use the naive O(Tk) reference instead)."""
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        o, _, _ = _flash_fwd_blocks(q, k, v, causal, window, q_offset,
+                                    scale if scale is not None
+                                    else q.shape[-1] ** -0.5,
+                                    min(q_block, q.shape[1]),
+                                    min(kv_block, k.shape[1]))
+        return o.astype(q.dtype)
+
+    def fwd(q, k, v):
+        sc = scale if scale is not None else q.shape[-1] ** -0.5
+        qb = min(q_block, q.shape[1])
+        kb = min(kv_block, k.shape[1])
+        o, m, l = _flash_fwd_blocks(q, k, v, causal, window, q_offset, sc,
+                                    qb, kb)
+        return o.astype(q.dtype), (q, k, v, o, m, l)
+
+    def bwd(res, do):
+        q, k, v, o, ms, ls = res
+        B, Tq, H, d = q.shape
+        Tk, KV = k.shape[1], k.shape[2]
+        dv = v.shape[-1]
+        g = H // KV
+        sc = scale if scale is not None else d ** -0.5
+        qb = min(q_block, Tq)
+        kb = min(kv_block, Tk)
+        nq, nk = Tq // qb, Tk // kb
+        qs = q.reshape(B, nq, qb, KV, g, d).astype(jnp.float32).swapaxes(0, 1)
+        dos = do.reshape(B, nq, qb, KV, g, dv).astype(
+            jnp.float32).swapaxes(0, 1)
+        osr = o.reshape(B, nq, qb, KV, g, dv).astype(
+            jnp.float32).swapaxes(0, 1)
+        ks = k.reshape(B, Tk, KV, d).astype(jnp.float32)
+        vs = v.reshape(B, Tk, KV, dv).astype(jnp.float32)
+
+        def q_step(carry, inp):
+            dk_acc, dv_acc = carry
+            qi, qf, dof, of, m, l = inp
+            qpos = q_offset + qi * qb + jnp.arange(qb)
+            # D_i = do_i · o_i   [B, KV, g, qb]
+            Drow = jnp.einsum("bqkgd,bqkgd->bkgq", dof, of)
+
+            def kv_step(carry2, ki):
+                dq_blk, dka, dva = carry2
+                kblk = jax.lax.dynamic_slice_in_dim(ks, ki * kb, kb, 1)
+                vblk = jax.lax.dynamic_slice_in_dim(vs, ki * kb, kb, 1)
+                kpos = ki * kb + jnp.arange(kb)
+                # qf: [B, qb, KV, g, d]
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kblk) * sc
+                keep = _mask(qpos, kpos, causal, window)
+                s = jnp.where(keep[None, None, None], s, NEG_INF)
+                p = jnp.exp(s - m[..., None]) / jnp.maximum(
+                    l, 1e-20)[..., None]
+                dp = jnp.einsum("bqkgd,bskd->bkgqs", dof, vblk)
+                ds = p * (dp - Drow[..., None]) * sc
+                dq_blk = dq_blk + jnp.einsum("bkgqs,bskd->bqkgd", ds, kblk)
+                dkb = jnp.einsum("bkgqs,bqkgd->bskd", ds, qf)
+                dvb = jnp.einsum("bkgqs,bqkgd->bskd", p, dof)
+                upd = lambda acc, blk: jax.lax.dynamic_update_slice_in_dim(
+                    acc, jax.lax.dynamic_slice_in_dim(acc, ki * kb, kb, 1)
+                    + blk, ki * kb, 1)
+                return (dq_blk, upd(dka, dkb), upd(dva, dvb)), None
+
+            dq0 = jnp.zeros((B, qb, KV, g, d))
+            (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+                kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+            return (dk_acc, dv_acc), dq_blk
+
+        dk0 = jnp.zeros((B, Tk, KV, d))
+        dv0 = jnp.zeros((B, Tk, KV, dv))
+        (dk, dvv), dqs = jax.lax.scan(
+            q_step, (dk0, dv0), (jnp.arange(nq), qs, dos, osr, ms, ls))
+        dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, H, d)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dvv.astype(v.dtype))
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+# ========================================================== chunked SSD =====
+def linear_scan_ref(d, b, h0=None):
+    """Sequential oracle: h_t = d_t ⊙ h_{t−1} + b_t over axis 1 (time).
+
+    d, b: [B, T, ...] broadcast-compatible; returns (h_all [B, T, ...], h_T).
+    """
+    d_t = jnp.moveaxis(jnp.broadcast_to(d, jnp.broadcast_shapes(
+        d.shape, b.shape)), 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h0 = jnp.zeros_like(b_t[0]) if h0 is None else h0
+
+    def step(h, db):
+        dd, bb = db
+        h = dd * h + bb
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (d_t, b_t))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def chunked_ssd(d, b, x, c, *, u=None, h0=None, chunk=64,
+                include_current=True):
+    """Chunked linear-recurrence "SSD" (Mamba2 / RWKV6 shared core).
+
+      h_t = d_t ⊙ h_{t−1} + b_t ⊗ x_t          h: [B, H, N, P]
+      y_t = c_t · h_t  (contract N)            y: [B, T, H, P]
+
+    d, b, c: [B, T, H, N]  (d = per-step decay ∈ (0, 1]);  x: [B, T, H, P].
+    include_current: whether s = t contributes through the state (Mamba2 yes;
+    RWKV6 no — its current token enters via the bonus term u [H, N]).
+    Returns (y, h_final).
+    """
+    B, T, H, N = d.shape
+    P = x.shape[-1]
+    nc = T // chunk
+    assert nc * chunk == T, f"T={T} not divisible by chunk={chunk}"
+
+    f32 = jnp.float32
+    dr = d.reshape(B, nc, chunk, H, N).astype(f32)
+    br = b.reshape(B, nc, chunk, H, N).astype(f32)
+    xr = x.reshape(B, nc, chunk, H, P).astype(f32)
+    cr = c.reshape(B, nc, chunk, H, N).astype(f32)
+
+    logd = jnp.log(jnp.maximum(dr, 1e-20))
+    L = jnp.cumsum(logd, axis=2)                     # inclusive cumulative
+    Lc = L[:, :, -1]                                 # [B, nc, H, N] chunk total
+
+    c_hat = cr * jnp.exp(L)                          # C_t ⊙ P_t
+    b_hat = br * jnp.exp(-L)                         # B_s ⊘ P_s
+    b_tld = br * jnp.exp(Lc[:, :, None] - L)         # B_s ⊙ (P_C/P_s)
+
+    # intra-chunk scores over N: exp(L_t − L_s) factorised
+    scores = jnp.einsum("bgthn,bgshn->bghts", c_hat, b_hat)
+    t_idx, s_idx = jnp.arange(chunk)[:, None], jnp.arange(chunk)[None, :]
+    keep = (s_idx <= t_idx) if include_current else (s_idx < t_idx)
+    scores = jnp.where(keep[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bghts,bgshp->bgthp", scores, xr)
+
+    if u is not None:                                # RWKV6 current-token bonus
+        su = jnp.einsum("bgthn,hn,bgthn->bgth", cr, u.astype(f32), br)
+        y_intra = y_intra + su[..., None] * xr
+
+    # inter-chunk: carry state across chunks (sequential scan over nc)
+    h0 = jnp.zeros((B, H, N, P), f32) if h0 is None else h0.astype(f32)
+
+    def chunk_step(h, blk):
+        c_hat_g, b_tld_g, x_g, lc_g = blk
+        y_inter = jnp.einsum("bthn,bhnp->bthp", c_hat_g, h)
+        h = (jnp.exp(lc_g)[..., None] * h
+             + jnp.einsum("bshn,bshp->bhnp", b_tld_g, x_g))
+        return h, y_inter
+
+    hT, y_inter = jax.lax.scan(
+        chunk_step, h0,
+        (c_hat.swapaxes(0, 1), b_tld.swapaxes(0, 1), xr.swapaxes(0, 1),
+         Lc.swapaxes(0, 1)))
+    y = y_intra + y_inter.swapaxes(0, 1)
+    return y.reshape(B, T, H, P).astype(x.dtype), hT
+
+
+def ssd_decode_step(d, b, x, c, *, u=None, h=None, include_current=True):
+    """Single-token recurrence update (decode path).
+
+    d, b, c: [B, H, N]; x: [B, H, P]; h: [B, H, N, P].
+    Returns (y [B, H, P], h_next).
+    """
+    f32 = jnp.float32
+    out_dtype = x.dtype
+    d, b, c, x = (t.astype(f32) for t in (d, b, c, x))
+    if h is None:
+        h = jnp.zeros((*d.shape, x.shape[-1]), f32)
+    h_next = d[..., None] * h + b[..., None] * x[..., None, :]
+    # y reads the post-update state for Mamba2 (include_current=True); for
+    # RWKV6 it reads the decayed previous state d_t·h_{t−1} plus the u bonus —
+    # matching chunked_ssd's include_current=False weighting exactly.
+    if include_current:
+        y = jnp.einsum("bhn,bhnp->bhp", c, h_next)
+    else:
+        y = jnp.einsum("bhn,bhnp->bhp", c, d[..., None] * h)
+        if u is not None:
+            y = y + jnp.einsum("bhn,hn,bhn->bh", c, u.astype(f32),
+                               b)[..., None] * x
+    return y.astype(out_dtype), h_next
+
+
+# ======================================================= thermal conv =====
+def thermal_conv_ref(power, gamma, decay, gain, state0=None):
+    """V7.0 two-pole Γ-coupled thermal convolution (paper §5.1–5.2).
+
+    power: [T, n_tiles]; gamma: [n_tiles, n_tiles]; decay/gain: [n_poles].
+    Returns (ΔT [T, n_tiles], final_state [n_tiles, n_poles]).
+    """
+    n_tiles = power.shape[1]
+    if state0 is None:
+        state0 = jnp.zeros((n_tiles, decay.shape[0]), jnp.float32)
+
+    def tick(st, p):
+        p_eff = gamma @ p
+        st = decay[None, :] * st + (1 - decay)[None, :] * gain[None, :] \
+            * p_eff[:, None]
+        return st, st.sum(-1)
+
+    stT, dts = jax.lax.scan(tick, state0, power.astype(jnp.float32))
+    return dts, stT

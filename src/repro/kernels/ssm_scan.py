@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: chunked linear-recurrence "SSD" (Mamba2 / RWKV6 core).
+
+    h_t = d_t ⊙ h_{t−1} + b_t ⊗ x_t,      y_t = c_t · h_t
+
+TPU mapping (DESIGN.md §3): grid (B, H, nChunks) with the chunk axis
+innermost-sequential; the [N, P] recurrent state lives in VMEM scratch and
+is carried across chunk steps.  Within a chunk everything is dense MXU work:
+the factored intra-chunk weights (exp(L_t − L_s)) give a [chunk, chunk]
+score matmul + a [chunk, N] × [N, P] inter-chunk read + a rank-chunk state
+update — identical math to `ref.chunked_ssd` (same stability domain:
+per-step decay ≳ 0.55 at chunk 64, which both Mamba2 and RWKV6 inits
+guarantee).
+
+Tests sweep shapes/dtypes/decay regimes against the ref oracle in interpret
+mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(d_ref, b_ref, x_ref, c_ref, u_ref, h0_ref,
+            y_ref, hT_ref, h_scr, *, chunk, include_current, has_u, nc):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0]
+
+    d = d_ref[0, :, 0, :].astype(jnp.float32)        # [C, N]
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # [C, N]
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [C, P]
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # [C, N]
+
+    logd = jnp.log(jnp.maximum(d, 1e-20))
+    L = jnp.cumsum(logd, axis=0)                     # [C, N] inclusive
+    Lc = L[-1:, :]                                   # [1, N]
+
+    c_hat = c * jnp.exp(L)
+    b_hat = b * jnp.exp(-L)
+    b_tld = b * jnp.exp(Lc - L)
+
+    scores = jax.lax.dot_general(c_hat, b_hat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    keep = (si <= ti) if include_current else (si < ti)
+    scores = jnp.where(keep, scores, 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    if has_u:
+        u = u_ref[0, 0].astype(jnp.float32)          # [N] (per head)
+        su = (c * u[None, :] * b).sum(-1, keepdims=True)
+        y = y + su * x
+
+    h = h_scr[...]                                   # [N, P]
+    y = y + jax.lax.dot_general(c_hat, h, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h = jnp.exp(Lc)[0][:, None] * h + jax.lax.dot_general(
+        b_tld, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_scr[...] = h
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(t == nc - 1)
+    def _finish():
+        hT_ref[0, 0] = h
+
+
+def ssd(d, b, x, c, *, u=None, h0=None, chunk: int = 64,
+        include_current: bool = True, interpret: bool | None = None):
+    """See `ref.chunked_ssd`.  d, b, c: [B, T, H, N]; x: [B, T, H, P]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, H, N = d.shape
+    P = x.shape[-1]
+    ck = min(chunk, T)
+    while T % ck:
+        ck //= 2
+    nc = T // ck
+    grid = (B, H, nc)
+
+    has_u = u is not None
+    u_in = (u if has_u else jnp.zeros((H, N), jnp.float32))[None]  # [1, H, N]
+    h0_in = (h0 if h0 is not None
+             else jnp.zeros((B, H, N, P), jnp.float32))
+
+    y, hT = pl.pallas_call(
+        functools.partial(_kernel, chunk=ck,
+                          include_current=include_current, has_u=has_u,
+                          nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ck, 1, N), lambda bi, h, t: (bi, t, h, 0)),
+            pl.BlockSpec((1, ck, 1, N), lambda bi, h, t: (bi, t, h, 0)),
+            pl.BlockSpec((1, ck, 1, P), lambda bi, h, t: (bi, t, h, 0)),
+            pl.BlockSpec((1, ck, 1, N), lambda bi, h, t: (bi, t, h, 0)),
+            pl.BlockSpec((1, 1, N), lambda bi, h, t: (0, h, 0)),     # u
+            pl.BlockSpec((1, 1, N, P), lambda bi, h, t: (bi, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, 1, P), lambda bi, h, t: (bi, t, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, h, t: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(d, b, x, c, u_in, h0_in)
+    return y, hT

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: Γ-coupled two-pole thermal convolution (paper §5.1–5.2).
+
+At datacenter scale the V7.0 controller integrates the thermal plant for
+N = O(512) tiles at the 1 kHz telemetry rate with an N×N coupling matrix —
+a [T × N] stream of Γ·P matvecs plus a 2-pole IIR update.  TPU mapping
+(DESIGN.md §3):
+
+  * tiles padded to the 128-lane width; Γ (N×N ≤ 512² f32 = 1 MB) stays
+    VMEM-resident across the whole run;
+  * time is chunked over the grid; the Pallas TPU grid executes
+    sequentially, so the pole states live in a VMEM scratch carried across
+    grid steps (classic accumulator pattern);
+  * the Γ·P product is an [N, N] × [N, chunk] matmul on the MXU (whole
+    chunk's power rows at once), followed by the elementwise IIR update.
+
+Validated against `repro.kernels.ref.thermal_conv_ref` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _kernel(power_ref, gamma_ref, decay_ref, gain_ref, state0_ref,
+            dts_ref, state_out_ref, state_scr, *, chunk, n_poles):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        state_scr[...] = state0_ref[...]
+
+    # Γ·P for the whole chunk at once: [N, N] @ [N, chunk] on the MXU
+    p_eff = jnp.dot(gamma_ref[...], power_ref[...].T,
+                    preferred_element_type=jnp.float32)      # [N, chunk]
+
+    state = state_scr[...]                                   # [N, n_poles]
+    decay = decay_ref[0]                                     # [n_poles]
+    gain = gain_ref[0]
+
+    def tick(i, carry):
+        state, out = carry
+        state = decay[None, :] * state \
+            + (1.0 - decay)[None, :] * gain[None, :] \
+            * jax.lax.dynamic_slice_in_dim(p_eff, i, 1, 1)    # [N, 1] bcast
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, state.sum(-1)[None, :], i, 0)
+        return state, out
+
+    out0 = jnp.zeros((chunk, power_ref.shape[1]), jnp.float32)
+    state, out = jax.lax.fori_loop(0, chunk, tick, (state, out0))
+    dts_ref[...] = out
+    state_scr[...] = state
+    state_out_ref[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def thermal_conv(power, gamma, decay, gain, state0=None, *, chunk: int = 128,
+                 interpret: bool | None = None):
+    """ΔT trace for a [T, n_tiles] power stream (see ref.thermal_conv_ref).
+
+    Returns (dts [T, n_tiles], final_state [n_tiles, n_poles]).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T, n = power.shape
+    n_poles = decay.shape[0]
+    n_pad = max(LANE, ((n + LANE - 1) // LANE) * LANE)
+    ck = min(chunk, T)
+    while T % ck:
+        ck //= 2
+    grid = (T // ck,)
+
+    power_p = _pad_to(power.astype(jnp.float32), n_pad, 1)
+    gamma_p = _pad_to(_pad_to(gamma.astype(jnp.float32), n_pad, 0), n_pad, 1)
+    state0_p = (jnp.zeros((n_pad, n_poles), jnp.float32) if state0 is None
+                else _pad_to(state0.astype(jnp.float32), n_pad, 0))
+
+    dts, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=ck, n_poles=n_poles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ck, n_pad), lambda t: (t, 0)),          # power
+            pl.BlockSpec((n_pad, n_pad), lambda t: (0, 0)),       # gamma
+            pl.BlockSpec((1, n_poles), lambda t: (0, 0)),         # decay
+            pl.BlockSpec((1, n_poles), lambda t: (0, 0)),         # gain
+            pl.BlockSpec((n_pad, n_poles), lambda t: (0, 0)),     # state0
+        ],
+        out_specs=[
+            pl.BlockSpec((ck, n_pad), lambda t: (t, 0)),          # dts
+            pl.BlockSpec((n_pad, n_poles), lambda t: (0, 0)),     # final state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, n_poles), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_pad, n_poles), jnp.float32)],
+        interpret=interpret,
+    )(power_p, gamma_p, decay.astype(jnp.float32)[None],
+      gain.astype(jnp.float32)[None], state0_p)
+    return dts[:, :n], state[:n]

@@ -1,0 +1,236 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a module entry point:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out results/dryrun.json]
+
+Proves the distribution config is coherent without hardware: every cell's
+step function must lower and compile against the 16×16 (single-pod) and
+2×16×16 (multi-pod) production meshes.  Records memory analysis, cost
+analysis, the trip-count-corrected collective census and the analytic
+roofline terms, incrementally, to a JSON results file (safe to re-run; done
+cells are skipped unless --force).
+"""
+# The first two lines — before ANY other import — per the task brief: jax
+# locks the device count on first backend init.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+
+from repro.configs import ALL_ARCHS, SHAPES, get_arch, get_shape, live_cells  # noqa: E402
+from repro.distributed import sharding as shd           # noqa: E402
+from repro.launch import hlo_census, roofline, steps    # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+
+def _mem_dict(ma) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def parse_variant(variant: str) -> dict:
+    """Variant string: '+'-joined knobs (§Perf hillclimb levers):
+       int8kv | mbN (N microbatches) | tpN (mesh data=256/N, model=N) |
+       eponly (no Megatron TP on attention/MLP — model axis = experts only)
+    """
+    opts = {"kv_int8": False, "n_microbatches": 1, "tp": None,
+            "tp_attention": True}
+    for part in filter(None, variant.split("+")):
+        if part == "int8kv":
+            opts["kv_int8"] = True
+        elif part.startswith("mb"):
+            opts["n_microbatches"] = int(part[2:])
+        elif part.startswith("tp"):
+            opts["tp"] = int(part[2:])
+        elif part == "eponly":
+            opts["tp_attention"] = False
+        else:
+            raise ValueError(f"unknown variant knob {part!r}")
+    return opts
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = ""):
+    """Build and lower one cell.  Returns (lowered, mesh, meta)."""
+    import dataclasses
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    opts = parse_variant(variant)
+    if opts["kv_int8"]:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if opts["tp"] is not None:
+        tp = opts["tp"]
+        if multi_pod:
+            mesh = jax.make_mesh((2, 256 // tp, tp),
+                                 ("pod", "data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        else:
+            mesh = jax.make_mesh((256 // tp, tp), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_tiles = mesh.devices.size
+    ispecs = steps.input_specs(cfg, shape, n_tiles=n_tiles)
+    bspecs = steps.batch_shardings(cfg, shape, mesh)
+    sh = lambda spec_tree: jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+    with mesh, shd.axis_env(mesh, tp_activations=opts["tp_attention"]):
+        if shape.kind == "train":
+            state_struct = jax.eval_shape(
+                lambda k: steps.init_train_state(k, cfg, n_tiles),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            pspecs = shd.param_specs(cfg, state_struct.params, mesh,
+                                     tp_attention=opts["tp_attention"])
+            from jax.sharding import PartitionSpec as P
+            from repro.optim.adamw import AdamWState
+            sspecs = steps.TrainState(
+                params=pspecs,
+                opt=AdamWState(m=pspecs, v=pspecs, count=P()),
+                sched=jax.tree.map(lambda _: P(), state_struct.sched),
+                step=P())
+            step = steps.make_train_step(
+                cfg, n_tiles, n_microbatches=opts["n_microbatches"])
+            jitted = jax.jit(step, in_shardings=(sh(sspecs), sh(bspecs)),
+                             out_shardings=(sh(sspecs), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_struct, ispecs)
+        elif shape.kind == "prefill":
+            from repro.models import transformer as tf
+            pstruct = jax.eval_shape(
+                lambda k: tf.init_params(k, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            pspecs = shd.param_specs(cfg, pstruct, mesh,
+                                     tp_attention=opts["tp_attention"])
+            step = steps.make_prefill_step(cfg, shape.seq_len)
+            jitted = jax.jit(step, in_shardings=(sh(pspecs),
+                                                 sh(bspecs["tokens"])),
+                             out_shardings=None)
+            lowered = jitted.lower(pstruct, ispecs["tokens"])
+        else:  # decode
+            from repro.models import transformer as tf
+            pstruct = jax.eval_shape(
+                lambda k: tf.init_params(k, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            pspecs = shd.param_specs(cfg, pstruct, mesh,
+                                     tp_attention=opts["tp_attention"])
+            step = steps.make_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(sh(pspecs), sh(bspecs["cache"]),
+                              sh(bspecs["token"]), sh(bspecs["pos"])),
+                out_shardings=None, donate_argnums=(1,))
+            lowered = jitted.lower(pstruct, ispecs["cache"], ispecs["token"],
+                                   ispecs["pos"])
+    return lowered, mesh, {"cfg": cfg, "shape": shape}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             census_ops: bool = True, variant: str = "") -> dict:
+    t0 = time.time()
+    lowered, mesh, meta = lower_cell(arch, shape_name, multi_pod, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled.memory_analysis())
+    try:
+        ca = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception:
+        cost = {}
+    cen = hlo_census.census(compiled.as_text()) if census_ops else {}
+    if "ops" in cen and len(cen["ops"]) > 40:
+        cen = {**cen, "ops": cen["ops"][:40] + [
+            {"kind": "...truncated", "bytes": 0, "mult": 0, "comp": ""}]}
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rl = roofline.analytic(meta["cfg"], meta["shape"], mesh_shape,
+                           opts=parse_variant(variant))
+    # print per the task brief
+    print(f"== {arch} × {shape_name} × "
+          f"{'multi' if multi_pod else 'single'}-pod"
+          f"{' [' + variant + ']' if variant else ''} ==")
+    print("memory_analysis:", mem)
+    print("cost_analysis:", cost)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis_raw": cost,
+        "collectives": cen,
+        "roofline": rl.as_dict(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="'+'-joined knobs: int8kv|mbN|tpN|eponly (§Perf)")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: dict[str, dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = live_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+            if args.variant:
+                key += f"|{args.variant}"
+            if key in results and results[key].get("ok") and not args.force:
+                continue
+            try:
+                results[key] = run_cell(arch, shape, mp,
+                                        variant=args.variant)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                results[key] = {"arch": arch, "shape": shape,
+                                "mesh": "multi" if mp else "single",
+                                "variant": args.variant,
+                                "ok": False, "error": f"{type(e).__name__}: {e}"}
+                failures.append(key)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    done = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\ndry-run: {done} cells ok, {len(failures)} failed this run")
+    if failures:
+        print("failed:", failures)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the objects the launcher jits and the dry-run lowers: pure
+functions over (state, batch) with explicit sharding specs from
+`repro.distributed.sharding`.  The V24 thermal scheduler is a first-class
+member of the train state — its update lowers, shards and compiles with the
+model (DESIGN.md §2: the hint pipeline is in-graph; actuation is exported via
+telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.scheduler import (SchedulerConfig, SchedulerState,
+                                  ThermalScheduler)
+from repro.distributed import sharding
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+# ============================================================ train state ==
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    sched: SchedulerState
+    step: jnp.ndarray
+
+
+def make_scheduler(n_tiles: int) -> ThermalScheduler:
+    return ThermalScheduler(SchedulerConfig(n_tiles=n_tiles, mode="v24",
+                                            two_pole=True, use_coupling=True))
+
+
+def init_train_state(key, cfg: ArchConfig, n_tiles: int = 1) -> TrainState:
+    params = tf.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params),
+                      sched=make_scheduler(n_tiles).init(),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(cfg: ArchConfig, state: TrainState, mesh):
+    pspecs = sharding.param_specs(cfg, state.params, mesh)
+    return TrainState(
+        params=pspecs,
+        opt=AdamWState(m=pspecs, v=pspecs, count=P()),
+        sched=jax.tree.map(lambda _: P(), state.sched),
+        step=P(),
+    )
+
+
+# ============================================================= train step ==
+def make_train_step(cfg: ArchConfig, n_tiles: int,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    remat: bool = True, n_microbatches: int = 1):
+    """``n_microbatches > 1`` enables gradient accumulation: the global batch
+    is processed in B/n slices inside a lax.scan, so per-step activation
+    memory scales with the microbatch (the §Perf memory lever for the ≥34B
+    train cells); the optimizer update runs once on the f32-accumulated mean
+    gradient.  The accumulator inherits the parameter sharding (ZeRO-style —
+    fully sharded over model × data)."""
+    sched = make_scheduler(n_tiles)
+
+    def _grads(params, tokens, labels):
+        return jax.value_and_grad(tf.loss_fn, has_aux=True)(
+            params, cfg, tokens, labels, remat=remat)
+
+    def train_step(state: TrainState, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = _grads(state.params, batch["tokens"],
+                                            batch["labels"])
+        else:
+            B = batch["tokens"].shape[0]
+            mb = B // n_microbatches
+            toks = batch["tokens"].reshape(n_microbatches, mb,
+                                           *batch["tokens"].shape[1:])
+            labs = batch["labels"].reshape(n_microbatches, mb,
+                                           *batch["labels"].shape[1:])
+
+            def mb_step(acc, xs):
+                t, l = xs
+                from repro.distributed.sharding import constrain
+                t = constrain(t, ("dp",) + (None,) * (t.ndim - 1))
+                l = constrain(l, ("dp",) + (None,) * (l.ndim - 1))
+                (loss_i, m_i), g_i = _grads(state.params, t, l)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, g_i)
+                return acc, (loss_i, m_i["nll"], m_i["moe_aux"])
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            grads, (losses, nlls, auxs) = jax.lax.scan(
+                mb_step, acc0, (toks, labs))
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = losses.mean()
+            metrics = {"nll": nlls.mean(), "moe_aux": auxs.mean()}
+        params, opt, opt_m = adamw_update(grads, state.opt, state.params,
+                                          opt_cfg)
+        sst, sout = sched.update(state.sched, batch["rho"])
+        new = TrainState(params=params, opt=opt, sched=sst,
+                         step=state.step + 1)
+        return new, {
+            "loss": loss, "nll": metrics["nll"], "moe_aux": metrics["moe_aux"],
+            "grad_norm": opt_m["grad_norm"], "lr": opt_m["lr"],
+            "thermal_temp_max": sout.temp_c.max(),
+            "thermal_freq_min": sout.freq.min(),
+            "thermal_eta": sout.eta,
+            "thermal_at_risk": sout.at_risk.sum(),
+        }
+
+    return train_step
+
+
+# ======================================================= prefill / decode ==
+def make_prefill_step(cfg: ArchConfig, max_seq: int):
+    def prefill_step(params, tokens):
+        last, cache, pos = tf.prefill(params, cfg, tokens, max_seq)
+        return last, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, token, pos):
+        return tf.decode_step(params, cfg, cache, token, pos)
+    return decode_step
+
+
+# ============================================================ input specs ==
+def _tok_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, n_tiles: int = 256
+                ) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell's step.
+
+    For the decode cells, the KV/state cache is part of the input specs (it is
+    carried state of ``serve_step``).  Stub-frontend archs (vlm/audio) receive
+    precomputed embeddings (DESIGN.md §3).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    stub = cfg.frontend != "token"
+    emb = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "train":
+        tok = (jax.ShapeDtypeStruct((B, S, cfg.d_model), emb) if stub
+               else jax.ShapeDtypeStruct((B, S), _tok_dtype()))
+        return {"tokens": tok,
+                "labels": jax.ShapeDtypeStruct((B, S), _tok_dtype()),
+                "rho": jax.ShapeDtypeStruct((n_tiles,), jnp.float32)}
+    if shape.kind == "prefill":
+        tok = (jax.ShapeDtypeStruct((B, S, cfg.d_model), emb) if stub
+               else jax.ShapeDtypeStruct((B, S), _tok_dtype()))
+        return {"tokens": tok}
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    tok = (jax.ShapeDtypeStruct((B, cfg.d_model), emb) if stub
+           else jax.ShapeDtypeStruct((B,), _tok_dtype()))
+    return {"cache": cache, "token": tok,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """PartitionSpecs for the cell's inputs (mirrors input_specs keys)."""
+    stub = cfg.frontend != "token"
+    B = shape.global_batch
+    if shape.kind == "train":
+        return {"tokens": sharding.batch_spec(mesh, 3 if stub else 2, B),
+                "labels": sharding.batch_spec(mesh, 2, B),
+                "rho": P()}
+    if shape.kind == "prefill":
+        return {"tokens": sharding.batch_spec(mesh, 3 if stub else 2, B)}
+    cache = jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return {"cache": sharding.cache_specs(cfg, cache, mesh),
+            "token": sharding.batch_spec(mesh, 2 if stub else 1, B),
+            "pos": P()}

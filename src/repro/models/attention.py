@@ -1,0 +1,196 @@
+"""Attention variants: MHA/GQA/MQA, MLA (DeepSeek-V2 latent KV), SWA.
+
+Cache layouts (per layer-stack, leading axis L for lax.scan):
+  * GQA/full:  k, v: [L, B, S_max, KV, dh]                (S_max = shape seq)
+  * SWA ring:  k, v: [L, B, W, KV, dh] + pos: [L, B, W]   (absolute positions)
+  * MLA:       c:    [L, B, S_max, r],  k_rope: [L, B, S_max, rope_dim]
+
+Decode uses the MLA "absorbed" formulation (q projected into latent space;
+attention runs against the compact c-cache) — the whole point of MLA's small
+cache — while train/prefill use the expanded per-head path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain, constrain_heads
+from repro.kernels import ops
+from repro.models.layers import param_dtype, rms_norm, rope
+
+
+# ------------------------------------------------------------------ init --
+def attn_init(key, cfg: ArchConfig, stack: int = 0):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = param_dtype(cfg)
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 6)
+    if cfg.mla_kv_lora:
+        r, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+        return {
+            "wq": jax.random.normal(ks[0], (*pre, d, h * (dh + rd)), dt)
+            * (d ** -0.5),
+            "w_dkv": jax.random.normal(ks[1], (*pre, d, r + rd), dt)
+            * (d ** -0.5),
+            "kv_norm": jnp.zeros((*pre, r), dt),
+            "w_uk": jax.random.normal(ks[2], (*pre, r, h * dh), dt)
+            * (r ** -0.5),
+            "w_uv": jax.random.normal(ks[3], (*pre, r, h * dh), dt)
+            * (r ** -0.5),
+            "wo": jax.random.normal(ks[4], (*pre, h * dh, d), dt)
+            * ((h * dh) ** -0.5),
+        }
+    return {
+        "wq": jax.random.normal(ks[0], (*pre, d, h * dh), dt) * (d ** -0.5),
+        "wk": jax.random.normal(ks[1], (*pre, d, kv * dh), dt) * (d ** -0.5),
+        "wv": jax.random.normal(ks[2], (*pre, d, kv * dh), dt) * (d ** -0.5),
+        "wo": jax.random.normal(ks[3], (*pre, h * dh, d), dt)
+        * ((h * dh) ** -0.5),
+    }
+
+
+# ------------------------------------------------------------- GQA paths --
+def gqa_forward(p, x, cfg: ArchConfig, positions):
+    """Train/prefill full-sequence attention.  Returns (out, (k, v))."""
+    B, S, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = constrain_heads((x @ p["wq"]).reshape(B, S, h, dh))
+    k = constrain_heads((x @ p["wk"]).reshape(B, S, kv, dh))
+    v = constrain_heads((x @ p["wv"]).reshape(B, S, kv, dh))
+    q = rope(q, positions, theta=cfg.rope_theta)
+    k = rope(k, positions, theta=cfg.rope_theta)
+    o = constrain_heads(ops.attention(
+        q, k, v, causal=True,
+        window=cfg.window if cfg.attn_kind == "swa" else 0))
+    return (o.reshape(B, S, h * dh) @ p["wo"]), (k, v)
+
+
+# int8 KV-cache quantisation (beyond-paper serving optimisation, §Perf cell A):
+# per-(position, head) symmetric scales; decode is HBM-bound on cache reads,
+# so halving cache bytes ≈ halves the dominant roofline term.
+KV_QUANT_SCALE = 127.0
+
+
+def quantize_kv(x):
+    """[..., KV, dh] → (int8 values, f16 scales broadcast over dh)."""
+    scale = jnp.maximum(jnp.abs(x.astype(jnp.float32)).max(-1, keepdims=True),
+                        1e-6) / KV_QUANT_SCALE
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def gqa_decode(p, x, cfg: ArchConfig, cache_k, cache_v, cache_pos, pos,
+               kv_scales=None):
+    """One-token decode.  cache_k/v: [B, S_cache, KV, dh]; pos: scalar.
+
+    cache_pos: [B, S_cache] absolute positions (−1 = unfilled; ring for SWA).
+    kv_scales: optional {"k": [B,S,KV,1], "v": ...} f16 scales when the cache
+    is int8-quantised (cfg.kv_cache_dtype == "int8").
+    Returns (out, new_k, new_v, new_pos[, new_scales]).
+    """
+    B, _, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, h, dh)
+    k = (x @ p["wk"]).reshape(B, 1, kv, dh)
+    v = (x @ p["wv"]).reshape(B, 1, kv, dh)
+    posv = jnp.full((1,), pos)
+    q = rope(q, posv, theta=cfg.rope_theta)
+    k = rope(k, posv, theta=cfg.rope_theta)
+
+    slot = pos % cache_k.shape[1] if cfg.attn_kind == "swa" \
+        else jnp.minimum(pos, cache_k.shape[1] - 1)
+    quant = cfg.kv_cache_dtype == "int8"
+    if quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        ck = jax.lax.dynamic_update_index_in_dim(cache_k, kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache_v, vq, slot, axis=1)
+        nks = jax.lax.dynamic_update_index_in_dim(kv_scales["k"], ks, slot,
+                                                  axis=1)
+        nvs = jax.lax.dynamic_update_index_in_dim(kv_scales["v"], vs, slot,
+                                                  axis=1)
+        k_full = dequantize_kv(ck, nks, x.dtype)
+        v_full = dequantize_kv(cv, nvs, x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_index_in_dim(cache_k, k[:, 0], slot,
+                                                 axis=1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache_v, v[:, 0], slot,
+                                                 axis=1)
+        k_full, v_full = ck, cv
+        nks = nvs = None
+    cp = jax.lax.dynamic_update_index_in_dim(
+        cache_pos, jnp.full((B,), pos, cache_pos.dtype), slot, axis=1)
+
+    o = ops.attention(q, k_full, v_full, causal=True,
+                      window=cfg.window if cfg.attn_kind == "swa" else 0,
+                      q_offset=pos, kv_positions=cp[0])
+    out = (o.reshape(B, 1, h * dh) @ p["wo"])
+    if quant:
+        return out, ck, cv, cp, {"k": nks, "v": nvs}
+    return out, ck, cv, cp
+
+
+# ------------------------------------------------------------- MLA paths --
+def mla_forward(p, x, cfg: ArchConfig, positions):
+    """Expanded MLA for train/prefill.  Returns (out, (c, k_rope))."""
+    B, S, D = x.shape
+    h, dh, r, rd = cfg.n_heads, cfg.head_dim, cfg.mla_kv_lora, cfg.mla_rope_dim
+    q = constrain_heads((x @ p["wq"]).reshape(B, S, h, dh + rd))
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckr = x @ p["w_dkv"]                                   # [B, S, r+rd]
+    c = rms_norm(ckr[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(ckr[..., None, r:], positions, theta=cfg.rope_theta)
+
+    k_nope = constrain_heads((c @ p["w_uk"]).reshape(B, S, h, dh))
+    v = constrain_heads((c @ p["w_uv"]).reshape(B, S, h, dh))
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (B, S, h, rd))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    o = constrain_heads(ops.attention(qf, k, v, scale=(dh + rd) ** -0.5))
+    return (o.reshape(B, S, h * dh) @ p["wo"]), (c, k_rope[:, :, 0])
+
+
+def mla_decode(p, x, cfg: ArchConfig, cache_c, cache_kr, pos):
+    """Absorbed-matmul MLA decode against the latent cache.
+
+    cache_c: [B, S, r]; cache_kr: [B, S, rd].  Scores are computed in latent
+    space:  s = q_nopeᵀ·W_uk·c  +  q_ropeᵀ·k_rope, and values re-expanded via
+    W_uv after the probability-weighted sum over c — the compact-cache trick.
+    """
+    B = x.shape[0]
+    h, dh, r, rd = cfg.n_heads, cfg.head_dim, cfg.mla_kv_lora, cfg.mla_rope_dim
+    S = cache_c.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, h, dh + rd)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    posv = jnp.full((1,), pos)
+    q_rope = rope(q_rope, posv, theta=cfg.rope_theta)
+
+    ckr = x @ p["w_dkv"]
+    c_new = rms_norm(ckr[..., :r], p["kv_norm"], cfg.norm_eps)   # [B, 1, r]
+    kr_new = rope(ckr[..., None, r:], posv, theta=cfg.rope_theta)[:, :, 0]
+
+    cc = jax.lax.dynamic_update_index_in_dim(cache_c, c_new[:, 0], pos, axis=1)
+    ck = jax.lax.dynamic_update_index_in_dim(cache_kr, kr_new[:, 0], pos,
+                                             axis=1)
+
+    w_uk = p["w_uk"].reshape(r, h, dh)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))               # absorbed q
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, cc.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                      ck.astype(jnp.float32))) * ((dh + rd) ** -0.5)
+    mask = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, -1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, cc.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, dh)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, h * dh).astype(x.dtype)
+    return (o @ p["wo"]), cc, ck

@@ -1,0 +1,198 @@
+"""Shared building blocks: norms, RoPE, MLPs (GeGLU/SwiGLU/GELU), MoE.
+
+All parameters are plain dict pytrees; every layer exposes ``init`` and
+``apply`` free functions so layer stacks can be built as stacked arrays and
+scanned with ``jax.lax.scan`` (compact HLO — one layer body per family).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+
+
+def param_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def recompute_vjp(fn):
+    """Remat that sees through custom_vjp: recompute ``fn`` in the backward.
+
+    ``jax.checkpoint`` treats a custom_vjp call (our flash attention) as an
+    opaque primitive and SAVES its residuals — stacked over the layer scan
+    that is O(layers·seq·heads) memory.  Wrapping the enclosing block with
+    this helper instead stores only the block's *inputs*; the backward runs
+    ``jax.vjp`` over the block, so the flash residuals exist only transiently
+    inside one layer's backward.
+    """
+    import jax as _jax
+
+    @_jax.custom_vjp
+    def wrapped(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        return fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = _jax.vjp(fn, *args)
+        return vjp(g)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+# ------------------------------------------------------------------ norms --
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+    return ((x32 * inv) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope --
+def rope(x, positions, *, theta: float = 10_000.0, rot_dims: int | None = None):
+    """Rotary embedding on the last dim.  x: [..., T, H, d]; positions: [T]."""
+    d = x.shape[-1] if rot_dims is None else rot_dims
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    xr, rest = x[..., :d], x[..., d:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([rot.astype(x.dtype), rest], -1)
+
+
+# -------------------------------------------------------------------- mlp --
+def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None, stack: int = 0):
+    """Dense MLP params; ``stack`` > 0 prepends a layer axis (for lax.scan)."""
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = param_dtype(cfg)
+    pre = (stack,) if stack else ()
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.mlp in ("geglu", "swiglu")
+    p = {"w_up": jax.random.normal(k1, (*pre, d, f), dt) * (d ** -0.5),
+         "w_down": jax.random.normal(k2, (*pre, f, d), dt) * (f ** -0.5)}
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (*pre, d, f), dt) * (d ** -0.5)
+    return p
+
+
+def mlp_apply(p, x, kind: str):
+    up = x @ p["w_up"]
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    elif kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    h = constrain(h, ("dp",) + (None,) * (h.ndim - 2) + ("tp",))
+    return h @ p["w_down"]
+
+
+# -------------------------------------------------------------------- moe --
+def moe_init(key, cfg: ArchConfig, stack: int = 0):
+    """Routed experts (stacked [E, D, Fe]) + optional shared experts + router."""
+    d = cfg.d_model
+    fe = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    dt = param_dtype(cfg)
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": jax.random.normal(ks[0], (*pre, d, e), jnp.float32)
+        * (d ** -0.5),
+        "we_gate": jax.random.normal(ks[1], (*pre, e, d, fe), dt) * (d ** -0.5),
+        "we_up": jax.random.normal(ks[2], (*pre, e, d, fe), dt) * (d ** -0.5),
+        "we_down": jax.random.normal(ks[3], (*pre, e, fe, d), dt) * (fe ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        fs = fe * cfg.n_shared_experts
+        p["ws_gate"] = jax.random.normal(ks[4], (*pre, d, fs), dt) * (d ** -0.5)
+        p["ws_up"] = jax.random.normal(ks[5], (*pre, d, fs), dt) * (d ** -0.5)
+        p["ws_down"] = jax.random.normal(
+            jax.random.fold_in(ks[5], 1), (*pre, fs, d), dt) * (fs ** -0.5)
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEOptions:
+    capacity_factor: float = 1.3
+    group_size: int = 512           # tokens per dispatch group (memory bound)
+
+
+def moe_apply(p, x, cfg: ArchConfig, opts: MoEOptions | None = None):
+    """Top-k routed MoE with capacity-bounded one-hot dispatch (T5X-style).
+
+    Tokens are blocked into groups of ``group_size``; per group the dispatch
+    tensor [g, E, C] (C ≈ k·g/E·cf) is built from *factored* per-slot one-hots
+    (never materialising a [g, k, E, C] intermediate), so compute scales with
+    the activated top-k experts only — matching the paper's ω activation rate
+    — and the expert axis shards cleanly over the "model" mesh axis (EP).
+    Dispatch/combine einsum overhead is g/(6·F) of the expert FLOPs (≈ 0.5–6 %
+    for the assigned MoE configs).  Overflow beyond capacity is dropped
+    (standard capacity-factor semantics).
+
+    Returns (y, aux_loss).
+    """
+    if opts is None:
+        opts = MoEOptions(capacity_factor=cfg.moe_capacity_factor)
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+    g = min(opts.group_size, N)
+    while N % g:
+        g //= 2
+    ng = N // g
+    cap = max(int(g * k / E * opts.capacity_factor), 1)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)                      # [N, E]
+    topw, topi = jax.lax.top_k(probs, k)                    # [N, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # switch-style load-balance aux loss
+    me = probs.mean(0)
+    ce = jnp.zeros((E,)).at[topi.reshape(-1)].add(1.0) / (N * k)
+    aux = E * jnp.sum(me * ce)
+
+    def group_fn(carry, inp):
+        xg, wg, ig = inp                                    # [g,D], [g,k], [g,k]
+        oh_e = jax.nn.one_hot(ig, E, dtype=jnp.float32)     # [g, k, E]
+        # arrival index of each (token, slot) within its expert's buffer
+        pos = (jnp.cumsum(oh_e.reshape(g * k, E), 0) - 1.0).reshape(g, k, E)
+        pos_s = (pos * oh_e).sum(-1)                        # [g, k] scalar pos
+        keep = (pos_s < cap)[..., None] * oh_e              # [g, k, E]
+        oh_c = jax.nn.one_hot(pos_s, cap, dtype=jnp.float32)  # [g, k, C]
+        disp = jnp.einsum("gke,gkc->gec", keep, oh_c)       # [g, E, C]
+        comb = jnp.einsum("gke,gkc,gk->gec", keep, oh_c, wg)
+        xe = constrain(jnp.einsum("gec,gd->ecd", disp,
+                                  xg.astype(jnp.float32)),
+                       ("ep", None, None))
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                                    p["we_gate"].astype(jnp.float32)))
+             * jnp.einsum("ecd,edf->ecf", xe, p["we_up"].astype(jnp.float32)))
+        ye = constrain(jnp.einsum("ecf,efd->ecd", h,
+                                  p["we_down"].astype(jnp.float32)),
+                       ("ep", None, None))
+        yg = jnp.einsum("gec,ecd->gd", comb, ye)
+        return carry, yg.astype(x.dtype)
+
+    xg = xf.reshape(ng, g, D)
+    wg = topw.reshape(ng, g, k).astype(jnp.float32)
+    ig = topi.reshape(ng, g, k)
+    _, ys = jax.lax.scan(group_fn, None, (xg, wg, ig))
+    y = ys.reshape(N, D)
+
+    if cfg.n_shared_experts:
+        h = jax.nn.silu(xf @ p["ws_gate"]) * (xf @ p["ws_up"])
+        y = y + (h @ p["ws_down"]).astype(x.dtype)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,207 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both run on the shared chunked-SSD core (`repro.kernels.ops.ssd`):
+
+    h_t = d_t ⊙ h_{t−1} + b_t ⊗ x_t,     y_t = c_t · h_t
+
+  * Mamba2:  d_t = exp(−Δt·exp(A_log)) (scalar per head, broadcast over N),
+             b_t = Δt·B_t,  c_t = C_t,  + D-skip and gated output.
+  * RWKV6:   d_t = exp(−exp(w_t)) per channel (data-dependent decay via a
+             low-rank "lora" on w), b_t = k_t, c_t = r_t, current token via
+             the bonus u, + token-shift mixing and a channel-mix block.
+
+Decode carries an O(1) recurrent state per layer — these power the long_500k
+cells (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.layers import param_dtype
+
+
+# ================================================================= Mamba2 ==
+def mamba2_init(key, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    di = 2 * d                      # expansion factor 2
+    hs, n = cfg.ssm_heads, cfg.ssm_state
+    p_dim = di // hs
+    dt = param_dtype(cfg)
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 5)
+    return {
+        # x and gate z
+        "in_proj": jax.random.normal(ks[0], (*pre, d, 2 * di), dt)
+        * (d ** -0.5),
+        # B, C (shared across heads) and per-head dt
+        "bcdt_proj": jax.random.normal(ks[1], (*pre, d, 2 * n + hs), dt)
+        * (d ** -0.5),
+        "conv_w": jax.random.normal(ks[2], (*pre, 4, di), dt) * 0.5,
+        "a_log": jnp.broadcast_to(jnp.log(jnp.linspace(1.0, 8.0, hs,
+                                                       dtype=jnp.float32)),
+                                  (*pre, hs)).astype(jnp.float32),
+        "dt_bias": jnp.broadcast_to(jnp.asarray(-4.0, jnp.float32),
+                                    (*pre, hs)).astype(jnp.float32),
+        "d_skip": jnp.ones((*pre, hs), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (*pre, di, d), dt)
+        * (di ** -0.5),
+    }
+
+
+def _mamba_pre(p, x, cfg: ArchConfig, conv_state=None):
+    """Shared projections: returns (xs [B,T,H,P], z, d, b, c, conv_tail)."""
+    B, T, D = x.shape
+    di = 2 * D
+    hs, n = cfg.ssm_heads, cfg.ssm_state
+    pdim = di // hs
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    # depthwise causal conv width 4 (with carried tail for decode)
+    if conv_state is not None:
+        xpad = jnp.concatenate([conv_state, xi], axis=1)
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (3, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + T] * p["conv_w"][i][None, None] for i in range(4))
+    xc = jax.nn.silu(xc)
+    bcdt = x @ p["bcdt_proj"]
+    b_in = bcdt[..., :n]
+    c_in = bcdt[..., n:2 * n]
+    dt_raw = bcdt[..., 2 * n:].astype(jnp.float32)
+    delta = jax.nn.softplus(dt_raw + p["dt_bias"][None, None])     # [B,T,H]
+    decay = jnp.exp(-delta * jnp.exp(p["a_log"])[None, None])      # [B,T,H]
+    hspec = ("dp", None, "tp", None)
+    xs = constrain(xc.reshape(B, T, hs, pdim), hspec)
+    d_full = constrain(jnp.broadcast_to(decay[..., None], (B, T, hs, n)),
+                       hspec)
+    b_full = constrain(delta[..., None] * jnp.broadcast_to(
+        b_in[:, :, None, :], (B, T, hs, n)), hspec)
+    c_full = constrain(jnp.broadcast_to(c_in[:, :, None, :], (B, T, hs, n)),
+                       hspec)
+    new_tail = xpad[:, -3:]
+    return xs, z, d_full, b_full, c_full, new_tail
+
+
+def mamba2_forward(p, x, cfg: ArchConfig, h0=None, conv_state=None,
+                   chunk: int = 64):
+    """Full-sequence Mamba2 block.  Returns (y, (h_final, conv_tail))."""
+    B, T, D = x.shape
+    xs, z, d, b, c, tail = _mamba_pre(p, x, cfg, conv_state)
+    y, hT = ops.ssd(d, b, xs, c, chunk=min(chunk, T), include_current=True)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, T, 2 * D) * jax.nn.silu(z)
+    return (y @ p["out_proj"]), (hT, tail)
+
+
+def mamba2_decode(p, x, cfg: ArchConfig, h, conv_state):
+    """One-token decode.  h: [B,H,N,P]; conv_state: [B,3,di]."""
+    B = x.shape[0]
+    xs, z, d, b, c, tail = _mamba_pre(p, x, cfg, conv_state)
+    y, h_next = ops.ssd_decode_step(d[:, 0], b[:, 0], xs[:, 0], c[:, 0],
+                                    h=h, include_current=True)
+    y = y + p["d_skip"][None, :, None].astype(y.dtype) * xs[:, 0]
+    y = (y.reshape(B, 1, -1) * jax.nn.silu(z))
+    return (y @ p["out_proj"]), h_next, tail
+
+
+# ================================================================== RWKV6 ==
+def rwkv6_init(key, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    dt = param_dtype(cfg)
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        # time-mix interpolation weights (token shift) for r/k/v/w/g
+        "mix": 0.5 * jnp.ones((*pre, 5, d), dt),
+        "wr": jax.random.normal(ks[0], (*pre, d, d), dt) * (d ** -0.5),
+        "wk": jax.random.normal(ks[1], (*pre, d, d), dt) * (d ** -0.5),
+        "wv": jax.random.normal(ks[2], (*pre, d, d), dt) * (d ** -0.5),
+        "wg": jax.random.normal(ks[3], (*pre, d, d), dt) * (d ** -0.5),
+        "wo": jax.random.normal(ks[4], (*pre, d, d), dt) * (d ** -0.5),
+        # data-dependent decay: w = w0 + tanh(x@w1)@w2 (low-rank lora)
+        "w0": jnp.broadcast_to(jnp.asarray(-4.0, jnp.float32),
+                               (*pre, d)).astype(jnp.float32),
+        "w1": jax.random.normal(ks[5], (*pre, d, lora), dt) * (d ** -0.5),
+        "w2": jax.random.normal(ks[6], (*pre, lora, d), dt) * (lora ** -0.5),
+        "u": jax.random.normal(ks[7], (*pre, nh, hd), jnp.float32) * 0.1,
+        # channel-mix
+        "cmix": 0.5 * jnp.ones((*pre, d), dt),
+        "ck": jax.random.normal(ks[8], (*pre, d, cfg.d_ff), dt) * (d ** -0.5),
+        "cv": jax.random.normal(ks[9], (*pre, cfg.d_ff, d), dt)
+        * (cfg.d_ff ** -0.5),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with carried boundary.  prev: [B, 1, D]."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, cfg: ArchConfig, prev_x=None, h0=None,
+                   chunk: int = 64):
+    """RWKV6 time-mix (the linear-attention half).  Returns (y, (hT, x_last))."""
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = D // hd
+    prev = jnp.zeros((B, 1, D), x.dtype) if prev_x is None else prev_x
+    xs = _shift(x, prev)
+    mix = p["mix"]
+
+    def mixed(i):
+        return x * mix[i][None, None] + xs * (1 - mix[i][None, None])
+
+    hspec = ("dp", None, "tp", None)
+    r = constrain((mixed(0) @ p["wr"]).reshape(B, T, nh, hd), hspec)
+    k = constrain((mixed(1) @ p["wk"]).reshape(B, T, nh, hd), hspec)
+    v = constrain((mixed(2) @ p["wv"]).reshape(B, T, nh, hd), hspec)
+    w_raw = (p["w0"][None, None].astype(jnp.float32)
+             + jnp.tanh(mixed(3).astype(jnp.float32) @ p["w1"].astype(
+                 jnp.float32)) @ p["w2"].astype(jnp.float32))
+    decay = constrain(jnp.exp(-jnp.exp(w_raw)).reshape(B, T, nh, hd), hspec)
+    g = jax.nn.silu(mixed(4) @ p["wg"])
+
+    y, hT = ops.ssd(decay, k, v, r, u=p["u"], h0=h0,
+                    chunk=min(chunk, T), include_current=False)
+    y = y.reshape(B, T, D) * g
+    return (y @ p["wo"]), (hT, x[:, -1:])
+
+
+def rwkv6_time_mix_decode(p, x, cfg: ArchConfig, h, prev_x):
+    """One-token time-mix decode.  h: [B,nh,hd,hd]; prev_x: [B,1,D]."""
+    B, _, D = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = D // hd
+    xs = prev_x
+    mix = p["mix"]
+
+    def mixed(i):
+        return x * mix[i][None, None] + xs * (1 - mix[i][None, None])
+
+    r = (mixed(0) @ p["wr"]).reshape(B, nh, hd)
+    k = (mixed(1) @ p["wk"]).reshape(B, nh, hd)
+    v = (mixed(2) @ p["wv"]).reshape(B, nh, hd)
+    w_raw = (p["w0"][None, None].astype(jnp.float32)
+             + jnp.tanh(mixed(3).astype(jnp.float32) @ p["w1"].astype(
+                 jnp.float32)) @ p["w2"].astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(w_raw)).reshape(B, nh, hd)
+    g = jax.nn.silu(mixed(4) @ p["wg"])
+    y, h_next = ops.ssd_decode_step(decay, k, v, r, u=p["u"], h=h,
+                                    include_current=False)
+    y = (y.reshape(B, 1, D) * g) @ p["wo"]
+    return y, h_next, x
+
+
+def rwkv6_channel_mix(p, x, prev_x=None):
+    """RWKV channel-mix (the MLP half) with token shift.  Returns (y, x_last)."""
+    B, T, D = x.shape
+    prev = jnp.zeros((B, 1, D), x.dtype) if prev_x is None else prev_x
+    xs = _shift(x, prev)
+    xm = x * p["cmix"][None, None] + xs * (1 - p["cmix"][None, None])
+    h = jnp.square(jax.nn.relu(xm @ p["ck"]))
+    return (h @ p["cv"]), x[:, -1:]

@@ -1,0 +1,490 @@
+"""Config-driven model assembly for all ten assigned architectures.
+
+Design (DESIGN.md §3):
+  * per-layer parameters are STACKED along a leading L axis and the layer
+    stack is applied with ``jax.lax.scan`` — one block body in the HLO, so the
+    80-compile dry-run matrix stays tractable and remat policy is a scan knob;
+  * one code path per family: attention blocks (dense/moe/vlm/audio), RWKV6
+    blocks (ssm), Mamba2 stages with a shared attention block (hybrid);
+  * modality frontends (vlm/audio) are STUBS: the step functions accept either
+    integer tokens or precomputed embeddings [B, S, D] (``input_specs``
+    supplies the latter for patch/frame frontends).
+
+Public API: ``init_params``, ``forward``, ``loss_fn``, ``init_cache``,
+``prefill``, ``decode_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (MoEOptions, mlp_apply, mlp_init, moe_apply,
+                                 moe_init, param_dtype, recompute_vjp,
+                                 rms_norm)
+
+Params = dict[str, Any]
+Cache = dict[str, Any]
+
+
+# ================================================================== init ==
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = param_dtype(cfg)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (V, D), dt) * (D ** -0.5),
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[1], (D, V), dt) * (D ** -0.5)
+
+    if cfg.family == "ssm":                      # RWKV6
+        p["blocks"] = {
+            "tm_norm": jnp.zeros((L, D), dt),
+            "tm": ssm.rwkv6_init(keys[2], cfg, stack=L),
+            "cm_norm": jnp.zeros((L, D), dt),
+        }
+        # channel-mix params live inside rwkv6_init (ck/cv/cmix)
+    elif cfg.family == "hybrid":                 # Zamba2
+        p["blocks"] = {
+            "mamba_norm": jnp.zeros((L, D), dt),
+            "mamba": ssm.mamba2_init(keys[2], cfg, stack=L),
+        }
+        p["shared_attn_norm"] = jnp.zeros((D,), dt)
+        p["shared_attn"] = attn.attn_init(keys[3], cfg)
+        p["shared_mlp_norm"] = jnp.zeros((D,), dt)
+        p["shared_mlp"] = mlp_init(keys[4], cfg)
+    else:                                        # attention families
+        blocks: Params = {
+            "attn_norm": jnp.zeros((L, D), dt),
+            "attn": attn.attn_init(keys[2], cfg, stack=L),
+            "mlp_norm": jnp.zeros((L, D), dt),
+        }
+        if cfg.is_moe:
+            blocks["moe"] = moe_init(keys[3], cfg, stack=L)
+        else:
+            blocks["mlp"] = mlp_init(keys[3], cfg, stack=L)
+        p["blocks"] = blocks
+    return p
+
+
+def _embed_in(p, cfg: ArchConfig, tokens_or_embeds):
+    if jnp.issubdtype(tokens_or_embeds.dtype, jnp.integer):
+        x = jnp.take(p["embed"], tokens_or_embeds, axis=0)
+    else:
+        x = tokens_or_embeds.astype(param_dtype(cfg))   # stub frontend output
+    if cfg.mlp == "geglu":                              # gemma-style scaling
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, ("dp", None, None))
+
+
+def _logits(p, cfg: ArchConfig, x):
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+# ============================================================== forward ==
+def _attn_part(x, norm_w, ap, positions, cfg: ArchConfig):
+    """Norm + attention half of a block (recompute_vjp'd as one unit so the
+    only stored residual is x, which aliases the layer-scan save)."""
+    h = rms_norm(x, norm_w, cfg.norm_eps)
+    if cfg.mla_kv_lora:
+        return attn.mla_forward(ap, h, cfg, positions)
+    return attn.gqa_forward(ap, h, cfg, positions)
+
+
+def _attn_block(bp, x, cfg: ArchConfig, positions, save_memory=True):
+    part = functools.partial(_attn_part, cfg=cfg)
+    if save_memory:
+        part = recompute_vjp(part)
+    a, kv = part(x, bp["attn_norm"], bp["attn"], positions)
+    x = x + a
+    h = rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if "moe" in bp:
+        m, aux = moe_apply(bp["moe"], h, cfg)
+    else:
+        m, aux = mlp_apply(bp["mlp"], h, cfg.mlp), 0.0
+    return x + m, kv, aux
+
+
+def _rwkv_block(bp, x, cfg: ArchConfig):
+    h = rms_norm(x, bp["tm_norm"], cfg.norm_eps)
+    y, (hT, x_last_t) = ssm.rwkv6_time_mix(bp["tm"], h, cfg)
+    x = x + y
+    h = rms_norm(x, bp["cm_norm"], cfg.norm_eps)
+    y, x_last_c = ssm.rwkv6_channel_mix(bp["tm"], h)
+    return x + y, (hT, x_last_t, x_last_c)
+
+
+def forward(p: Params, cfg: ArchConfig, tokens, *, collect_cache=False,
+            remat: bool = False):
+    """Full-sequence forward.  tokens: [B, S] ints or [B, S, D] embeds.
+
+    Returns (logits [B, S, V] fp32, aux) where aux = {"moe_aux", "cache"}.
+    """
+    x = _embed_in(p, cfg, tokens)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+
+    if cfg.family == "ssm":
+        def body(xc, bp):
+            xo, st = _rwkv_block(bp, xc, cfg)
+            return xo, st if collect_cache else 0
+        body = jax.checkpoint(body) if remat else body
+        x, states = jax.lax.scan(body, x, p["blocks"])
+        cache = states if collect_cache else None
+        return _logits(p, cfg, x), {"moe_aux": jnp.float32(0), "cache": cache}
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(p, cfg, x, positions, collect_cache, remat)
+
+    def body(xc, bp):
+        xo, kv, aux = _attn_block(bp, xc, cfg, positions)
+        return xo, (kv if collect_cache else 0, aux)
+    body = jax.checkpoint(body) if remat else body
+    x, (kvs, auxs) = jax.lax.scan(body, x, p["blocks"])
+    aux = jnp.sum(jnp.asarray(auxs)) if cfg.is_moe else jnp.float32(0)
+    cache = kvs if collect_cache else None
+    return _logits(p, cfg, x), {"moe_aux": aux, "cache": cache}
+
+
+def _hybrid_group_ids(cfg: ArchConfig) -> list[int]:
+    """Mamba-layer counts per stage; a shared attn block runs after each full
+    group of ``attn_every`` layers (remainder layers close the stack)."""
+    n_full = cfg.n_layers // cfg.attn_every
+    rem = cfg.n_layers - n_full * cfg.attn_every
+    return [cfg.attn_every] * n_full + ([rem] if rem else [])
+
+
+def _hybrid_forward(p, cfg, x, positions, collect_cache, remat):
+    gsizes = _hybrid_group_ids(cfg)
+    blocks = p["blocks"]
+    off = 0
+    mamba_states, attn_caches, aux = [], [], jnp.float32(0)
+
+    def mamba_body(xc, bp):
+        h = rms_norm(xc, bp.pop("norm"), cfg.norm_eps)
+        y, st = ssm.mamba2_forward(bp, h, cfg)
+        return xc + y, st if collect_cache else 0
+
+    mamba_body = jax.checkpoint(mamba_body) if remat else mamba_body
+    for gi, gs in enumerate(gsizes):
+        sl = lambda a: a[off:off + gs]
+        group = {**jax.tree.map(sl, blocks["mamba"]),
+                 "norm": sl(blocks["mamba_norm"])}
+        x, sts = jax.lax.scan(lambda xc, bp: mamba_body(xc, dict(bp)),
+                              x, group)
+        if collect_cache:
+            mamba_states.append(sts)
+        off += gs
+        if gs == cfg.attn_every:                 # full group ⇒ shared attn
+            h = rms_norm(x, p["shared_attn_norm"], cfg.norm_eps)
+            a, kv = attn.gqa_forward(p["shared_attn"], h, cfg, positions)
+            x = x + a
+            h = rms_norm(x, p["shared_mlp_norm"], cfg.norm_eps)
+            x = x + mlp_apply(p["shared_mlp"], h, cfg.mlp)
+            if collect_cache:
+                attn_caches.append(kv)
+    cache = None
+    if collect_cache:
+        cache = {"mamba": jax.tree.map(
+                     lambda *xs: jnp.concatenate(xs, 0), *mamba_states),
+                 "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                      *attn_caches)}
+    return _logits(p, cfg, x), {"moe_aux": aux, "cache": cache}
+
+
+# ================================================================= loss ==
+def _hidden(p: Params, cfg: ArchConfig, tokens, *, remat=False):
+    """Forward up to the final hidden states (no LM head)."""
+    # forward() applies the head in _logits; reuse its trunk by temporarily
+    # computing logits per-chunk instead.  We re-run the trunk here:
+    x = _embed_in(p, cfg, tokens)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    if cfg.family == "ssm":
+        def body(xc, bp):
+            xo, _ = _rwkv_block(bp, xc, cfg)
+            return xo, 0
+        body = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body, x, p["blocks"])
+        return x, jnp.float32(0)
+    if cfg.family == "hybrid":
+        gsizes = _hybrid_group_ids(cfg)
+        blocks = p["blocks"]
+        off = 0
+
+        def mamba_body(xc, bp):
+            h = rms_norm(xc, bp.pop("norm"), cfg.norm_eps)
+            y, _ = ssm.mamba2_forward(bp, h, cfg)
+            return xc + y, 0
+        mamba_body = jax.checkpoint(mamba_body) if remat else mamba_body
+        for gs in gsizes:
+            sl = lambda a: a[off:off + gs]
+            group = {**jax.tree.map(sl, blocks["mamba"]),
+                     "norm": sl(blocks["mamba_norm"])}
+            x, _ = jax.lax.scan(lambda xc, bp: mamba_body(xc, dict(bp)),
+                                x, group)
+            off += gs
+            if gs == cfg.attn_every:
+                h = rms_norm(x, p["shared_attn_norm"], cfg.norm_eps)
+                a, _ = attn.gqa_forward(p["shared_attn"], h, cfg, positions)
+                x = x + a
+                h = rms_norm(x, p["shared_mlp_norm"], cfg.norm_eps)
+                x = x + mlp_apply(p["shared_mlp"], h, cfg.mlp)
+        return x, jnp.float32(0)
+
+    def body(xc, bp):
+        xo, _, aux = _attn_block(bp, xc, cfg, positions)
+        return xo, aux
+    body = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(body, x, p["blocks"])
+    aux = jnp.sum(jnp.asarray(auxs)) if cfg.is_moe else jnp.float32(0)
+    return x, aux
+
+
+def loss_fn(p: Params, cfg: ArchConfig, tokens, labels, *, remat=False,
+            moe_aux_weight: float = 0.01, seq_chunk: int = 512):
+    """Causal-LM cross entropy (fp32) + MoE load-balance aux.
+
+    The LM head + softmax run CHUNKED over the sequence (scan of seq_chunk
+    slices) so [B, S, V] logits are never materialised — at 256k vocab the
+    full-sequence fp32 logit tensor would dominate peak memory.
+    """
+    x, aux = _hidden(p, cfg, tokens, remat=remat)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    B, S, D = x.shape
+    ck = min(seq_chunk, S)
+    while S % ck:
+        ck //= 2
+    nc = S // ck
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        xc, lc = inp                                  # [B, ck, D], [B, ck]
+        logits = constrain((xc @ head).astype(jnp.float32),
+                           ("dp", None, "tp"))
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        return carry + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(
+        chunk, jnp.float32(0),
+        (x.reshape(B, nc, ck, D).swapaxes(0, 1),
+         labels.reshape(B, nc, ck).swapaxes(0, 1)))
+    nll = total / (B * S)
+    return nll + moe_aux_weight * aux, {"nll": nll, "moe_aux": aux}
+
+
+# ================================================================ cache ==
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Cache:
+    dt = param_dtype(cfg)
+    L, D = cfg.n_layers, cfg.d_model
+    if cfg.family == "ssm":
+        hd = cfg.rwkv_head_dim
+        nh = D // hd
+        return {"h": jnp.zeros((L, batch, nh, hd, hd), jnp.float32),
+                "prev_t": jnp.zeros((L, batch, 1, D), dt),
+                "prev_c": jnp.zeros((L, batch, 1, D), dt)}
+    if cfg.family == "hybrid":
+        di = 2 * D
+        pdim = di // cfg.ssm_heads
+        n_apps = sum(1 for g in _hybrid_group_ids(cfg)
+                     if g == cfg.attn_every)
+        return {
+            "h": jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_state, pdim),
+                           jnp.float32),
+            "conv": jnp.zeros((L, batch, 3, di), dt),
+            "k": jnp.zeros((n_apps, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((n_apps, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "pos": jnp.full((n_apps, batch, max_seq), -1, jnp.int32),
+        }
+    if cfg.mla_kv_lora:
+        return {"c": jnp.zeros((L, batch, max_seq, cfg.mla_kv_lora), dt),
+                "kr": jnp.zeros((L, batch, max_seq, cfg.mla_rope_dim), dt)}
+    w = min(max_seq, cfg.window) if cfg.attn_kind == "swa" else max_seq
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros((L, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                               jnp.int8),
+                "v": jnp.zeros((L, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                               jnp.int8),
+                "ks": jnp.zeros((L, batch, w, cfg.n_kv_heads, 1),
+                                jnp.float16),
+                "vs": jnp.zeros((L, batch, w, cfg.n_kv_heads, 1),
+                                jnp.float16),
+                "pos": jnp.full((L, batch, w), -1, jnp.int32)}
+    return {"k": jnp.zeros((L, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((L, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": jnp.full((L, batch, w), -1, jnp.int32)}
+
+
+# =============================================================== prefill ==
+def prefill(p: Params, cfg: ArchConfig, tokens, max_seq: int):
+    """Full-sequence prefill.  Returns (last-token logits [B, V], cache, pos).
+
+    The cache is laid out for ``decode_step`` continuation at position S.
+    """
+    B, S = tokens.shape[:2]
+    logits, aux = forward(p, cfg, tokens, collect_cache=True)
+    fc = aux["cache"]
+    cache = init_cache(cfg, B, max_seq)
+
+    if cfg.family == "ssm":
+        hT, x_t, x_c = fc
+        cache = {"h": hT, "prev_t": x_t, "prev_c": x_c}
+    elif cfg.family == "hybrid":
+        hT, conv_tail = fc["mamba"]
+        k, v = fc["attn"]
+        cache["h"] = hT
+        cache["conv"] = conv_tail
+        cache = _fill_kv(cache, k, v, S, cfg)
+    elif cfg.mla_kv_lora:
+        c, kr = fc
+        cache["c"] = cache["c"].at[:, :, :S].set(c)
+        cache["kr"] = cache["kr"].at[:, :, :S].set(kr)
+    else:
+        k, v = fc
+        cache = _fill_kv(cache, k, v, S, cfg)
+    return logits[:, -1], cache, S
+
+
+def _fill_kv(cache, k, v, S, cfg: ArchConfig):
+    w = cache["k"].shape[2]
+    quant = cfg.kv_cache_dtype == "int8" and "ks" in cache
+    if quant:
+        k, ksc = attn.quantize_kv(k)
+        v, vsc = attn.quantize_kv(v)
+    if S >= w:                       # keep the trailing window (ring-aligned)
+        ks, vs = k[:, :, S - w:], v[:, :, S - w:]
+        pos = jnp.broadcast_to(jnp.arange(S - w, S)[None, None],
+                               cache["pos"].shape).astype(jnp.int32)
+        if S % w:
+            shift = S % w            # align ring slots: slot = pos % w
+            ks = jnp.roll(ks, shift, axis=2)
+            vs = jnp.roll(vs, shift, axis=2)
+            pos = jnp.roll(pos, shift, axis=2)
+        cache["k"], cache["v"], cache["pos"] = ks, vs, pos
+        if quant:
+            cache["ks"] = (jnp.roll(ksc[:, :, S - w:], S % w, axis=2)
+                           if S % w else ksc[:, :, S - w:])
+            cache["vs"] = (jnp.roll(vsc[:, :, S - w:], S % w, axis=2)
+                           if S % w else vsc[:, :, S - w:])
+    else:
+        cache["k"] = cache["k"].at[:, :, :S].set(k)
+        cache["v"] = cache["v"].at[:, :, :S].set(v)
+        cache["pos"] = cache["pos"].at[:, :, :S].set(
+            jnp.arange(S)[None, None])
+        if quant:
+            cache["ks"] = cache["ks"].at[:, :, :S].set(ksc)
+            cache["vs"] = cache["vs"].at[:, :, :S].set(vsc)
+    return cache
+
+
+# ================================================================ decode ==
+def decode_step(p: Params, cfg: ArchConfig, cache: Cache, token, pos):
+    """One decode step.  token: [B] ints (or [B, D] stub embeds); pos: scalar.
+
+    Returns (logits [B, V] fp32, new_cache).
+    """
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    x = _embed_in(p, cfg, tok)                      # [B, 1, D]
+
+    if cfg.family == "ssm":
+        def body(xc, inp):
+            bp, h, pt, pc = inp
+            hh = rms_norm(xc, bp["tm_norm"], cfg.norm_eps)
+            y, h2, pt2 = ssm.rwkv6_time_mix_decode(bp["tm"], hh, cfg, h, pt)
+            xc = xc + y
+            hh = rms_norm(xc, bp["cm_norm"], cfg.norm_eps)
+            y, pc2 = ssm.rwkv6_channel_mix(bp["tm"], hh, pc)
+            return xc + y, (h2, pt2, pc2)
+        x, (h2, pt2, pc2) = jax.lax.scan(
+            body, x, (p["blocks"], cache["h"], cache["prev_t"],
+                      cache["prev_c"]))
+        return _logits(p, cfg, x)[:, 0], {"h": h2, "prev_t": pt2,
+                                          "prev_c": pc2}
+
+    if cfg.family == "hybrid":
+        return _hybrid_decode(p, cfg, cache, x, pos)
+
+    def body(xc, inp):
+        bp, cl = inp
+        h = rms_norm(xc, bp["attn_norm"], cfg.norm_eps)
+        if cfg.mla_kv_lora:
+            a, c2, kr2 = attn.mla_decode(bp["attn"], h, cfg, cl["c"],
+                                         cl["kr"], pos)
+            new_cl = {"c": c2, "kr": kr2}
+        elif cfg.kv_cache_dtype == "int8":
+            a, k2, v2, p2, sc = attn.gqa_decode(
+                bp["attn"], h, cfg, cl["k"], cl["v"], cl["pos"], pos,
+                kv_scales={"k": cl["ks"], "v": cl["vs"]})
+            new_cl = {"k": k2, "v": v2, "pos": p2, "ks": sc["k"],
+                      "vs": sc["v"]}
+        else:
+            a, k2, v2, p2 = attn.gqa_decode(bp["attn"], h, cfg, cl["k"],
+                                            cl["v"], cl["pos"], pos)
+            new_cl = {"k": k2, "v": v2, "pos": p2}
+        xc = xc + a
+        h = rms_norm(xc, bp["mlp_norm"], cfg.norm_eps)
+        if "moe" in bp:
+            m, _ = moe_apply(bp["moe"], h, cfg)
+        else:
+            m = mlp_apply(bp["mlp"], h, cfg.mlp)
+        return xc + m, new_cl
+
+    x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+    return _logits(p, cfg, x)[:, 0], new_cache
+
+
+def _hybrid_decode(p, cfg, cache, x, pos):
+    gsizes = _hybrid_group_ids(cfg)
+    off = 0
+    app = 0
+    h_out, conv_out = [], []
+    k_out, v_out, p_out = [], [], []
+    for gs in gsizes:
+        sl = lambda a: a[off:off + gs]
+        group = {**jax.tree.map(sl, p["blocks"]["mamba"]),
+                 "norm": sl(p["blocks"]["mamba_norm"])}
+
+        def body(xc, inp):
+            bp, h, conv = inp
+            hh = rms_norm(xc, bp["norm"], cfg.norm_eps)
+            y, h2, c2 = ssm.mamba2_decode(bp, hh, cfg, h, conv)
+            return xc + y, (h2, c2)
+
+        x, (h2, c2) = jax.lax.scan(
+            body, x, (group, sl(cache["h"]), sl(cache["conv"])))
+        h_out.append(h2)
+        conv_out.append(c2)
+        off += gs
+        if gs == cfg.attn_every:
+            hh = rms_norm(x, p["shared_attn_norm"], cfg.norm_eps)
+            a, k2, v2, p2 = attn.gqa_decode(
+                p["shared_attn"], hh, cfg, cache["k"][app], cache["v"][app],
+                cache["pos"][app], pos)
+            x = x + a
+            hh = rms_norm(x, p["shared_mlp_norm"], cfg.norm_eps)
+            x = x + mlp_apply(p["shared_mlp"], hh, cfg.mlp)
+            k_out.append(k2)
+            v_out.append(v2)
+            p_out.append(p2)
+            app += 1
+    new_cache = {
+        "h": jnp.concatenate(h_out, 0),
+        "conv": jnp.concatenate(conv_out, 0),
+        "k": jnp.stack(k_out, 0), "v": jnp.stack(v_out, 0),
+        "pos": jnp.stack(p_out, 0),
+    }
+    return _logits(p, cfg, x)[:, 0], new_cache

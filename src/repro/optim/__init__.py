@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule)
+from repro.optim.compression import (CompressionState, compress_grads_init,
+                                     compressed_allreduce)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "CompressionState", "compress_grads_init", "compressed_allreduce"]

@@ -1,0 +1,7 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device (task brief).  Multi-device tests
+# spawn subprocesses with their own XLA_FLAGS (tests/test_distributed.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,123 @@
+"""The paper's four process effects + SerDes + Monte-Carlo (reduced sizes)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cpo, dvfs, guardband, hbm, montecarlo, serdes, workload
+from repro.core.fingerprint import FINGERPRINT as FP
+
+
+@pytest.fixture(scope="module")
+def traces():
+    key = jax.random.PRNGKey(7)
+    return {k: workload.make_trace(key, 5000, k) for k in workload.KINDS}
+
+
+# ------------------------------------------------------- Effect ① DVFS ----
+def test_released_compute_in_band(traces):
+    """+20–30 % released compute (paper §3.1); we accept ≥ 18 % per-kind."""
+    for kind, tr in traces.items():
+        base = dvfs.simulate_reactive(tr)
+        v24 = dvfs.simulate_v24(tr)
+        rel = float(dvfs.released_compute(base, v24))
+        assert 0.18 <= rel <= 0.35, f"{kind}: released {rel:.3f}"
+
+
+def test_v24_never_trips_dvfs(traces):
+    for tr in traces.values():
+        v24 = dvfs.simulate_v24(tr)
+        assert int(v24.events) == 0
+        assert float(v24.temp.max()) <= FP.t_crit_c
+
+
+def test_baseline_sawtooth_and_p99(traces):
+    tr = traces["inference"]
+    base = dvfs.simulate_reactive(tr)
+    v24 = dvfs.simulate_v24(tr)
+    assert int(base.events) > 0                       # sawtooth happens
+    assert float(base.temp.max()) > FP.t_crit_c       # polling overshoot
+    # P99 token latency: smooth envelope beats the sawtooth
+    assert float(v24.p99_latency) < float(base.p99_latency)
+    # frequency variance collapses (smooth linear envelope claim)
+    assert float(v24.freq.std()) < float(base.freq.std())
+
+
+# ------------------------------------------------------- Effect ② CPO -----
+def test_cpo_open_loop_vs_clamped():
+    """3.4 nm open-loop @ ΔT=40 °C stress; < 0.36 nm compensated (§3.2)."""
+    stress = workload.stress_step(4000)
+    ol = cpo.open_loop(stress)
+    # open loop blows through the ±1.7 nm budget
+    assert float(ol.max_drift) > FP.tsmc_ber_budget_nm
+    cl = cpo.closed_loop(workload.make_trace(jax.random.PRNGKey(1), 5000,
+                                             "inference"))
+    assert float(cl.max_drift) <= 0.36 + 1e-3
+    assert bool(cl.within_channel_spec)
+
+
+def test_drift_equation():
+    assert float(cpo.drift_nm(40.0)) == pytest.approx(3.408, abs=1e-3)
+    assert float(cpo.drift_nm(FP.dt_pic_clamp_c)) == pytest.approx(
+        0.3536, abs=1e-3)
+
+
+def test_heater_economics():
+    h = cpo.heater_savings()
+    assert h["optical_power_reduction_frac"] == pytest.approx(0.17)
+
+
+# ------------------------------------------------------- Effect ③ HBM -----
+def test_hbm_leakage_states():
+    base = hbm.baseline_by_state()
+    v24 = hbm.v24_by_state()
+    assert base["idle"] == pytest.approx(FP.leakage_idle_mb_hr, rel=0.05)
+    assert base["peak"] == pytest.approx(FP.leakage_peak_mb_hr, rel=0.05)
+    assert all(v < FP.leakage_clamped_mb_hr for v in v24.values())
+    assert hbm.max_stack_layers(v24["peak"]) >= 16      # 16L/24L unlock
+
+
+def test_refresh_overhead_monotone():
+    lo = float(hbm.refresh_overhead_frac(1.0))
+    hi = float(hbm.refresh_overhead_frac(166.0))
+    assert lo < hi <= 0.15
+
+
+# -------------------------------------------------- Effect ④ guard-band ---
+def test_guardband_published_and_derived():
+    pub = guardband.published()
+    for row in pub:
+        assert 65.0 <= row.reduction_pct <= 69.0        # 65–68 % claim
+    der = guardband.derived(sigma_uncontrolled=6.0, sigma_controlled=2.1)
+    for row in der:
+        assert row.reduction_pct == pytest.approx(65.0, abs=1.0)
+    assert guardband.wafer_roi_gain(66.0) == pytest.approx(0.15, abs=0.08)
+
+
+# ------------------------------------------------------------- SerDes -----
+def test_serdes_path_a():
+    r = serdes.path_a_improvement()
+    lo, hi = r["open_loop_mhz"]
+    assert lo == pytest.approx(448.0, rel=0.02)        # 0.44–1.36 GHz
+    assert hi == pytest.approx(1344.0, rel=0.02)
+    assert r["improvement_x"] == pytest.approx(40.0 / FP.dt_pic_clamp_c,
+                                               rel=0.01)
+
+
+def test_serdes_path_b_warm_start():
+    r = serdes.path_b_warm_start()
+    cold_lo, cold_hi = r["cold_symbols"]
+    assert 1e4 <= cold_lo <= 1e5
+    assert 1e5 <= cold_hi <= 2e6
+    assert r["warm_symbols"] < 1e2
+
+
+# -------------------------------------------------------- Monte-Carlo -----
+def test_monte_carlo_reduced():
+    r = montecarlo.run(n_trials=200, n_steps=2000)
+    s = r.stats()
+    assert s["v24_time_above_frac"] < 0.01              # <1 % claim
+    assert s["baseline_time_above_frac"] > 0.02
+    assert s["v24_std_c"] < s["baseline_std_c"]         # tighter distribution
+    assert s["baseline_mean_c"] > s["v24_mean_c"]
+    assert 2.0 <= s["sigma_tighter_x"] <= 6.5           # ~3.5× claim
+    assert s["uplift_mean"] > 0.10

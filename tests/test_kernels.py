@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import thermal
+from repro.core.coupling import coupling_matrix
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssd
+from repro.kernels.thermal_conv import thermal_conv
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------- flash attention --
+@pytest.mark.parametrize("B,T,H,KV,d,window", [
+    (2, 256, 4, 2, 64, 0),
+    (1, 256, 8, 1, 128, 0),        # MQA, gemma head_dim class
+    (2, 512, 4, 4, 64, 128),       # sliding window
+    (1, 128, 2, 2, 256, 0),        # head_dim 256 (gemma)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(B, T, H, KV, d, window, dtype):
+    q = jax.random.normal(KEY, (B, T, H, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, KV, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, KV, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_blocks_do_not_matter():
+    q = jax.random.normal(KEY, (1, 256, 2, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 256, 2, 64))
+    o1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# -------------------------------------------------------------- ssm scan --
+def _ssd_inputs(B, T, H, N, P, dec_min, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 4)
+    d = dec_min + (0.999 - dec_min) * jax.random.uniform(ks[0], (B, T, H, N))
+    b = (jax.random.normal(ks[1], (B, T, H, N)) * 0.2).astype(dtype)
+    x = jax.random.normal(ks[2], (B, T, H, P), dtype)
+    c = (jax.random.normal(ks[3], (B, T, H, N)) * 0.2).astype(dtype)
+    return d.astype(dtype), b, x, c
+
+
+@pytest.mark.parametrize("B,T,H,N,P,dec_min,inc,use_u", [
+    (2, 128, 2, 64, 64, 0.90, True, False),    # mamba2 regime
+    (1, 256, 4, 32, 64, 0.80, False, True),    # rwkv regime (u bonus)
+    (2, 128, 2, 16, 32, 0.95, False, True),
+    (1, 64, 2, 64, 128, 0.70, True, False),    # strong decay corner
+])
+def test_ssd_kernel_vs_ref(B, T, H, N, P, dec_min, inc, use_u):
+    d, b, x, c = _ssd_inputs(B, T, H, N, P, dec_min)
+    u = 0.1 * jax.random.normal(KEY, (H, N)) if use_u else None
+    y1, h1 = ssd(d, b, x, c, u=u, chunk=64, include_current=inc,
+                 interpret=True)
+    y2, h2 = ref.chunked_ssd(d, b, x, c, u=u, chunk=64, include_current=inc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=3e-5)
+
+
+def test_chunked_matches_sequential_scan():
+    """Chunked SSD == the O(T) sequential recurrence (oracle of oracles)."""
+    d, b, x, c = _ssd_inputs(1, 64, 2, 16, 16, 0.85)
+    y1, h1 = ref.chunked_ssd(d, b, x, c, chunk=16, include_current=True)
+    outer = b[..., :, None] * x[..., None, :]
+    hs, hT = ref.linear_scan_ref(d[..., None], outer)
+    y_seq = jnp.einsum("bthn,bthnp->bthp", c, hs)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_seq), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(hT), atol=1e-5)
+
+
+def test_ssd_decode_step_consistency():
+    """T sequential decode steps == one chunked forward (train/serve parity)."""
+    d, b, x, c = _ssd_inputs(1, 32, 2, 16, 16, 0.9)
+    u = 0.1 * jax.random.normal(KEY, (2, 16))
+    y_full, h_full = ref.chunked_ssd(d, b, x, c, u=u, chunk=32,
+                                     include_current=False)
+    h = None
+    ys = []
+    for t in range(32):
+        y, h = ref.ssd_decode_step(d[:, t], b[:, t], x[:, t], c[:, t],
+                                   u=u, h=h, include_current=False)
+        ys.append(y)
+    y_seq = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h), atol=1e-5)
+
+
+# ---------------------------------------------------------- thermal conv --
+@pytest.mark.parametrize("n_tiles,T,chunk", [(8, 256, 64), (47, 500, 128),
+                                             (256, 300, 100), (512, 128, 64)])
+def test_thermal_conv_kernel_vs_ref(n_tiles, T, chunk):
+    p = jax.random.uniform(KEY, (T, n_tiles)) * 120
+    gamma = coupling_matrix(n_tiles)
+    poles = thermal.two_pole()
+    d1, s1 = thermal_conv(p, gamma, poles.decay, poles.gain, chunk=chunk,
+                          interpret=True)
+    d2, s2 = ref.thermal_conv_ref(p, gamma, poles.decay, poles.gain)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+
+
+def test_thermal_conv_state_carry():
+    """Two half-runs chained == one full run (grid-carried scratch state)."""
+    p = jax.random.uniform(KEY, (256, 16)) * 100
+    gamma = coupling_matrix(16)
+    poles = thermal.two_pole()
+    d_full, s_full = thermal_conv(p, gamma, poles.decay, poles.gain,
+                                  chunk=64, interpret=True)
+    d1, s1 = thermal_conv(p[:128], gamma, poles.decay, poles.gain,
+                          chunk=64, interpret=True)
+    d2, s2 = thermal_conv(p[128:], gamma, poles.decay, poles.gain,
+                          state0=s1, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(d_full),
+                               np.concatenate([d1, d2]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), atol=1e-3)
+
+
+# ------------------------------------------------------- flash custom vjp --
+def test_flash_vjp_matches_autodiff():
+    B, T, H, KV, d = 2, 256, 4, 2, 32
+    q = jax.random.normal(KEY, (B, T, H, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, KV, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, KV, d))
+    f = ref.make_flash(causal=True, window=0, q_block=64, kv_block=64)
+    g1 = jax.grad(lambda *a: (f(*a) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: (ref.attention_ref(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)

@@ -1,0 +1,80 @@
+"""Beyond-paper performance features: int8 KV cache, microbatch accumulation,
+EP-only sharding specs (§Perf levers) — correctness guarantees."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, reduced
+from repro.launch import steps as S
+from repro.models import attention as attn
+from repro.models import transformer as tf
+
+
+def test_kv_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 32)) * 3.0
+    q, s = attn.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+    back = attn.dequantize_kv(q, s, jnp.float32)
+    # per-(pos, head) scale ⇒ error ≤ ~scale/2 elementwise (the f16 scale
+    # storage adds up to 2^-11 relative slack on top of the half-quantum)
+    err = jnp.abs(back - x)
+    bound = s.astype(jnp.float32) * 0.52 + 1e-6
+    assert float((err <= bound).mean()) == 1.0
+    assert float(err.max()) <= float(s.max()) * 0.6
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "mixtral-8x7b"])
+def test_int8_kv_decode_close_to_bf16(arch):
+    cfg = reduced(ALL_ARCHS[arch])
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    p = tf.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 33), 2,
+                              cfg.vocab_size)
+    logits_full, _ = tf.forward(p, cfg, toks)
+    _, cache, pos = tf.prefill(p, cfg8, toks[:, :32], max_seq=64)
+    assert cache["k"].dtype == jnp.int8
+    lg, c2 = tf.decode_step(p, cfg8, cache, toks[:, 32], pos)
+    assert c2["k"].dtype == jnp.int8          # stays quantised across steps
+    rel = float(jnp.abs(lg[0] - logits_full[0, -1]).max()
+                / jnp.abs(logits_full[0, -1]).max())
+    assert rel < 0.05, rel
+
+
+def test_microbatch_grads_equal_full_batch():
+    """n_mb=4 accumulated step == n_mb=1 step (f32 exactness up to reduction
+    order)."""
+    cfg = reduced(ALL_ARCHS["granite-3-2b"], n_layers=2)
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (8, 33), 2, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "rho": jnp.full((2,), 1.5)}
+    s1 = S.init_train_state(key, cfg, 2)
+    s4 = S.init_train_state(key, cfg, 2)
+    st1, m1 = jax.jit(S.make_train_step(cfg, 2, n_microbatches=1))(s1, batch)
+    st4, m4 = jax.jit(S.make_train_step(cfg, 2, n_microbatches=4))(s4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_eponly_specs_replicate_attention_over_model():
+    from repro.distributed import sharding as shd
+    cfg = ALL_ARCHS["deepseek-v2-236b"]
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    params = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = shd.param_specs(cfg, params, mesh, tp_attention=False)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))[0]
+    for path, spec in flat:
+        name = str(path[-1])
+        if "we_" in name:                 # experts keep the model axis
+            assert "model" in str(spec), (name, spec)
+        elif any(w in name for w in ("wq", "wo", "w_up", "lm_head")):
+            assert "model" not in str(spec), (name, spec)
+            assert "data" in str(spec), (name, spec)   # ZeRO-3 instead

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coupling, pdu_gate, thermal
+from repro.core.density import dt_from_rho, power_from_rho, rtok_from_rho
+from repro.core.fingerprint import FINGERPRINT as FP
+from repro.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+short = settings(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------- thermal (LTI) ----
+@short
+@given(st.floats(1.0, 200.0), st.floats(0.1, 3.0),
+       st.integers(10, 200))
+def test_thermal_linearity(p0, scale, T):
+    """LTI plant: response(k·P) == k·response(P)."""
+    poles = thermal.two_pole()
+    tr = jnp.full((T, 1), p0)
+    d1, _ = thermal.simulate(poles, tr)
+    d2, _ = thermal.simulate(poles, tr * scale)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d1) * scale,
+                               rtol=1e-4, atol=1e-4)
+
+
+@short
+@given(st.integers(20, 300), st.integers(1, 4))
+def test_thermal_superposition(T, tiles):
+    """response(P1 + P2) == response(P1) + response(P2)."""
+    key = jax.random.PRNGKey(T)
+    p1 = jax.random.uniform(key, (T, tiles)) * 100
+    p2 = jax.random.uniform(jax.random.fold_in(key, 1), (T, tiles)) * 80
+    poles = thermal.single_pole()
+    a, _ = thermal.simulate(poles, p1)
+    b, _ = thermal.simulate(poles, p2)
+    c, _ = thermal.simulate(poles, p1 + p2)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a + b),
+                               rtol=1e-4, atol=1e-3)
+
+
+@short
+@given(st.floats(1.0, 200.0))
+def test_thermal_bounded_by_steady_state(p0):
+    """ΔT never overshoots Rth·P for a constant input (passive RC plant)."""
+    poles = thermal.two_pole()
+    dts, _ = thermal.simulate(poles, jnp.full((500, 1), p0))
+    assert float(dts.max()) <= float(thermal.steady_state_dt(poles, p0)) + 1e-4
+
+
+@short
+@given(st.floats(1.0, 400.0), st.floats(1.0, 400.0))
+def test_eta_monotone_in_lookahead(a, b):
+    """More look-ahead ⇒ more preposition authority (η monotone)."""
+    lo, hi = sorted((a, b))
+    assert float(pdu_gate.eta(lo)) <= float(pdu_gate.eta(hi)) + 1e-9
+    assert 0.0 <= float(pdu_gate.eta(lo)) < 1.0
+
+
+# ------------------------------------------------------- density chain ----
+@short
+@given(st.floats(0.9, 2.7), st.floats(0.9, 2.7))
+def test_density_chain_monotone(r1, r2):
+    """ρ → R_tok → ΔT → P is strictly increasing on the paper's domain."""
+    lo, hi = sorted((r1, r2))
+    assert float(rtok_from_rho(lo)) <= float(rtok_from_rho(hi)) + 1e-9
+    assert float(dt_from_rho(lo)) <= float(dt_from_rho(hi)) + 1e-7
+    assert float(power_from_rho(lo)) <= float(power_from_rho(hi)) + 1e-7
+    # domain ends hit the published R_tok range
+    np.testing.assert_allclose(float(rtok_from_rho(0.9)), FP.rtok_min_mtps,
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(rtok_from_rho(2.7)), FP.rtok_max_mtps,
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------- coupling Γ -------
+@short
+@given(st.integers(4, 64))
+def test_coupling_matrix_invariants(n):
+    g = np.asarray(coupling.coupling_matrix(n))
+    assert np.allclose(np.diag(g), 1.0)
+    assert np.allclose(g, g.T)
+    assert g.min() >= 0.0 and g.max() <= 1.0
+    # off-diagonal strictly weaker than self-heating
+    off = g - np.eye(n)
+    assert off.max() < 1.0
+
+
+# ------------------------------------------------------- chunked SSD ------
+@short
+@given(st.integers(1, 2), st.sampled_from([32, 64, 128]),
+       st.integers(1, 3), st.sampled_from([8, 16]),
+       st.sampled_from([8, 16]), st.floats(0.6, 0.99),
+       st.booleans(), st.sampled_from([8, 16, 32]))
+def test_ssd_chunk_size_invariance(B, T, H, N, P, dec_min, inc, chunk):
+    """The chunked algorithm must be exact for ANY chunk size."""
+    key = jax.random.PRNGKey(int(dec_min * 1e4) + T + chunk)
+    ks = jax.random.split(key, 4)
+    d = dec_min + (0.999 - dec_min) * jax.random.uniform(ks[0], (B, T, H, N))
+    b = jax.random.normal(ks[1], (B, T, H, N)) * 0.2
+    x = jax.random.normal(ks[2], (B, T, H, P))
+    c = jax.random.normal(ks[3], (B, T, H, N)) * 0.2
+    y1, h1 = ref.chunked_ssd(d, b, x, c, chunk=chunk, include_current=inc)
+    y2, h2 = ref.chunked_ssd(d, b, x, c, chunk=T, include_current=inc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------- gradient compression --------
+@short
+@given(st.floats(1e-4, 1e3), st.integers(0, 5))
+def test_quantize_error_bounded(scale, seed):
+    """int8 quantisation error ≤ scale/2 per element (error-feedback bound)."""
+    g = scale * jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    s = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / s), -127, 127)
+    err = jnp.abs(g - q * s).max()
+    assert float(err) <= float(s) / 2 + 1e-9
+
+
+# ------------------------------------------------------- attention mask ---
+@short
+@given(st.integers(1, 64), st.integers(0, 48))
+def test_attention_window_subset_of_causal(Tq, window):
+    qpos = jnp.arange(Tq)
+    kpos = jnp.arange(Tq)
+    causal = np.asarray(ref._mask(qpos, kpos, True, 0))
+    windowed = np.asarray(ref._mask(qpos, kpos, True, window))
+    assert not (windowed & ~causal).any()       # window ⊂ causal
+    if window:
+        assert windowed.sum(axis=1).max() <= window

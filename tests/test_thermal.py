@@ -1,0 +1,86 @@
+"""Thermal core: fingerprint constants, convolution models, coupling, PDU gate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coupling, pdu_gate, thermal
+from repro.core.fingerprint import FINGERPRINT as FP
+
+
+def test_eta_published_values():
+    """η = 1 − e^(−Δt/τ): 22.12 % @ 20 ms, 46.47 % @ 50 ms (paper §4.2)."""
+    assert float(pdu_gate.eta(20.0)) == pytest.approx(0.2212, abs=2e-4)
+    assert float(pdu_gate.eta(50.0)) == pytest.approx(0.4647, abs=2e-4)
+
+
+def test_step_response_tau():
+    """63.2 % of final value at t = τ (paper §4.1 'Thermal Time Constant')."""
+    poles = thermal.single_pole()
+    sr = thermal.step_response(poles, 1200, power_w=100.0)
+    ss = float(sr[-1])
+    assert ss == pytest.approx(FP.rth_c_per_w * 100.0, rel=1e-3)
+    at_tau = float(sr[int(FP.tau_ms) - 1])
+    assert at_tau / ss == pytest.approx(0.632, abs=0.01)
+
+
+def test_two_pole_partition():
+    """A1 + A2 = Rth (paper §5.2)."""
+    poles = thermal.two_pole()
+    assert float(poles.gain.sum()) == pytest.approx(FP.rth_c_per_w, rel=1e-6)
+    ss = thermal.steady_state_dt(poles, 50.0)
+    assert float(ss) == pytest.approx(0.45 * 50.0, rel=1e-6)
+
+
+def test_scan_matches_direct_convolution():
+    key = jax.random.PRNGKey(3)
+    p = jax.random.uniform(key, (300, 2)) * 120
+    for poles in (thermal.single_pole(), thermal.two_pole(),
+                  thermal.two_pole(emib=True)):
+        dts, _ = thermal.simulate(poles, p)
+        ref = thermal.direct_convolution(poles, p)
+        np.testing.assert_allclose(np.asarray(dts), np.asarray(ref),
+                                   atol=1e-4)
+
+
+def test_coupling_matrix_bands():
+    """Γ structure: diag 1.0; vertical 0.70–0.90; lateral 0.15–0.40;
+    distant ≤ 0.12; zero beyond (paper §5.1)."""
+    g = np.asarray(coupling.coupling_matrix(16, cols=4))
+    assert np.allclose(np.diag(g), 1.0)
+    assert g[0, 1] == pytest.approx(coupling.GAMMA_VERTICAL)
+    assert 0.70 <= g[0, 1] <= 0.90
+    assert 0.15 <= g[0, 5] <= 0.40                  # diagonal = lateral
+    xy = coupling.grid_coords(16, 4)
+    dist = np.abs(xy[:, None] - xy[None, :]).sum(-1)
+    assert np.all(g[dist > 3] == 0.0)
+    assert np.allclose(g, g.T)                      # heat flow is symmetric
+
+
+def test_ponte_vecchio_sparsity():
+    """47 tiles ⇒ 2 209 entries, ~350 significant (paper §5.1)."""
+    g = coupling.ponte_vecchio_gamma()
+    stats = coupling.sparsity_stats(g, threshold=0.12)   # significant pairs
+    assert stats["entries"] == 2209
+    assert 250 <= stats["nonzero"] <= 450                # "~350 non-zero"
+    sig = coupling.sparsity_stats(g, threshold=0.12)
+    assert 3 <= sig["neighbours_mean"] <= 8              # 5–8 per tile
+
+
+def test_filtration_and_prediction():
+    ft = pdu_gate.init_filtration(16, 1, fill=1.0)
+    # feed a ramp; prediction should lead the last sample
+    for i in range(16):
+        ft = pdu_gate.observe(ft, jnp.array([1.0 + 0.05 * i]))
+    ahead = pdu_gate.predict_rho(ft, lookahead_ms=20.0)
+    assert float(ahead[0]) > 1.0 + 0.05 * 15
+
+
+def test_hint_with_coupling():
+    gamma = coupling.coupling_matrix(4)
+    ft = pdu_gate.init_filtration(8, 4, fill=1.8)
+    h = pdu_gate.hint(ft, gamma, lookahead_ms=35.0)
+    assert h.shape == (4,)
+    # coupled hint ≥ self-only power (Γ row sums > 1)
+    h0 = pdu_gate.hint(ft, None, lookahead_ms=35.0)
+    assert float(h.min()) >= float(h0.min())
