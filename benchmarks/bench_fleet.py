@@ -1,0 +1,82 @@
+"""Fleet engine throughput: one batched step vs. a per-package Python loop.
+
+The acceptance bar for fleet mode: at 256 packages the vmapped/jitted
+`FleetEngine.step` must be ≥5× the throughput of looping a jitted
+`ThermalScheduler.update` over the packages one at a time (the loop pays
+256 dispatches + per-package host sync; the fleet engine pays one).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+from repro.fleet import FleetEngine
+
+N_PACKAGES = 256
+N_TILES = 4
+STEPS = 8
+
+
+def _rho_trace(key) -> jnp.ndarray:
+    return 0.9 + 1.8 * jax.random.uniform(key, (STEPS, N_PACKAGES, N_TILES))
+
+
+def run() -> None:
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24")
+    key = jax.random.PRNGKey(0)
+    trace = jax.block_until_ready(_rho_trace(key))
+
+    # --- batched fleet engine (vmap backend) ------------------------------
+    eng = FleetEngine(cfg, backend="vmap")
+
+    def fleet_steps():
+        st = eng.init(N_PACKAGES)
+        for i in range(STEPS):
+            st, out, _ = eng.step(st, trace[i])
+        return out.freq
+
+    _, us_fleet = timed(fleet_steps)
+
+    # --- broadcast backend (batch-shaped state, no vmap) ------------------
+    eng_b = FleetEngine(cfg, backend="broadcast")
+
+    def fleet_steps_broadcast():
+        st = eng_b.init(N_PACKAGES)
+        for i in range(STEPS):
+            st, out, _ = eng_b.step(st, trace[i])
+        return out.freq
+
+    _, us_bcast = timed(fleet_steps_broadcast)
+
+    # --- sequential per-package loop (jitted update, one call per pkg) ----
+    sched = ThermalScheduler(cfg)
+    upd = jax.jit(sched.update)
+
+    def seq_steps():
+        states = [sched.init() for _ in range(N_PACKAGES)]
+        for i in range(STEPS):
+            for p in range(N_PACKAGES):
+                states[p], out = upd(states[p], trace[i, p])
+        jax.block_until_ready(out.freq)
+        return out.freq
+
+    _, us_seq = timed(seq_steps, warmup=1, iters=1)
+
+    pkg_steps = N_PACKAGES * STEPS
+    speedup = us_seq / us_fleet
+    row("fleet.vmap_256", us_fleet / STEPS,
+        f"pkg_steps_per_s={pkg_steps / (us_fleet / 1e6):.0f}")
+    row("fleet.broadcast_256", us_bcast / STEPS,
+        f"pkg_steps_per_s={pkg_steps / (us_bcast / 1e6):.0f}")
+    row("fleet.sequential_256", us_seq / STEPS,
+        f"pkg_steps_per_s={pkg_steps / (us_seq / 1e6):.0f}")
+    row("fleet.speedup", 0.0, f"vmap_vs_seq={speedup:.1f}x(need>=5)")
+    assert speedup >= 5.0, f"fleet speedup {speedup:.1f}x below 5x bar"
+
+
+if __name__ == "__main__":
+    run()

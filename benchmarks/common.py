@@ -1,9 +1,16 @@
-"""Shared benchmark plumbing: timing + CSV row emission."""
+"""Shared benchmark plumbing: timing + CSV row emission.
+
+Rows are also accumulated in ``ROWS`` so the harness (`benchmarks.run`)
+can drain them into a machine-readable ``--json`` artifact for CI.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+
+# drained (and cleared) per bench module by benchmarks.run
+ROWS: list[dict] = []
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
@@ -20,4 +27,5 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
 def row(name: str, us: float, derived: str) -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line)
+    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     return line

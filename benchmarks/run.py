@@ -1,15 +1,21 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §5).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fingerprint,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fingerprint,...] \
+        [--json bench.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  With ``--json`` the same
+rows plus per-module status/timing are written as a machine-readable
+artifact (CI uploads it).  Exits nonzero if any bench module fails.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import time
+
+from benchmarks import common
 
 MODULES = [
     "bench_fingerprint",     # §4.1 fingerprint constants table
@@ -26,6 +32,7 @@ MODULES = [
     "bench_kernels",         # Pallas kernels vs refs
     "bench_roofline",        # deliverable g snapshot + §Perf deltas
     "bench_stragglers",      # beyond-paper: thermal straggler mitigation
+    "bench_fleet",           # fleet-scale batched scheduler engine
 ]
 
 
@@ -33,24 +40,44 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench suffixes to run")
+    ap.add_argument("--json", default="",
+                    help="write a machine-readable result artifact here")
     args = ap.parse_args()
     only = {f"bench_{s.strip()}" for s in args.only.split(",") if s.strip()}
+    unknown = only - set(MODULES)
+    if unknown:  # a typo'd --only must not silently pass CI
+        ap.error(f"unknown bench modules: {sorted(unknown)}")
 
     print("name,us_per_call,derived")
-    failures = []
+    results, failures = [], []
     for name in MODULES:
         if only and name not in only:
             continue
         t0 = time.time()
+        common.ROWS.clear()
+        err = None
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.run()
         except Exception as e:  # noqa: BLE001
-            failures.append((name, repr(e)))
-            print(f"{name}.FAILED,0.0,{e!r}", file=sys.stderr)
-        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+            err = repr(e)
+            failures.append((name, err))
+            print(f"{name}.FAILED,0.0,{err}", file=sys.stderr)
+        seconds = time.time() - t0
+        results.append({"module": name,
+                        "status": "failed" if err else "ok",
+                        "seconds": round(seconds, 2),
+                        "error": err,
+                        "rows": list(common.ROWS)})
+        print(f"# {name} took {seconds:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"ok": not failures, "results": results}, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+        print(f"benchmark failures: {failures}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -59,6 +59,15 @@ def coupling_matrix(n_tiles: int, cols: int | None = None,
     return jnp.asarray(g, dtype=dtype)
 
 
+def apply_coupling(gamma: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Γ @ p over the trailing tile axis, tolerating leading batch dims.
+
+    p: [..., n_tiles] → [..., n_tiles].  The plain ``gamma @ p`` spelling is
+    only correct for 1-D p; fleet-batched powers need the einsum contraction.
+    """
+    return jnp.einsum("ij,...j->...i", gamma, p)
+
+
 def sparsity_stats(gamma: jnp.ndarray, threshold: float = 0.0) -> dict:
     """Non-zero census, reproducing the paper's Ponte-Vecchio sparsity claim."""
     g = np.asarray(gamma)

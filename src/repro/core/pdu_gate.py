@@ -31,27 +31,40 @@ def eta(lookahead_ms, tau_ms: float | None = None) -> jnp.ndarray:
 
 
 class Filtration(NamedTuple):
-    """Ring buffer Ft of per-tile density history. buf: [window, n_tiles]."""
+    """Ring buffer Ft of per-tile density history. buf: [*batch, window, n_tiles].
+
+    The window axis is always ``-2`` so fleet-scale leading batch dimensions
+    (one ring per package, stepped in lockstep) ride through every op below.
+    ``ptr`` is the scalar next-write slot shared across the batch; under
+    ``jax.vmap`` it is carried per-lane instead, and both layouts work.
+    """
 
     buf: jnp.ndarray
     ptr: jnp.ndarray  # scalar int32 — next write slot
 
 
-def init_filtration(window: int, n_tiles: int, fill: float = 0.0) -> Filtration:
-    return Filtration(buf=jnp.full((window, n_tiles), fill),
+def init_filtration(window: int, n_tiles: int, fill: float = 0.0,
+                    batch_shape: tuple[int, ...] = ()) -> Filtration:
+    return Filtration(buf=jnp.full(batch_shape + (window, n_tiles), fill),
                       ptr=jnp.zeros((), jnp.int32))
 
 
 def observe(ft: Filtration, rho: jnp.ndarray) -> Filtration:
-    """Push one density sample (per tile) into the filtration."""
-    buf = jax.lax.dynamic_update_index_in_dim(ft.buf, rho, ft.ptr, axis=0)
-    return Filtration(buf=buf, ptr=(ft.ptr + 1) % ft.buf.shape[0])
+    """Push one density sample (per tile, per batch lane) into the filtration.
+
+    rho: [..., n_tiles] matching the filtration's batch shape.
+    """
+    window_axis = ft.buf.ndim - 2
+    buf = jax.lax.dynamic_update_index_in_dim(ft.buf, rho, ft.ptr,
+                                              axis=window_axis)
+    return Filtration(buf=buf, ptr=(ft.ptr + 1) % ft.buf.shape[window_axis])
 
 
 def _ordered(ft: Filtration) -> jnp.ndarray:
-    """History oldest→newest along axis 0."""
-    idx = (ft.ptr + jnp.arange(ft.buf.shape[0])) % ft.buf.shape[0]
-    return ft.buf[idx]
+    """History oldest→newest along the window axis (-2)."""
+    w = ft.buf.shape[-2]
+    idx = (ft.ptr + jnp.arange(w)) % w
+    return jnp.take(ft.buf, idx, axis=-2)
 
 
 def predict_rho(ft: Filtration, lookahead_ms: float,
@@ -62,12 +75,13 @@ def predict_rho(ft: Filtration, lookahead_ms: float,
     over the full window (the V7.0 derivative hint).  Clipped to the paper's
     density domain so an extrapolated ramp cannot exit physical range.
     """
-    hist = _ordered(ft)                       # [W, n_tiles]
-    w = hist.shape[0]
+    hist = _ordered(ft)                       # [..., W, n_tiles]
+    w = hist.shape[-2]
     t = jnp.arange(w, dtype=hist.dtype)
-    tm, hm = t.mean(), hist.mean(axis=0)
-    slope = ((t - tm)[:, None] * (hist - hm)).sum(0) / ((t - tm) ** 2).sum()
-    recent = hist[-max(w // 4, 1):].mean(axis=0)
+    tm, hm = t.mean(), hist.mean(axis=-2, keepdims=True)
+    tc = (t - tm)[:, None]                    # [W, 1] — broadcasts over batch
+    slope = (tc * (hist - hm)).sum(-2) / ((t - tm) ** 2).sum()
+    recent = hist[..., -max(w // 4, 1):, :].mean(axis=-2)
     ahead = lookahead_ms / dt_ms
     return jnp.clip(recent + slope * ahead,
                     0.0, 1.5 * FINGERPRINT.rho_max)
@@ -79,7 +93,8 @@ def hint(ft: Filtration, gamma: jnp.ndarray | None,
 
     The scalar-Γ V24 form is the ``gamma=None`` case.
     """
+    from repro.core.coupling import apply_coupling
     from repro.core.density import power_from_rho
 
     p_ahead = power_from_rho(predict_rho(ft, lookahead_ms, dt_ms))
-    return p_ahead if gamma is None else gamma @ p_ahead
+    return p_ahead if gamma is None else apply_coupling(gamma, p_ahead)

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pdu_gate, thermal
-from repro.core.coupling import coupling_matrix
+from repro.core.coupling import apply_coupling, coupling_matrix
 from repro.core.density import power_from_rho
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
 
@@ -44,20 +44,23 @@ class SchedulerConfig:
 
 
 class SchedulerState(NamedTuple):
-    thermal: jnp.ndarray            # [n_tiles, n_poles]
+    """All array leaves tolerate leading batch dims ([*batch, ...]) so one
+    state can carry an entire fleet of packages stepped in lockstep."""
+
+    thermal: jnp.ndarray            # [..., n_tiles, n_poles]
     filtration: pdu_gate.Filtration
-    freq: jnp.ndarray               # [n_tiles]
+    freq: jnp.ndarray               # [..., n_tiles]
     step: jnp.ndarray               # scalar int32
-    events: jnp.ndarray             # scalar int32 — T_crit crossings (want 0)
+    events: jnp.ndarray             # [...] int32 — T_crit crossings (want 0)
 
 
 class SchedulerOutput(NamedTuple):
-    freq: jnp.ndarray               # [n_tiles] frequency multiplier this step
-    temp_c: jnp.ndarray             # [n_tiles] junction temperature
-    hint_w: jnp.ndarray             # [n_tiles] H(t) pre-position hint [W]
+    freq: jnp.ndarray               # [..., n_tiles] frequency multiplier this step
+    temp_c: jnp.ndarray             # [..., n_tiles] junction temperature
+    hint_w: jnp.ndarray             # [..., n_tiles] H(t) pre-position hint [W]
     eta: jnp.ndarray                # scalar preposition fraction
-    at_risk: jnp.ndarray            # [n_tiles] bool straggler-risk flags
-    balance: jnp.ndarray            # [n_tiles] work-rebalance weights (sum=1)
+    at_risk: jnp.ndarray            # [..., n_tiles] bool straggler-risk flags
+    balance: jnp.ndarray            # [..., n_tiles] work-rebalance weights (sum=1)
 
 
 class ThermalScheduler:
@@ -80,30 +83,37 @@ class ThermalScheduler:
         self.eta = 1.0 - math.exp(-cfg.lookahead_ms / fp.tau_ms)
 
     # ------------------------------------------------------------------ api
-    def init(self) -> SchedulerState:
+    def init(self, batch_shape: tuple[int, ...] = ()) -> SchedulerState:
+        """Fresh state; ``batch_shape`` prepends fleet/package dimensions.
+
+        Batched states share the scalar step/ptr counters (packages step in
+        lockstep) while thermal, filtration and frequency are per-package.
+        """
         c = self.cfg
         return SchedulerState(
-            thermal=thermal.init_state(self.poles, c.n_tiles),
+            thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
             filtration=pdu_gate.init_filtration(c.filtration_window, c.n_tiles,
-                                                fill=self.fp.rho_min),
-            freq=jnp.ones((c.n_tiles,)),
+                                                fill=self.fp.rho_min,
+                                                batch_shape=batch_shape),
+            freq=jnp.ones(batch_shape + (c.n_tiles,)),
             step=jnp.zeros((), jnp.int32),
-            events=jnp.zeros((), jnp.int32),
+            events=jnp.zeros(batch_shape, jnp.int32),
         )
 
     def update(self, st: SchedulerState,
                rho: jnp.ndarray) -> tuple[SchedulerState, SchedulerOutput]:
-        """Advance one step.  rho: [n_tiles] density of the work just scheduled."""
+        """Advance one step.  rho: [..., n_tiles] density of the work just
+        scheduled; leading dims (if any) must match the state's batch shape."""
         c, fp = self.cfg, self.fp
-        rho = jnp.broadcast_to(jnp.asarray(rho), (c.n_tiles,))
+        rho = jnp.broadcast_to(jnp.asarray(rho), st.freq.shape)
         ft = pdu_gate.observe(st.filtration, rho)
 
         hint = pdu_gate.hint(ft, self.gamma, c.lookahead_ms, c.step_ms)
         # instantaneous load floors the hint: prediction buys lead time,
         # never permission to exceed budget on a mispredicted onset
         p_now = power_from_rho(rho)
-        hint = jnp.maximum(hint,
-                           p_now if self.gamma is None else self.gamma @ p_now)
+        hint = jnp.maximum(hint, p_now if self.gamma is None
+                           else apply_coupling(self.gamma, p_now))
         dt_now = thermal.delta_t(st.thermal)
         t_allow = fp.t_crit_c - c.t_safe_margin_c - fp.t_ambient_c
         gain_sum = self.poles.gain.sum()
@@ -125,7 +135,7 @@ class ThermalScheduler:
                 # oscillation of the per-tile fixed point.
                 gd = jnp.diagonal(self.gamma)
                 p_prev = p_now * st.freq ** c.power_exponent
-                neigh = self.gamma @ p_prev - gd * p_prev
+                neigh = apply_coupling(self.gamma, p_prev) - gd * p_prev
                 f_cpl = jnp.clip(
                     (jnp.maximum(budget - neigh, 1e-6)
                      / jnp.maximum(gd * p_now, 1e-3))
@@ -137,16 +147,16 @@ class ThermalScheduler:
             freq = jnp.where(hot, fp.throttle_floor,
                              jnp.minimum(st.freq + 0.1, 1.0))
         else:  # off — uncontrolled
-            freq = jnp.ones((c.n_tiles,))
+            freq = jnp.ones_like(st.freq)
 
         p = power_from_rho(rho) * freq ** c.power_exponent
-        p_eff = p if self.gamma is None else self.gamma @ p
+        p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
         thermal_next = thermal.step(self.poles, st.thermal, p_eff)
         temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
-        events = st.events + jnp.any(temp > fp.t_crit_c).astype(jnp.int32)
+        events = st.events + jnp.any(temp > fp.t_crit_c, axis=-1).astype(jnp.int32)
 
         at_risk = freq < c.straggler_threshold
-        balance = freq / jnp.maximum(freq.sum(), 1e-6)
+        balance = freq / jnp.maximum(freq.sum(axis=-1, keepdims=True), 1e-6)
 
         out = SchedulerOutput(freq=freq, temp_c=temp, hint_w=hint,
                               eta=jnp.asarray(self.eta), at_risk=at_risk,

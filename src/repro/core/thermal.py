@@ -53,15 +53,26 @@ def two_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0,
     return PoleParams(decay=a, gain=jnp.array([fp.a1, fp.a2]))
 
 
-def init_state(poles: PoleParams, n_tiles: int = 1) -> jnp.ndarray:
-    """Zero thermal state: [n_tiles, n_poles] pole temperatures (ΔT °C)."""
-    return jnp.zeros((n_tiles, poles.decay.shape[0]))
+def init_state(poles: PoleParams, n_tiles: int = 1,
+               batch_shape: tuple[int, ...] = ()) -> jnp.ndarray:
+    """Zero thermal state: [*batch, n_tiles, n_poles] pole temperatures (ΔT °C).
+
+    ``batch_shape`` prepends fleet/package dimensions (fleet engine); the
+    update math below is written against trailing axes so any number of
+    leading batch dims rides through unchanged.
+    """
+    return jnp.zeros(batch_shape + (n_tiles, poles.decay.shape[0]))
 
 
 def step(poles: PoleParams, state: jnp.ndarray, power_w: jnp.ndarray) -> jnp.ndarray:
-    """One dt tick of the pole bank.  power_w: [n_tiles] effective (Γ-coupled) power."""
-    return (poles.decay[None, :] * state
-            + (1.0 - poles.decay)[None, :] * poles.gain[None, :] * power_w[:, None])
+    """One dt tick of the pole bank.
+
+    power_w: [..., n_tiles] effective (Γ-coupled) power; state
+    [..., n_tiles, n_poles].  Broadcasting is against the trailing pole
+    axis only, so arbitrary leading batch dimensions are supported.
+    """
+    return (poles.decay * state
+            + (1.0 - poles.decay) * poles.gain * power_w[..., None])
 
 
 def delta_t(state: jnp.ndarray) -> jnp.ndarray:

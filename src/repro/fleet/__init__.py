@@ -1,0 +1,4 @@
+"""Fleet-scale batched scheduler engine (thousands of packages per step)."""
+from repro.fleet.engine import FleetEngine, FleetTelemetry
+
+__all__ = ["FleetEngine", "FleetTelemetry"]

@@ -1,0 +1,142 @@
+"""FleetEngine — batched thermal scheduling for fleets of 3.5D packages.
+
+The paper's V7.0 framework controls ONE N×N-coupled multi-tile package; a
+production deployment schedules thousands of independent packages at once.
+Because `ThermalScheduler.update` is pure JAX and (after the batch-dim
+refactor) tolerant of leading batch dimensions, a whole fleet advances in a
+single jitted step: either `jax.vmap` over a per-package state axis
+(``backend="vmap"``) or direct broadcasting over batch-shaped state arrays
+(``backend="broadcast"``).  Both are numerically identical to a Python loop
+of per-package `update` calls — see ``tests/test_fleet.py`` — but amortise
+dispatch/compile over the fleet (see ``benchmarks/bench_fleet.py``).
+
+    eng = FleetEngine(SchedulerConfig(n_tiles=4, mode="v24"))
+    state = eng.init(n_packages=1024)
+    state, out, telem = eng.step(state, rho)     # rho: [1024, 4]
+    print(telem.as_dict())   # events, p50/p99 junction temp, released MTPS
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.density import rtok_from_rho
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+from repro.core.scheduler import (SchedulerConfig, SchedulerOutput,
+                                  SchedulerState, ThermalScheduler)
+
+
+class FleetTelemetry(NamedTuple):
+    """Aggregate fleet health for one step (all leaves are jnp scalars)."""
+
+    n_packages: jnp.ndarray      # int32
+    events_total: jnp.ndarray    # cumulative T_crit crossings, fleet-wide
+    events_step: jnp.ndarray     # crossings added this step
+    temp_p50_c: jnp.ndarray      # fleet junction-temperature percentiles
+    temp_p99_c: jnp.ndarray
+    temp_max_c: jnp.ndarray
+    freq_mean: jnp.ndarray       # mean frequency multiplier
+    freq_min: jnp.ndarray
+    released_mtps: jnp.ndarray   # Σ R_tok(ρ)·f — compute actually released
+    throttled_mtps: jnp.ndarray  # Σ R_tok(ρ)·(1−f) — compute held back
+    at_risk_frac: jnp.ndarray    # fraction of tiles under straggler threshold
+
+    def as_dict(self) -> dict[str, float]:
+        """Host-side scalar dict (forces a device sync)."""
+        return {k: float(v) for k, v in self._asdict().items()}
+
+
+class FleetEngine:
+    """Pure-functional fleet stepper around one `ThermalScheduler` config."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+                 fp: Fingerprint = FINGERPRINT, backend: str = "vmap"):
+        if backend not in ("vmap", "broadcast"):
+            raise ValueError(f"unknown fleet backend {backend!r}")
+        self.cfg = cfg
+        self.fp = fp
+        self.backend = backend
+        self.sched = ThermalScheduler(cfg, fp)
+        self._step = jax.jit(self._step_impl)
+        self._run = jax.jit(self._run_impl)
+
+    # ------------------------------------------------------------------ api
+    def init(self, n_packages: int) -> SchedulerState:
+        """Fleet state with a leading [n_packages] axis on every per-package
+        leaf.  The vmap backend carries the step/ptr counters per lane (vmap
+        maps every leaf); the broadcast backend shares them (lockstep)."""
+        if self.backend == "vmap":
+            base = self.sched.init()
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_packages,) + x.shape), base)
+        return self.sched.init(batch_shape=(n_packages,))
+
+    def step(self, state: SchedulerState, rho) -> tuple[
+            SchedulerState, SchedulerOutput, FleetTelemetry]:
+        """Advance the whole fleet one step in a single jitted call.
+
+        rho: scalar, [n_packages], or [n_packages, n_tiles] workload density.
+        """
+        return self._step(state, self._rho_fleet(state, rho))
+
+    def run(self, state: SchedulerState, rho_trace) -> tuple[
+            SchedulerState, FleetTelemetry]:
+        """`lax.scan` the fleet over a [T, n_packages, n_tiles] density trace;
+        returns final state + stacked per-step telemetry ([T]-leaved)."""
+        return self._run(state, rho_trace)
+
+    # ------------------------------------------------------------- internals
+    def _rho_fleet(self, state: SchedulerState, rho) -> jnp.ndarray:
+        n = state.freq.shape[0]
+        rho = jnp.asarray(rho, state.freq.dtype)
+        if rho.ndim == 1:            # per-package scalar density
+            rho = rho[:, None]
+        return jnp.broadcast_to(rho, (n, self.cfg.n_tiles))
+
+    def _update_fleet(self, state: SchedulerState, rho: jnp.ndarray):
+        if self.backend == "vmap":
+            return jax.vmap(self.sched.update)(state, rho)
+        return self.sched.update(state, rho)
+
+    def _step_impl(self, state: SchedulerState, rho: jnp.ndarray):
+        prev_events = state.events.sum()
+        state, out = self._update_fleet(state, rho)
+        rtok = rtok_from_rho(rho)                    # [n_packages, n_tiles]
+        telem = FleetTelemetry(
+            n_packages=jnp.asarray(state.freq.shape[0], jnp.int32),
+            events_total=state.events.sum(),
+            events_step=state.events.sum() - prev_events,
+            temp_p50_c=jnp.percentile(out.temp_c, 50.0),
+            temp_p99_c=jnp.percentile(out.temp_c, 99.0),
+            temp_max_c=out.temp_c.max(),
+            freq_mean=out.freq.mean(),
+            freq_min=out.freq.min(),
+            released_mtps=(rtok * out.freq).sum(),
+            throttled_mtps=(rtok * (1.0 - out.freq)).sum(),
+            at_risk_frac=out.at_risk.mean(),
+        )
+        return state, out, telem
+
+    def _run_impl(self, state: SchedulerState, rho_trace: jnp.ndarray):
+        def tick(st, rho):
+            st, _, telem = self._step_impl(st, rho)
+            return st, telem
+        return jax.lax.scan(tick, state, rho_trace)
+
+
+def sequential_step(sched: ThermalScheduler, states: list[SchedulerState],
+                    rho: jnp.ndarray) -> tuple[list[SchedulerState],
+                                               list[SchedulerOutput]]:
+    """Per-package Python-loop reference: one `update` call per package.
+
+    This is the baseline the fleet engine is benchmarked and verified
+    against.  rho: [n_packages, n_tiles].
+    """
+    nxt, outs = [], []
+    for i, st in enumerate(states):
+        st, out = sched.update(st, rho[i])
+        nxt.append(st)
+        outs.append(out)
+    return nxt, outs

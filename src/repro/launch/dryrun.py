@@ -28,7 +28,7 @@ import jax.numpy as jnp    # noqa: E402
 from repro.configs import ALL_ARCHS, SHAPES, get_arch, get_shape, live_cells  # noqa: E402
 from repro.distributed import sharding as shd           # noqa: E402
 from repro.launch import hlo_census, roofline, steps    # noqa: E402
-from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.mesh import make_mesh_compat, make_production_mesh  # noqa: E402
 
 
 def _mem_dict(ma) -> dict:
@@ -71,12 +71,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if opts["tp"] is not None:
         tp = opts["tp"]
         if multi_pod:
-            mesh = jax.make_mesh((2, 256 // tp, tp),
-                                 ("pod", "data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 3)
+            mesh = make_mesh_compat((2, 256 // tp, tp), ("pod", "data", "model"))
         else:
-            mesh = jax.make_mesh((256 // tp, tp), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh_compat((256 // tp, tp), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_tiles = mesh.devices.size

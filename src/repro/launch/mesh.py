@@ -9,19 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """`jax.make_mesh` across jax versions: `axis_types`/`AxisType` only
+    exist in newer releases, and 0.4.x defaults to the same Auto axes."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4, pod: int = 0):
     """Small mesh for unit tests (requires xla_force_host_platform_device_count
     set in the test's subprocess environment)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh_compat((pod, data, model), ("pod", "data", "model"))
+    return make_mesh_compat((data, model), ("data", "model"))

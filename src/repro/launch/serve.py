@@ -8,6 +8,13 @@ cache.  The V24 scheduler runs host-side between decode batches: its
 pre-positioning hint throttles ADMISSION (batch size of the next wave)
 instead of frequency — the serving-side analogue of Effect ①, keeping the
 P99 token latency envelope smooth (paper §3.1 / §8.1).
+
+``--fleet N`` (N > 1) switches on fleet mode: this host serves package 0
+while the `FleetEngine` advances all N packages' schedulers in one jitted,
+batched step per wave (each package sees the base density plus per-package
+load jitter).  Admission still follows package 0's frequency; fleet-wide
+telemetry (events, p50/p99 junction temp, released MTPS) is printed per
+wave — the single-host stand-in for a datacenter-scale control plane.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeConfig
 from repro.core.density import rho_v24
 from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+from repro.fleet import FleetEngine
 from repro.launch import steps as S
 from repro.models import transformer as tf
 
@@ -35,6 +43,8 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--waves", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="simulate N packages; >1 enables batched fleet mode")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -47,17 +57,39 @@ def main(argv=None):
     prefill_fn = jax.jit(S.make_prefill_step(cfg, max_seq))
     decode_fn = jax.jit(S.make_decode_step(cfg))
 
-    sched = ThermalScheduler(SchedulerConfig(n_tiles=1, mode="v24",
-                                             step_ms=5.0))
-    sst = sched.init()
+    sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0)
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 
-    lat, admitted_hist = [], []
+    fleet = None
+    if args.fleet > 1:
+        # one batched step advances every package; this host serves pkg 0
+        fleet = FleetEngine(sched_cfg)
+        fst = fleet.init(args.fleet)
+        # deterministic per-package load jitter around the base density
+        jitter = 0.15 * jax.random.normal(jax.random.fold_in(key, 7777),
+                                          (args.fleet,))
+    else:
+        sched = ThermalScheduler(sched_cfg)
+        sst = sched.init()
+
+    lat, admitted_hist, fleet_telem = [], [], []
     for wave in range(args.waves):
         # --- thermal admission control -----------------------------------
-        sst, out = sched.update(sst, jnp.full((1,), rho))
-        admit = max(1, int(args.batch * float(out.freq[0])))
+        if fleet is not None:
+            rho_fleet = jnp.clip(rho + jitter * (1 + wave % 3), 0.9, 2.7)
+            fst, out, telem = fleet.step(fst, rho_fleet)
+            d = telem.as_dict()
+            fleet_telem.append(d)
+            freq0 = float(out.freq[0, 0])
+            print(f"[fleet] wave {wave}: n={args.fleet} "
+                  f"p50 {d['temp_p50_c']:.1f}C p99 {d['temp_p99_c']:.1f}C "
+                  f"events {int(d['events_total'])} "
+                  f"released {d['released_mtps']:.1f} MTPS")
+        else:
+            sst, out = sched.update(sst, jnp.full((1,), rho))
+            freq0 = float(out.freq[0])
+        admit = max(1, int(args.batch * freq0))
         admitted_hist.append(admit)
 
         prompts = jax.random.randint(jax.random.fold_in(key, wave),
@@ -91,11 +123,19 @@ def main(argv=None):
               f"prefill {t_prefill*1e3:.1f} ms, "
               f"decode p50 {np.percentile(lat, 50)*1e3:.2f} ms "
               f"p99 {np.percentile(lat, 99)*1e3:.2f} ms, "
-              f"T {float(out.temp_c[0]):.1f}C")
+              f"T {float(out.temp_c.ravel()[0]):.1f}C")
     p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
     print(f"[serve] done: p50 {p50*1e3:.2f} ms, p99 {p99*1e3:.2f} ms, "
           f"p99/p50 {p99/max(p50,1e-9):.2f}, admissions {admitted_hist}")
-    return {"p50": p50, "p99": p99, "admitted": admitted_hist}
+    result = {"p50": p50, "p99": p99, "admitted": admitted_hist}
+    if fleet_telem:
+        result["fleet"] = fleet_telem
+        last = fleet_telem[-1]
+        print(f"[fleet] final: events {int(last['events_total'])}, "
+              f"p99 {last['temp_p99_c']:.1f}C, "
+              f"released {last['released_mtps']:.1f} MTPS "
+              f"(throttled {last['throttled_mtps']:.1f})")
+    return result
 
 
 if __name__ == "__main__":

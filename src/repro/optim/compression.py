@@ -19,6 +19,17 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """`shard_map` across jax versions (top-level `jax.shard_map`/`check_vma`
+    landed after 0.4.x, which has the experimental module and `check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 class CompressionState(NamedTuple):
     error: Any          # pytree of residual buffers, congruent with grads
 
@@ -58,9 +69,7 @@ def compressed_allreduce(local_grads, state: CompressionState, mesh,
             return mean, err
 
         spec = P(*([None] * g.ndim))
-        return jax.shard_map(inner, mesh=mesh,
-                             in_specs=(spec, spec), out_specs=(spec, spec),
-                             check_vma=False)(g, e)
+        return _shard_map(inner, mesh, (spec, spec), (spec, spec))(g, e)
 
     flat_g, tdef = jax.tree.flatten(local_grads)
     flat_e = tdef.flatten_up_to(state.error)

@@ -22,7 +22,10 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _abstract_mesh(shape, names):
-    return jax.sharding.AbstractMesh(shape, names)
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, names)
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
 
 @pytest.mark.parametrize("arch", sorted(ALL_ARCHS))

@@ -65,7 +65,10 @@ def test_microbatch_grads_equal_full_batch():
 def test_eponly_specs_replicate_attention_over_model():
     from repro.distributed import sharding as shd
     cfg = ALL_ARCHS["deepseek-v2-236b"]
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:  # jax >= 0.5 signature; 0.4.x wants ((name, size), ...) pairs
+        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        mesh = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
     params = jax.eval_shape(lambda k: tf.init_params(k, cfg),
                             jax.ShapeDtypeStruct((2,), jnp.uint32))
     specs = shd.param_specs(cfg, params, mesh, tp_attention=False)
