@@ -1,28 +1,150 @@
-"""Fleet engine throughput: one batched step vs. a per-package Python loop.
+"""Fleet engine throughput: backends, device scaling, streaming ingest.
 
-The acceptance bar for fleet mode: at 256 packages the vmapped/jitted
-`FleetEngine.step` must be ≥5× the throughput of looping a jitted
-`ThermalScheduler.update` over the packages one at a time (the loop pays
-256 dispatches + per-package host sync; the fleet engine pays one).
+Acceptance bars:
+  * at 256 packages the batched `FleetEngine.step` must be ≥5× the
+    throughput of looping a jitted `ThermalScheduler.update` per package
+    (the loop pays 256 dispatches + per-package host sync; the fleet pays
+    one);
+  * the sharded backend on a single device must be within 5% of (or faster
+    than) vmap — on a 1-mesh, shard_map must cost nothing;
+  * released-MTPS capacity scales with emulated device count (weak scaling:
+    128 packages per device, subprocesses with
+    XLA_FLAGS=--xla_force_host_platform_device_count);
+  * the streaming ingest loop sustains a 90 000-step trace end-to-end with
+    EXACTLY one host sync per telemetry flush interval.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.scheduler import SchedulerConfig, ThermalScheduler
-from repro.fleet import FleetEngine
+from repro.fleet import FleetEngine, stream
 
 N_PACKAGES = 256
 N_TILES = 4
 STEPS = 8
 
+STREAM_STEPS = 90_000          # the paper's Appendix-B trace length
+STREAM_PACKAGES = 32
+STREAM_FLUSH = 1_000
+
 
 def _rho_trace(key) -> jnp.ndarray:
     return 0.9 + 1.8 * jax.random.uniform(key, (STEPS, N_PACKAGES, N_TILES))
+
+
+def _backend_steps(eng, trace):
+    def go():
+        st = eng.init(N_PACKAGES)
+        for i in range(STEPS):
+            st, out, _ = eng.step(st, trace[i])
+        return out.freq
+    return go
+
+
+_SCALE_CODE = """
+    import numpy as np, jax, jax.numpy as jnp, time
+    from repro.core.scheduler import SchedulerConfig
+    from repro.fleet import FleetEngine
+
+    NDEV, PER_DEV, STEPS = {ndev}, 128, 64
+    n = NDEV * PER_DEV
+    eng = FleetEngine(SchedulerConfig(n_tiles=4, mode="v24"),
+                      backend="sharded", devices=NDEV)
+    assert eng.backend_impl.n_devices() == NDEV
+    trace = 0.9 + 1.8 * jax.random.uniform(jax.random.PRNGKey(0),
+                                           (STEPS, n, 4))
+    st = eng.init(n)
+    # the fleet really is partitioned: one package shard per device
+    assert len(st.freq.sharding.device_set) == NDEV
+    st, telem = eng.run_block(st, trace)          # warm (compile)
+    jax.block_until_ready(telem)
+    t0 = time.perf_counter()
+    st, telem = eng.run_block(st, trace)
+    d = telem.as_dict()
+    dt = time.perf_counter() - t0
+    print(f"RESULT {{d['released_mtps']:.1f}} {{STEPS * n / dt:.0f}}")
+"""
+
+
+def _sharded_scaling() -> None:
+    """Weak scaling over emulated devices: 128 packages per device, so fleet
+    capacity (released MTPS) must track the mesh size — PROVIDED the state
+    really partitions (asserted inside the subprocess via the sharding's
+    device_set; without that check the MTPS growth would hold by
+    construction).  Wall-clock pkg_steps_per_s is reported but not gated:
+    emulated devices share the host's cores, so timing scaling is too noisy
+    for CI.  Subprocesses keep the parent single-device."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    released = {}
+    for ndev in (1, 2, 4):
+        env = dict(os.environ, PYTHONPATH=src,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_SCALE_CODE.format(ndev=ndev))],
+            capture_output=True, text=True, env=env, timeout=540)
+        assert out.returncode == 0, out.stderr[-2000:]
+        mtps, rate = out.stdout.strip().split()[-2:]
+        released[ndev] = float(mtps)
+        row(f"fleet.sharded_scale_dev{ndev}", 0.0,
+            f"released_mtps={float(mtps):.0f};pkg_steps_per_s={rate}")
+    assert released[2] > 1.5 * released[1], released
+    assert released[4] > 1.5 * released[2], released
+
+
+def _streaming_90k(cfg) -> None:
+    """Streaming ingest over the Appendix-B-scale 90k-step trace: the sync
+    contract (1 host sync per flush window) must hold end-to-end."""
+    eng = FleetEngine(cfg, backend="broadcast")
+    rng = np.random.default_rng(0)
+
+    def source():
+        for _ in range(STREAM_STEPS // STREAM_FLUSH):
+            yield (0.9 + 1.8 * rng.random(
+                (STREAM_FLUSH, STREAM_PACKAGES, N_TILES))).astype(np.float32)
+
+    st = eng.init(STREAM_PACKAGES)
+    # warm the run_block compile outside the timed region
+    st_w, _ = eng.run_block(eng.init(STREAM_PACKAGES),
+                            jnp.zeros((STREAM_FLUSH, STREAM_PACKAGES,
+                                       N_TILES)) + 1.5)
+    jax.block_until_ready(st_w.freq)
+    # enforce (don't just self-attest) the sync contract: count the actual
+    # device→host fetches issued through jax.device_get — the channel
+    # `FleetTelemetry.as_dict` uses — during the streamed run
+    real_get, gets = jax.device_get, 0
+
+    def counting_get(x):
+        nonlocal gets
+        gets += 1
+        return real_get(x)
+
+    jax.device_get = counting_get
+    try:
+        t0 = time.perf_counter()
+        st, flushed, stats = stream(eng, st, source(), keep_telemetry=False)
+        dt = time.perf_counter() - t0
+    finally:
+        jax.device_get = real_get
+    assert stats.steps == STREAM_STEPS, stats
+    assert stats.host_syncs == stats.flushes == STREAM_STEPS // STREAM_FLUSH, \
+        stats
+    assert gets == stats.flushes, \
+        f"{gets} device_get calls for {stats.flushes} flushes"
+    rate = stats.steps * STREAM_PACKAGES / dt
+    row("fleet.stream_90k", dt / stats.steps * 1e6,
+        f"pkg_steps_per_s={rate:.0f};host_syncs={stats.host_syncs};"
+        f"flushes={stats.flushes};syncs_per_flush={stats.syncs_per_flush:.1f}")
 
 
 def run() -> None:
@@ -30,27 +152,17 @@ def run() -> None:
     key = jax.random.PRNGKey(0)
     trace = jax.block_until_ready(_rho_trace(key))
 
-    # --- batched fleet engine (vmap backend) ------------------------------
-    eng = FleetEngine(cfg, backend="vmap")
-
-    def fleet_steps():
-        st = eng.init(N_PACKAGES)
-        for i in range(STEPS):
-            st, out, _ = eng.step(st, trace[i])
-        return out.freq
-
-    _, us_fleet = timed(fleet_steps)
-
-    # --- broadcast backend (batch-shaped state, no vmap) ------------------
-    eng_b = FleetEngine(cfg, backend="broadcast")
-
-    def fleet_steps_broadcast():
-        st = eng_b.init(N_PACKAGES)
-        for i in range(STEPS):
-            st, out, _ = eng_b.step(st, trace[i])
-        return out.freq
-
-    _, us_bcast = timed(fleet_steps_broadcast)
+    # --- every registered single-host backend over the same trace ---------
+    pkg_steps = N_PACKAGES * STEPS
+    us = {}
+    for backend in ("vmap", "broadcast", "sharded"):
+        eng = FleetEngine(cfg, backend=backend)
+        _, us[backend] = timed(_backend_steps(eng, trace), iters=5)
+        # window-mean released MTPS for the backend (telemetry plane)
+        _, telem = eng.run_block(eng.init(N_PACKAGES), trace)
+        row(f"fleet.{backend}_{N_PACKAGES}", us[backend] / STEPS,
+            f"pkg_steps_per_s={pkg_steps / (us[backend] / 1e6):.0f};"
+            f"released_mtps={telem.as_dict()['released_mtps']:.0f}")
 
     # --- sequential per-package loop (jitted update, one call per pkg) ----
     sched = ThermalScheduler(cfg)
@@ -65,17 +177,22 @@ def run() -> None:
         return out.freq
 
     _, us_seq = timed(seq_steps, warmup=1, iters=1)
-
-    pkg_steps = N_PACKAGES * STEPS
-    speedup = us_seq / us_fleet
-    row("fleet.vmap_256", us_fleet / STEPS,
-        f"pkg_steps_per_s={pkg_steps / (us_fleet / 1e6):.0f}")
-    row("fleet.broadcast_256", us_bcast / STEPS,
-        f"pkg_steps_per_s={pkg_steps / (us_bcast / 1e6):.0f}")
     row("fleet.sequential_256", us_seq / STEPS,
         f"pkg_steps_per_s={pkg_steps / (us_seq / 1e6):.0f}")
+
+    speedup = us_seq / us["vmap"]
     row("fleet.speedup", 0.0, f"vmap_vs_seq={speedup:.1f}x(need>=5)")
     assert speedup >= 5.0, f"fleet speedup {speedup:.1f}x below 5x bar"
+
+    # sharded on a trivial 1-mesh must not cost anything vs vmap (≤5% slower,
+    # or faster); measured over the same 5-iter timed windows above
+    ratio = us["sharded"] / us["vmap"]
+    row("fleet.sharded_vs_vmap_1dev", 0.0,
+        f"ratio={ratio:.3f}(need<=1.05)")
+    assert ratio <= 1.05, f"sharded 1-dev {ratio:.3f}x of vmap (>1.05)"
+
+    _sharded_scaling()
+    _streaming_90k(cfg)
 
 
 if __name__ == "__main__":

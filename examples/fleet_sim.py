@@ -1,23 +1,40 @@
 """Fleet-scale thermal scheduling: 512 packages, one jitted step per tick.
 
-    PYTHONPATH=src python examples/fleet_sim.py
+    PYTHONPATH=src python examples/fleet_sim.py [--backend sharded] [--stream]
 
 Simulates a fleet of 512 four-tile packages through a diurnal load swell
 (ρ ramps 0.9 → 2.7 and back).  The `FleetEngine` advances every package's
-V24 scheduler in a single batched call and reports fleet-wide telemetry:
-thermal event count (want 0), p50/p99 junction temperature, and how much
-throughput the fleet actually released vs. held back.
+V24 scheduler in a single batched call — via the vmap, broadcast, or
+sharded (package axis over a device mesh) backend — and reports fleet-wide
+telemetry: thermal event count (want 0), p50/p99 junction temperature, and
+how much throughput the fleet actually released vs. held back.
+
+``--stream`` runs the same trace through the streaming ingest loop
+(`repro.fleet.ingest`): chunks upload to device ahead of execution through
+the bounded look-ahead hint queue, telemetry is reduced over each flush
+window in-graph, and the host syncs once per flush instead of once per step.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import SchedulerConfig
-from repro.fleet import FleetEngine
+from repro.fleet import FleetEngine, available_backends, chunk_source, stream
 
 N_PACKAGES, N_TILES, STEPS = 512, 4, 48
 
-eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"))
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", default="vmap", choices=available_backends())
+ap.add_argument("--devices", type=int, default=0,
+                help="sharded backend device budget (0 = all visible)")
+ap.add_argument("--stream", action="store_true",
+                help="drive the trace through the streaming ingest loop")
+args = ap.parse_args()
+
+eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                  backend=args.backend, devices=args.devices or None)
 state = eng.init(N_PACKAGES)
 
 key = jax.random.PRNGKey(0)
@@ -27,24 +44,40 @@ swell = 0.9 + 1.8 * jnp.sin(t) ** 2                       # [STEPS]
 jitter = 0.2 * jax.random.normal(key, (N_PACKAGES, N_TILES))
 trace = jnp.clip(swell[:, None, None] + jitter, 0.9, 2.7)  # [STEPS, N, tiles]
 
-print(f"fleet of {N_PACKAGES} packages x {N_TILES} tiles, {STEPS} steps")
-print("step  rho   p50C   p99C  maxC  f_mean  released  throttled  events")
-for i in range(STEPS):
-    state, out, telem = eng.step(state, trace[i])
-    if i % 6 == 0 or i == STEPS - 1:
-        d = telem.as_dict()
-        print(f"{i:4d}  {float(swell[i]):.2f}  {d['temp_p50_c']:5.1f}  "
-              f"{d['temp_p99_c']:5.1f}  {d['temp_max_c']:5.1f}  "
+print(f"fleet of {N_PACKAGES} packages x {N_TILES} tiles, {STEPS} steps, "
+      f"backend {eng.backend_impl.describe()}")
+
+if args.stream:
+    # one host sync per 6-step flush window (not per step)
+    print("flush  p50C   p99C  f_mean  released  events")
+    def on_flush(i, d):
+        print(f"{i:5d}  {d['temp_p50_c']:5.1f}  {d['temp_p99_c']:5.1f}  "
               f"{d['freq_mean']:.3f}  {d['released_mtps']:8.1f}  "
-              f"{d['throttled_mtps']:9.1f}  {int(d['events_total']):d}")
+              f"{int(d['events_total']):d}")
+    state, flushed, stats = stream(eng, state,
+                                   chunk_source(np.asarray(trace), 6),
+                                   on_flush=on_flush)
+    print(f"\ndone: {int(flushed[-1]['events_total'])} thermal events "
+          f"(target 0), final-window p99 {flushed[-1]['temp_p99_c']:.1f}C, "
+          f"{stats.host_syncs} host syncs for {stats.steps} steps")
+else:
+    print("step  rho   p50C   p99C  maxC  f_mean  released  throttled  events")
+    for i in range(STEPS):
+        state, out, telem = eng.step(state, trace[i])
+        if i % 6 == 0 or i == STEPS - 1:
+            d = telem.as_dict()
+            print(f"{i:4d}  {float(swell[i]):.2f}  {d['temp_p50_c']:5.1f}  "
+                  f"{d['temp_p99_c']:5.1f}  {d['temp_max_c']:5.1f}  "
+                  f"{d['freq_mean']:.3f}  {d['released_mtps']:8.1f}  "
+                  f"{d['throttled_mtps']:9.1f}  {int(d['events_total']):d}")
 
-d = telem.as_dict()
-print(f"\ndone: {int(d['events_total'])} thermal events across the fleet "
-      f"(target 0), final p99 {d['temp_p99_c']:.1f}C")
+    d = telem.as_dict()
+    print(f"\ndone: {int(d['events_total'])} thermal events across the fleet "
+          f"(target 0), final p99 {d['temp_p99_c']:.1f}C")
 
-# same trace through the scan-based runner — one compiled program for the run
-state2 = eng.init(N_PACKAGES)
-_, telems = eng.run(state2, trace)
-peak = float(np.asarray(telems.temp_p99_c).max())
-print(f"scan runner agrees: peak p99 {peak:.1f}C, "
-      f"events {int(np.asarray(telems.events_total)[-1])}")
+    # same trace through the scan-based runner — one compiled program
+    state2 = eng.init(N_PACKAGES)
+    _, telems = eng.run(state2, trace)
+    peak = float(np.asarray(telems.temp_p99_c).max())
+    print(f"scan runner agrees: peak p99 {peak:.1f}C, "
+          f"events {int(np.asarray(telems.events_total)[-1])}")

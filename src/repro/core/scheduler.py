@@ -81,24 +81,71 @@ class ThermalScheduler:
             self.gamma = self.gamma / self.gamma.sum(axis=1, keepdims=True)
         import math
         self.eta = 1.0 - math.exp(-cfg.lookahead_ms / fp.tau_ms)
+        self._init_cache: dict = {}   # compiled sharded-init per layout
 
     # ------------------------------------------------------------------ api
-    def init(self, batch_shape: tuple[int, ...] = ()) -> SchedulerState:
+    def init(self, batch_shape: tuple[int, ...] = (),
+             shardings=None) -> SchedulerState:
         """Fresh state; ``batch_shape`` prepends fleet/package dimensions.
 
         Batched states share the scalar step/ptr counters (packages step in
         lockstep) while thermal, filtration and frequency are per-package.
+        ``shardings`` (a pytree of `jax.sharding.Sharding` congruent with the
+        state — see `state_pspecs`) places each leaf at creation, so sharded
+        fleet backends never materialise the full state on one device.
         """
         c = self.cfg
+
+        def make() -> SchedulerState:
+            return SchedulerState(
+                thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
+                filtration=pdu_gate.init_filtration(
+                    c.filtration_window, c.n_tiles, fill=self.fp.rho_min,
+                    batch_shape=batch_shape),
+                freq=jnp.ones(batch_shape + (c.n_tiles,)),
+                step=jnp.zeros((), jnp.int32),
+                events=jnp.zeros(batch_shape, jnp.int32),
+            )
+
+        if shardings is None:
+            return make()
+        # born sharded: jit with out_shardings materialises each leaf
+        # directly on its owning device(s) — the full fleet state never
+        # lands on one device.  The compiled initializer is cached per
+        # layout (a fresh jit per call would recompile every init).
+        key = (batch_shape, tuple(jax.tree_util.tree_leaves(shardings)))
+        fn = self._init_cache.get(key)
+        if fn is None:
+            fn = self._init_cache[key] = jax.jit(make,
+                                                 out_shardings=shardings)
+        return fn()
+
+    def state_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerState:
+        """PartitionSpec pytree congruent with ``init(batch_shape)`` output.
+
+        Per-package leaves get ``batch_axes`` (one mesh-axis name or None per
+        batch dim) on their leading dims; the shared scalar step/ptr counters
+        stay replicated.  This is the init hook the sharded fleet backend
+        feeds to `shard_map` / `NamedSharding` placement.
+        """
+        from jax.sharding import PartitionSpec as P
+        ba = tuple(batch_axes)
         return SchedulerState(
-            thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
-            filtration=pdu_gate.init_filtration(c.filtration_window, c.n_tiles,
-                                                fill=self.fp.rho_min,
-                                                batch_shape=batch_shape),
-            freq=jnp.ones(batch_shape + (c.n_tiles,)),
-            step=jnp.zeros((), jnp.int32),
-            events=jnp.zeros(batch_shape, jnp.int32),
+            thermal=P(*ba, None, None),
+            filtration=pdu_gate.Filtration(buf=P(*ba, None, None), ptr=P()),
+            freq=P(*ba, None),
+            step=P(),
+            events=P(*ba),
         )
+
+    def output_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerOutput:
+        """PartitionSpec pytree congruent with `update`'s SchedulerOutput
+        (scalar η replicated, everything else per-package)."""
+        from jax.sharding import PartitionSpec as P
+        ba = tuple(batch_axes)
+        tile = P(*ba, None)
+        return SchedulerOutput(freq=tile, temp_c=tile, hint_w=tile,
+                               eta=P(), at_risk=tile, balance=tile)
 
     def update(self, st: SchedulerState,
                rho: jnp.ndarray) -> tuple[SchedulerState, SchedulerOutput]:

@@ -36,6 +36,25 @@ def budget(n_tiles: int = 8, fp: Fingerprint = FINGERPRINT) -> dict:
     }
 
 
+def _jsonable(v: Any) -> Any:
+    """Coerce a telemetry field to a JSON-serialisable host value.
+
+    Scalars (python numbers, 0-d/1-element arrays) become floats; array
+    values — per-tile vectors, fleet percentile stacks — become (nested)
+    lists rather than crashing `float()` on a multi-element ndarray.
+    """
+    if isinstance(v, (int, float)):
+        return float(v)
+    shape = getattr(v, "shape", None)
+    if shape is not None:          # ndarray / jax array (0-d or N-d)
+        import numpy as np
+        arr = np.asarray(v)
+        return float(arr) if arr.size == 1 else arr.tolist()
+    if hasattr(v, "item"):         # other numpy-like scalars
+        return float(v)
+    return v
+
+
 @dataclasses.dataclass
 class TelemetryLog:
     """Bounded host-side telemetry ring (1 record / step)."""
@@ -44,9 +63,8 @@ class TelemetryLog:
     _rows: deque = dataclasses.field(default_factory=deque, repr=False)
 
     def record(self, step: int, **fields: Any) -> None:
-        self._rows.append({"step": step, **{
-            k: (float(v) if hasattr(v, "item") or isinstance(v, (int, float))
-                else v) for k, v in fields.items()}})
+        self._rows.append({"step": step, **{k: _jsonable(v)
+                                            for k, v in fields.items()}})
         while len(self._rows) > self.capacity:
             self._rows.popleft()
 
@@ -59,7 +77,12 @@ class TelemetryLog:
     def last(self) -> dict:
         return self._rows[-1]
 
-    def dump(self, path: str) -> None:
+    def dump_jsonl(self, path: str) -> None:
+        """Write the ring as JSON-lines (one record per row)."""
         with open(path, "w") as f:
             for r in self._rows:
                 f.write(json.dumps(r) + "\n")
+
+    # kept as an alias — existing callers (launch/train.py --telemetry-out)
+    # predate the jsonl-explicit name
+    dump = dump_jsonl

@@ -181,6 +181,39 @@ def to_shardings(mesh, specs):
                         is_leaf=lambda s: isinstance(s, P))
 
 
+# ========================================================== fleet-serving mesh
+# The fleet engine's package axis is embarrassingly parallel: a 1-D mesh over
+# it needs no collectives inside the scheduler update (only the telemetry
+# reductions communicate).  FLEET_AXIS is the axis name the sharded fleet
+# backend, `ThermalScheduler.state_pspecs`, and `bench_fleet` all agree on.
+FLEET_AXIS = "packages"
+
+
+def fleet_mesh(n_devices: int | None = None, axis: str = FLEET_AXIS):
+    """1-D device mesh over the fleet's package axis.
+
+    ``n_devices`` of None or 0 takes every visible device (matching the
+    CLI's ``--fleet-devices 0`` convention); a request larger than the host
+    provides degrades to what is available (single-device JAX yields a
+    trivial 1-mesh, on which sharded == broadcast).
+    """
+    devs = jax.devices()
+    n = len(devs) if not n_devices else max(1, min(n_devices, len(devs)))
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))
+
+
+def fleet_trace_spec(ndim: int, axis: str = FLEET_AXIS,
+                     package_dim: int = 0) -> P:
+    """Spec for density traces: shard ``package_dim`` over the fleet axis.
+
+    [n_packages, n_tiles] chunks use the default; [T, n_packages, n_tiles]
+    streaming chunks pass ``package_dim=1``.
+    """
+    dims = [None] * ndim
+    dims[package_dim] = axis
+    return P(*dims)
+
+
 # ===================================================== activation constraints
 # Model code runs both unsharded (unit tests, examples) and under the
 # production mesh (launcher, dry-run).  `axis_env(mesh)` publishes the mesh's

@@ -1,4 +1,13 @@
-"""Fleet-scale batched scheduler engine (thousands of packages per step)."""
-from repro.fleet.engine import FleetEngine, FleetTelemetry
+"""Fleet-scale batched scheduler engine (thousands of packages per step).
 
-__all__ = ["FleetEngine", "FleetTelemetry"]
+Layering: `engine` (backend-agnostic stepping + telemetry) over
+`backends` (vmap / broadcast / sharded execution strategies) under
+`ingest` (streaming serving loop with bounded look-ahead ingest).
+"""
+from repro.fleet.backends import available_backends, get_backend, register
+from repro.fleet.engine import FleetEngine, FleetTelemetry
+from repro.fleet.ingest import HintQueue, StreamStats, chunk_source, stream
+
+__all__ = ["FleetEngine", "FleetTelemetry", "available_backends",
+           "get_backend", "register", "HintQueue", "StreamStats",
+           "chunk_source", "stream"]

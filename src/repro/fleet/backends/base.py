@@ -1,0 +1,82 @@
+"""Fleet backend protocol + registry.
+
+A *backend* owns the fleet's state layout and how one scheduler step is
+mapped over the package axis.  `FleetEngine` is backend-agnostic: it asks
+the backend to build state (`init`), to advance it (`update`, traced inside
+the engine's jitted step), and to place host density chunks on device
+(`put_trace`, used by the streaming ingest loop).  New execution strategies
+(a pmap backend, a multi-host backend, ...) plug in via `@register` without
+touching the engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import (SchedulerOutput, SchedulerState,
+                                  ThermalScheduler)
+
+_REGISTRY: dict[str, type["FleetBackend"]] = {}
+
+
+def register(cls: type["FleetBackend"]) -> type["FleetBackend"]:
+    """Class decorator: make a backend constructible by name."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str, sched: ThermalScheduler, **kwargs) -> "FleetBackend":
+    """Instantiate a registered backend by name (kwargs are backend-specific)."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown fleet backend {name!r}; "
+                         f"available: {available_backends()}") from None
+    return cls(sched, **kwargs)
+
+
+class FleetBackend:
+    """One strategy for stepping N packages' schedulers at once.
+
+    Subclasses implement `init` (state layout) and `update` (pure JAX, called
+    inside `FleetEngine`'s jit, so it must be trace-safe).  Everything else
+    has sensible defaults for single-device backends.
+    """
+
+    name: str = ""
+
+    def __init__(self, sched: ThermalScheduler):
+        self.sched = sched
+
+    # -- state ------------------------------------------------------------
+    def init(self, n_packages: int) -> SchedulerState:
+        """Fleet state with a leading [n_packages] axis on per-package leaves."""
+        raise NotImplementedError
+
+    def update(self, state: SchedulerState, rho: jnp.ndarray
+               ) -> tuple[SchedulerState, SchedulerOutput]:
+        """Advance every package one step.  rho: [n_packages, n_tiles]."""
+        raise NotImplementedError
+
+    # -- placement --------------------------------------------------------
+    def put_trace(self, trace) -> jnp.ndarray:
+        """Place a host density chunk [..., n_packages, n_tiles] on device.
+
+        The streaming ingest loop calls this to upload the *next* chunk while
+        the current one computes; sharded backends override it to land each
+        package partition directly on its owning device.
+        """
+        return jax.device_put(jnp.asarray(trace))
+
+    # -- introspection ----------------------------------------------------
+    def n_devices(self) -> int:
+        return 1
+
+    def describe(self) -> str:
+        return self.name

@@ -1,0 +1,24 @@
+"""broadcast backend — batch-shaped state arrays, no vmap.
+
+Relies on the core update math tolerating arbitrary leading batch dims
+(the batch-dim refactor): one plain `update` call advances the whole fleet
+in lockstep, with the scalar step/ptr counters shared across packages.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.scheduler import SchedulerOutput, SchedulerState
+from repro.fleet.backends.base import FleetBackend, register
+
+
+@register
+class BroadcastBackend(FleetBackend):
+    name = "broadcast"
+
+    def init(self, n_packages: int) -> SchedulerState:
+        return self.sched.init(batch_shape=(n_packages,))
+
+    def update(self, state: SchedulerState, rho: jnp.ndarray
+               ) -> tuple[SchedulerState, SchedulerOutput]:
+        return self.sched.update(state, rho)

@@ -1,0 +1,78 @@
+"""sharded backend — partition the package axis over a 1-D device mesh.
+
+The fleet's package axis is embarrassingly parallel, so `shard_map` runs the
+plain broadcast-layout `ThermalScheduler.update` on each device's package
+partition with NO collectives inside the step; only the engine's telemetry
+reductions (percentiles, fleet sums) communicate, and those sit outside the
+shard_map in the same jitted program.  State leaves are placed at creation
+via `ThermalScheduler.init(shardings=...)` so the full fleet never
+materialises on one device.
+
+Graceful degradation: requesting more devices than the host has, or a fleet
+size the mesh doesn't divide, silently falls back to the largest compatible
+mesh (worst case a trivial 1-device mesh, where sharded ≡ broadcast —
+bit-identical, see tests/test_fleet_sharded.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from repro.core.scheduler import (SchedulerOutput, SchedulerState,
+                                  ThermalScheduler)
+from repro.distributed.sharding import (FLEET_AXIS, fleet_mesh,
+                                        fleet_trace_spec, to_shardings)
+from repro.fleet.backends.base import FleetBackend, register
+
+
+@register
+class ShardedBackend(FleetBackend):
+    name = "sharded"
+
+    def __init__(self, sched: ThermalScheduler, devices: int | None = None):
+        super().__init__(sched)
+        self._requested = devices
+        self.mesh = fleet_mesh(devices)
+        self._state_specs = sched.state_pspecs(batch_axes=(FLEET_AXIS,))
+        self._out_specs = sched.output_pspecs(batch_axes=(FLEET_AXIS,))
+
+    # -- state ------------------------------------------------------------
+    def init(self, n_packages: int) -> SchedulerState:
+        # re-derive the mesh from the requested budget on every init — a
+        # previous indivisible fleet must not stick the engine on a shrunken
+        # mesh once a divisible fleet size comes along
+        budget = len(fleet_mesh(self._requested).devices.ravel())
+        if n_packages % budget:
+            # largest divisor of n_packages the device budget covers
+            budget = max(d for d in range(1, budget + 1)
+                         if n_packages % d == 0)
+        self.mesh = fleet_mesh(budget)
+        return self.sched.init(
+            batch_shape=(n_packages,),
+            shardings=to_shardings(self.mesh, self._state_specs))
+
+    def update(self, state: SchedulerState, rho: jnp.ndarray
+               ) -> tuple[SchedulerState, SchedulerOutput]:
+        fn = shard_map(self.sched.update, mesh=self.mesh,
+                       in_specs=(self._state_specs, fleet_trace_spec(2)),
+                       out_specs=(self._state_specs, self._out_specs))
+        return fn(state, rho)
+
+    # -- placement --------------------------------------------------------
+    def put_trace(self, trace) -> jnp.ndarray:
+        """Upload a density chunk with each package partition landing on its
+        owning device ([n, t] chunks shard dim 0; [T, n, t] chunks dim 1)."""
+        trace = jnp.asarray(trace)
+        pdim = 0 if trace.ndim <= 2 else 1
+        spec = fleet_trace_spec(trace.ndim, package_dim=pdim)
+        if trace.shape[pdim] % len(self.mesh.devices.ravel()):
+            spec = fleet_trace_spec(trace.ndim, package_dim=pdim, axis=None)
+        return jax.device_put(trace, jax.sharding.NamedSharding(self.mesh, spec))
+
+    # -- introspection ----------------------------------------------------
+    def n_devices(self) -> int:
+        return len(self.mesh.devices.ravel())
+
+    def describe(self) -> str:
+        return f"{self.name}[{self.n_devices()}dev]"

@@ -1,0 +1,28 @@
+"""vmap backend — map `ThermalScheduler.update` over a per-package state axis.
+
+Every state leaf (including the step/ptr counters) carries the package axis,
+so each lane advances its own counters; this is the layout closest to "N
+independent schedulers" and the reference the other backends are verified
+against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import SchedulerOutput, SchedulerState
+from repro.fleet.backends.base import FleetBackend, register
+
+
+@register
+class VmapBackend(FleetBackend):
+    name = "vmap"
+
+    def init(self, n_packages: int) -> SchedulerState:
+        base = self.sched.init()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_packages,) + x.shape), base)
+
+    def update(self, state: SchedulerState, rho: jnp.ndarray
+               ) -> tuple[SchedulerState, SchedulerOutput]:
+        return jax.vmap(self.sched.update)(state, rho)

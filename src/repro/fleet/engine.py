@@ -4,16 +4,27 @@ The paper's V7.0 framework controls ONE N×N-coupled multi-tile package; a
 production deployment schedules thousands of independent packages at once.
 Because `ThermalScheduler.update` is pure JAX and (after the batch-dim
 refactor) tolerant of leading batch dimensions, a whole fleet advances in a
-single jitted step: either `jax.vmap` over a per-package state axis
-(``backend="vmap"``) or direct broadcasting over batch-shaped state arrays
-(``backend="broadcast"``).  Both are numerically identical to a Python loop
-of per-package `update` calls — see ``tests/test_fleet.py`` — but amortise
-dispatch/compile over the fleet (see ``benchmarks/bench_fleet.py``).
+single jitted step.  HOW the package axis is executed is a pluggable
+backend (`repro.fleet.backends`):
 
-    eng = FleetEngine(SchedulerConfig(n_tiles=4, mode="v24"))
+  * ``vmap``      — `jax.vmap` over a per-package state axis (reference),
+  * ``broadcast`` — batch-shaped state arrays, no vmap (lockstep counters),
+  * ``sharded``   — package axis partitioned over a device mesh via
+                    `shard_map` (degrades to broadcast on one device).
+
+All are numerically identical to a Python loop of per-package `update`
+calls — see ``tests/test_fleet.py`` / ``tests/test_fleet_sharded.py`` — but
+amortise dispatch/compile over the fleet (``benchmarks/bench_fleet.py``).
+
+    eng = FleetEngine(SchedulerConfig(n_tiles=4, mode="v24"),
+                      backend="sharded")
     state = eng.init(n_packages=1024)
     state, out, telem = eng.step(state, rho)     # rho: [1024, 4]
     print(telem.as_dict())   # events, p50/p99 junction temp, released MTPS
+
+For serving loops, per-step `as_dict()` costs one host sync per step; use
+`run_chunked` (or the streaming loop in `repro.fleet.ingest`) to reduce
+telemetry over K steps in-graph and sync once per flush interval.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ from repro.core.density import rtok_from_rho
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
 from repro.core.scheduler import (SchedulerConfig, SchedulerOutput,
                                   SchedulerState, ThermalScheduler)
+from repro.fleet.backends import FleetBackend, get_backend
 
 
 class FleetTelemetry(NamedTuple):
@@ -33,7 +45,7 @@ class FleetTelemetry(NamedTuple):
 
     n_packages: jnp.ndarray      # int32
     events_total: jnp.ndarray    # cumulative T_crit crossings, fleet-wide
-    events_step: jnp.ndarray     # crossings added this step
+    events_step: jnp.ndarray     # crossings added this step (window: summed)
     temp_p50_c: jnp.ndarray      # fleet junction-temperature percentiles
     temp_p99_c: jnp.ndarray
     temp_max_c: jnp.ndarray
@@ -44,34 +56,76 @@ class FleetTelemetry(NamedTuple):
     at_risk_frac: jnp.ndarray    # fraction of tiles under straggler threshold
 
     def as_dict(self) -> dict[str, float]:
-        """Host-side scalar dict (forces a device sync)."""
-        return {k: float(v) for k, v in self._asdict().items()}
+        """Host-side scalar dict — ONE device sync for the whole record
+        (a single `jax.device_get` of the pytree), not one per field."""
+        host = jax.device_get(self)._asdict()
+        host["n_packages"] = int(host["n_packages"])
+        return {k: (v if isinstance(v, int) else float(v))
+                for k, v in host.items()}
+
+    def reduce(self) -> "FleetTelemetry":
+        """Reduce a [K]-leaved (stacked per-step) record to one telemetry
+        record for the whole K-step window, entirely in-graph.
+
+        Semantics per field: counters take the window's last cumulative value
+        (`events_total`, `n_packages`) or sum (`events_step` = crossings in
+        the window); temperatures keep the worst tail (`p99`/`max` = max over
+        steps, `p50` = mean); frequency keeps mean/min; the MTPS split and
+        at-risk fraction are window means (units stay MTPS).  The per-step
+        invariant released+throttled == ΣR_tok therefore also holds for the
+        reduced record against the window-mean offered throughput.
+        """
+        return FleetTelemetry(
+            n_packages=self.n_packages[-1],
+            events_total=self.events_total[-1],
+            events_step=self.events_step.sum(),
+            temp_p50_c=self.temp_p50_c.mean(),
+            temp_p99_c=self.temp_p99_c.max(),
+            temp_max_c=self.temp_max_c.max(),
+            freq_mean=self.freq_mean.mean(),
+            freq_min=self.freq_min.min(),
+            released_mtps=self.released_mtps.mean(),
+            throttled_mtps=self.throttled_mtps.mean(),
+            at_risk_frac=self.at_risk_frac.mean(),
+        )
 
 
 class FleetEngine:
-    """Pure-functional fleet stepper around one `ThermalScheduler` config."""
+    """Pure-functional fleet stepper around one `ThermalScheduler` config.
+
+    ``backend`` is a registered backend name (``vmap``/``broadcast``/
+    ``sharded``) or a ready `FleetBackend` instance; ``devices`` is forwarded
+    to the sharded backend (None = all visible devices).
+    """
 
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
-                 fp: Fingerprint = FINGERPRINT, backend: str = "vmap"):
-        if backend not in ("vmap", "broadcast"):
-            raise ValueError(f"unknown fleet backend {backend!r}")
+                 fp: Fingerprint = FINGERPRINT,
+                 backend: str | FleetBackend = "vmap",
+                 devices: int | None = None):
         self.cfg = cfg
         self.fp = fp
-        self.backend = backend
         self.sched = ThermalScheduler(cfg, fp)
+        if (devices is not None and isinstance(backend, str)
+                and backend != "sharded"):
+            raise ValueError(
+                f"devices={devices} only applies to the sharded backend, "
+                f"got backend={backend!r}")
+        if isinstance(backend, FleetBackend):
+            self.backend_impl = backend
+        else:
+            kw = {"devices": devices} if backend == "sharded" else {}
+            self.backend_impl = get_backend(backend, self.sched, **kw)
+        self.backend = self.backend_impl.name
         self._step = jax.jit(self._step_impl)
         self._run = jax.jit(self._run_impl)
+        self._run_block = jax.jit(self._run_block_impl)
+        self._run_chunked = jax.jit(self._run_chunked_impl)
 
     # ------------------------------------------------------------------ api
     def init(self, n_packages: int) -> SchedulerState:
         """Fleet state with a leading [n_packages] axis on every per-package
-        leaf.  The vmap backend carries the step/ptr counters per lane (vmap
-        maps every leaf); the broadcast backend shares them (lockstep)."""
-        if self.backend == "vmap":
-            base = self.sched.init()
-            return jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x, (n_packages,) + x.shape), base)
-        return self.sched.init(batch_shape=(n_packages,))
+        leaf; layout (and device placement) is the backend's choice."""
+        return self.backend_impl.init(n_packages)
 
     def step(self, state: SchedulerState, rho) -> tuple[
             SchedulerState, SchedulerOutput, FleetTelemetry]:
@@ -87,6 +141,27 @@ class FleetEngine:
         returns final state + stacked per-step telemetry ([T]-leaved)."""
         return self._run(state, rho_trace)
 
+    def run_chunked(self, state: SchedulerState, rho_trace,
+                    flush_every: int) -> tuple[SchedulerState, FleetTelemetry]:
+        """Scan a [T, n, tiles] trace in K-step chunks, reducing telemetry
+        over each chunk IN-GRAPH: the result carries one record per flush
+        interval ([T//K]-leaved), so fetching it costs T//K host syncs
+        instead of T.  T must be a multiple of ``flush_every``."""
+        t = rho_trace.shape[0]
+        if t % flush_every:
+            raise ValueError(f"trace length {t} not a multiple of "
+                             f"flush_every={flush_every}")
+        chunked = rho_trace.reshape((t // flush_every, flush_every)
+                                    + rho_trace.shape[1:])
+        return self._run_chunked(state, chunked)
+
+    def run_block(self, state: SchedulerState, rho_trace) -> tuple[
+            SchedulerState, FleetTelemetry]:
+        """One jitted call: scan a [K, n, tiles] chunk and return the state
+        plus the chunk's SINGLE reduced telemetry record (the streaming
+        ingest loop's unit of work — one host sync per block)."""
+        return self._run_block(state, rho_trace)
+
     # ------------------------------------------------------------- internals
     def _rho_fleet(self, state: SchedulerState, rho) -> jnp.ndarray:
         n = state.freq.shape[0]
@@ -95,14 +170,9 @@ class FleetEngine:
             rho = rho[:, None]
         return jnp.broadcast_to(rho, (n, self.cfg.n_tiles))
 
-    def _update_fleet(self, state: SchedulerState, rho: jnp.ndarray):
-        if self.backend == "vmap":
-            return jax.vmap(self.sched.update)(state, rho)
-        return self.sched.update(state, rho)
-
     def _step_impl(self, state: SchedulerState, rho: jnp.ndarray):
         prev_events = state.events.sum()
-        state, out = self._update_fleet(state, rho)
+        state, out = self.backend_impl.update(state, rho)
         rtok = rtok_from_rho(rho)                    # [n_packages, n_tiles]
         telem = FleetTelemetry(
             n_packages=jnp.asarray(state.freq.shape[0], jnp.int32),
@@ -124,6 +194,13 @@ class FleetEngine:
             st, _, telem = self._step_impl(st, rho)
             return st, telem
         return jax.lax.scan(tick, state, rho_trace)
+
+    def _run_block_impl(self, state: SchedulerState, rho_trace: jnp.ndarray):
+        state, telems = self._run_impl(state, rho_trace)
+        return state, telems.reduce()
+
+    def _run_chunked_impl(self, state: SchedulerState, chunked: jnp.ndarray):
+        return jax.lax.scan(self._run_block_impl, state, chunked)
 
 
 def sequential_step(sched: ThermalScheduler, states: list[SchedulerState],

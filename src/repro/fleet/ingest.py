@@ -1,0 +1,137 @@
+"""Streaming fleet serving: async host→device ingest + flush-rate telemetry.
+
+The paper's control loop gives the firmware a 20–50 ms look-ahead window
+(§4.2): density hints for work that has been *scheduled* but not yet
+*executed*.  At fleet scale that window is a bounded queue of device-resident
+density chunks — the `HintQueue` — kept full by the ingest loop while the
+engine consumes from the head:
+
+    host density source ──put_trace──▶ HintQueue ──run_block──▶ telemetry
+         (numpy chunks)    (async H2D)  (look-ahead)  (K steps,   (1 sync
+                                                       in-graph    per
+                                                       reduce)     flush)
+
+Double buffering falls out of JAX's async dispatch: `stream()` issues the
+upload of chunk i+1 (and the compute of chunk i) before blocking on chunk
+i's telemetry, so transfer, compute and the host-side sync pipeline against
+each other.  Telemetry is reduced over each K-step chunk in-graph
+(`FleetEngine.run_block`) and fetched with exactly ONE host sync per flush
+interval — `StreamStats.host_syncs` counts them so tests/benches can assert
+the contract (see the 90k-step case in ``benchmarks/bench_fleet.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Iterable, Iterator
+
+import numpy as np
+
+from repro.core.scheduler import SchedulerState
+from repro.fleet.engine import FleetEngine
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Counters for one `stream()` run (the sync contract lives here)."""
+
+    steps: int = 0            # scheduler steps executed
+    flushes: int = 0          # telemetry flush intervals completed
+    host_syncs: int = 0       # device→host telemetry fetches (== flushes)
+    chunks_ingested: int = 0  # host→device uploads issued
+    queue_peak: int = 0       # HintQueue high-water mark (chunks)
+
+    @property
+    def syncs_per_flush(self) -> float:
+        return self.host_syncs / max(self.flushes, 1)
+
+
+class HintQueue:
+    """Bounded look-ahead window of device-resident density chunks.
+
+    ``capacity`` chunks × K steps/chunk × step_ms models the paper's 20–50 ms
+    hint horizon: work the host has committed to the device ahead of
+    execution.  `offer` refuses beyond capacity (back-pressure on the
+    source); `take` pops the oldest chunk for execution.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("HintQueue capacity must be >= 1")
+        self.capacity = capacity
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    def offer(self, chunk: Any) -> bool:
+        if self.full:
+            return False
+        self._q.append(chunk)
+        return True
+
+    def take(self) -> Any:
+        return self._q.popleft()
+
+    def lookahead_ms(self, flush_every: int, step_ms: float) -> float:
+        """Hint horizon currently buffered, in wall-clock milliseconds."""
+        return len(self._q) * flush_every * step_ms
+
+
+def chunk_source(trace: np.ndarray, flush_every: int) -> Iterator[np.ndarray]:
+    """Split a host [T, n, tiles] trace into [K, n, tiles] flush chunks
+    (drops a non-divisible tail, mirroring `run_chunked`'s contract)."""
+    for i in range(trace.shape[0] // flush_every):
+        yield trace[i * flush_every:(i + 1) * flush_every]
+
+
+def stream(engine: FleetEngine, state: SchedulerState,
+           source: Iterable[np.ndarray], *,
+           lookahead_chunks: int = 2,
+           on_flush: Callable[[int, dict], None] | None = None,
+           keep_telemetry: bool = True,
+           ) -> tuple[SchedulerState, list[dict], StreamStats]:
+    """Drive the fleet through a streamed density trace.
+
+    ``source`` yields host [K, n_packages, n_tiles] chunks (K = the flush
+    interval; see `chunk_source`).  Returns (final state, one telemetry dict
+    per flush, stats).  ``lookahead_chunks`` bounds the hint queue — with the
+    default 2 the loop is double-buffered: one chunk in flight on device,
+    one uploaded ahead.
+    """
+    q = HintQueue(lookahead_chunks)
+    it = iter(source)
+    stats = StreamStats()
+    exhausted = False
+
+    def pump() -> None:
+        """Top the hint queue up with device-resident uploads (async H2D)."""
+        nonlocal exhausted
+        while not exhausted and not q.full:
+            chunk = next(it, None)
+            if chunk is None:
+                exhausted = True
+                return
+            q.offer(engine.backend_impl.put_trace(chunk))
+            stats.chunks_ingested += 1
+            stats.queue_peak = max(stats.queue_peak, len(q))
+
+    pump()
+    flushed: list[dict] = []
+    while len(q):
+        chunk = q.take()
+        state, telem = engine.run_block(state, chunk)   # async dispatch
+        stats.steps += int(chunk.shape[0])
+        pump()              # upload the NEXT chunk(s) while this one computes
+        d = telem.as_dict()                             # the ONE host sync
+        stats.host_syncs += 1
+        stats.flushes += 1
+        if keep_telemetry:
+            flushed.append(d)
+        if on_flush is not None:
+            on_flush(stats.flushes, d)
+    return state, flushed, stats

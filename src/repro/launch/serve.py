@@ -15,6 +15,15 @@ batched step per wave (each package sees the base density plus per-package
 load jitter).  Admission still follows package 0's frequency; fleet-wide
 telemetry (events, p50/p99 junction temp, released MTPS) is printed per
 wave — the single-host stand-in for a datacenter-scale control plane.
+
+``--fleet-backend`` picks the fleet execution strategy (``vmap`` /
+``broadcast`` / ``sharded``); ``--fleet-devices`` caps the sharded
+backend's package-axis mesh (0 = every visible device).  ``--stream``
+replaces the wave loop with a control-plane soak: the whole
+``waves × gen``-step density trace is driven through the streaming ingest
+loop (`repro.fleet.ingest`) — double-buffered host→device uploads, bounded
+look-ahead hint queue, telemetry reduced in-graph over each ``gen``-step
+flush window and fetched with ONE host sync per flush.
 """
 from __future__ import annotations
 
@@ -29,9 +38,44 @@ from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeConfig
 from repro.core.density import rho_v24
 from repro.core.scheduler import SchedulerConfig, ThermalScheduler
-from repro.fleet import FleetEngine
+from repro.fleet import (FleetEngine, available_backends, chunk_source,
+                         stream)
 from repro.launch import steps as S
 from repro.models import transformer as tf
+
+
+def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
+    """--stream: fleet control-plane soak through the streaming ingest loop."""
+    n = max(args.fleet, 1)
+    eng = FleetEngine(sched_cfg, backend=args.fleet_backend,
+                      devices=args.fleet_devices or None)
+    steps = args.waves * args.gen
+    t = np.linspace(0.0, np.pi, steps, dtype=np.float32)
+    swell = rho * (0.85 + 0.3 * np.sin(t) ** 2)                # [T]
+    jitter = 0.15 * np.asarray(jax.random.normal(
+        jax.random.fold_in(key, 7777), (n, sched_cfg.n_tiles)))
+    trace = np.clip(swell[:, None, None] + jitter, 0.9, 2.7
+                    ).astype(np.float32)                       # [T, n, tiles]
+
+    def on_flush(i, d):
+        print(f"[stream] flush {i}: p50 {d['temp_p50_c']:.1f}C "
+              f"p99 {d['temp_p99_c']:.1f}C f_mean {d['freq_mean']:.3f} "
+              f"released {d['released_mtps']:.1f} MTPS "
+              f"events {int(d['events_total'])}")
+
+    state = eng.init(n)
+    t0 = time.time()
+    state, flushed, stats = stream(eng, state,
+                                   chunk_source(trace, args.gen),
+                                   on_flush=on_flush)
+    dt = time.time() - t0
+    rate = stats.steps * n / max(dt, 1e-9)
+    print(f"[stream] done: {stats.steps} steps x {n} pkgs "
+          f"({eng.backend_impl.describe()}) in {dt*1e3:.0f} ms "
+          f"({rate:.0f} pkg-steps/s), {stats.host_syncs} host syncs / "
+          f"{stats.flushes} flushes (contract: 1/flush)")
+    return {"stream": flushed, "host_syncs": stats.host_syncs,
+            "flushes": stats.flushes, "pkg_steps_per_s": rate}
 
 
 def main(argv=None):
@@ -45,26 +89,37 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=1,
                     help="simulate N packages; >1 enables batched fleet mode")
+    ap.add_argument("--fleet-backend", default="vmap",
+                    choices=available_backends(),
+                    help="fleet execution strategy")
+    ap.add_argument("--fleet-devices", type=int, default=0,
+                    help="sharded backend device budget (0 = all visible)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming control-plane soak instead of serving "
+                         "(async ingest, 1 host sync per gen-step flush)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     key = jax.random.PRNGKey(args.seed)
-    params = tf.init_params(key, cfg)
     max_seq = args.prompt_len + args.gen
-
-    prefill_fn = jax.jit(S.make_prefill_step(cfg, max_seq))
-    decode_fn = jax.jit(S.make_decode_step(cfg))
-
     sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0)
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 
+    if args.stream:                  # control-plane soak, no model serving
+        return _stream_soak(args, sched_cfg, float(rho), key)
+
+    params = tf.init_params(key, cfg)
+    prefill_fn = jax.jit(S.make_prefill_step(cfg, max_seq))
+    decode_fn = jax.jit(S.make_decode_step(cfg))
+
     fleet = None
     if args.fleet > 1:
         # one batched step advances every package; this host serves pkg 0
-        fleet = FleetEngine(sched_cfg)
+        fleet = FleetEngine(sched_cfg, backend=args.fleet_backend,
+                            devices=args.fleet_devices or None)
         fst = fleet.init(args.fleet)
         # deterministic per-package load jitter around the base density
         jitter = 0.15 * jax.random.normal(jax.random.fold_in(key, 7777),

@@ -108,6 +108,124 @@ def test_fleet_run_scan_matches_step_loop():
                                np.array(p99s), **TOL)
 
 
+def test_backend_registry():
+    """Backends resolve by name; unknown names fail loudly."""
+    from repro.fleet import available_backends, get_backend
+    from repro.fleet.backends import FleetBackend
+    assert {"vmap", "broadcast", "sharded"} <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown fleet backend"):
+        FleetEngine(SchedulerConfig(), backend="nope")
+    # a ready instance is accepted as-is
+    sched = ThermalScheduler(SchedulerConfig(n_tiles=N_TILES))
+    b = get_backend("broadcast", sched)
+    assert isinstance(b, FleetBackend)
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES), backend=b)
+    assert eng.backend == "broadcast"
+
+
+def test_sharded_single_device_matches_vmap_exactly():
+    """On one device the sharded backend is a trivial 1-mesh shard_map and
+    must reproduce the vmap trajectory bit-for-bit (multi-device bit-match
+    is covered in tests/test_fleet_sharded.py subprocesses)."""
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24")
+    ev = FleetEngine(cfg, backend="vmap")
+    es = FleetEngine(cfg, backend="sharded")
+    assert es.backend_impl.n_devices() == 1
+    sv, ss = ev.init(8), es.init(8)
+    trace = _trace(8, seed=5)
+    for t in range(STEPS):
+        sv, ov, tv = ev.step(sv, trace[t])
+        ss, os_, ts = es.step(ss, trace[t])
+        for field in ("freq", "temp_c", "hint_w", "balance"):
+            np.testing.assert_array_equal(np.asarray(getattr(ov, field)),
+                                          np.asarray(getattr(os_, field)),
+                                          err_msg=f"{field}@t={t}")
+        for field in tv._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(tv, field)),
+                                          np.asarray(getattr(ts, field)),
+                                          err_msg=f"telem.{field}@t={t}")
+
+
+@pytest.mark.parametrize("backend", ["vmap", "broadcast", "sharded"])
+def test_fleet_telemetry_invariants_over_run(backend):
+    """Fleet-wide energy split and event accounting stay self-consistent:
+    released + throttled == Σ R_tok per step, and the per-step event deltas
+    sum to the cumulative total over a from-init run."""
+    from repro.core.density import rtok_from_rho
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                      backend=backend)
+    trace = _trace(24, seed=4)
+    st = eng.init(24)
+    st, telems = eng.run(st, trace)
+    offered = np.asarray(rtok_from_rho(trace)).sum(axis=(1, 2))   # [STEPS]
+    np.testing.assert_allclose(
+        np.asarray(telems.released_mtps) + np.asarray(telems.throttled_mtps),
+        offered, rtol=1e-4)
+    ev_step = np.asarray(telems.events_step)
+    ev_total = np.asarray(telems.events_total)
+    assert ev_step.sum() == ev_total[-1]            # run started from init
+    np.testing.assert_array_equal(np.cumsum(ev_step), ev_total)
+    assert (np.asarray(telems.n_packages) == 24).all()
+
+
+def test_run_chunked_reduces_in_graph():
+    """`run_chunked` == per-step `run` + host-side reduction of each K-step
+    window, with one telemetry record per flush interval."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                      backend="broadcast")
+    trace = _trace(16, seed=6)
+    trace = jnp.concatenate([trace, trace], axis=0)       # [2*STEPS, 16, t]
+    k = STEPS                                              # 2 chunks
+    st = eng.init(16)
+    _, per_step = eng.run(st, trace)
+    st2 = eng.init(16)
+    _, reduced = eng.run_chunked(st2, trace, flush_every=k)
+    assert reduced.temp_p99_c.shape == (2,)
+    for c in range(2):
+        sl = slice(c * k, (c + 1) * k)
+        np.testing.assert_allclose(
+            float(reduced.temp_p99_c[c]),
+            np.asarray(per_step.temp_p99_c)[sl].max(), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(reduced.released_mtps[c]),
+            np.asarray(per_step.released_mtps)[sl].mean(), rtol=1e-6)
+        assert int(reduced.events_step[c]) == \
+            int(np.asarray(per_step.events_step)[sl].sum())
+    assert int(reduced.events_total[-1]) == \
+        int(np.asarray(per_step.events_total)[-1])
+    with pytest.raises(ValueError, match="not a multiple"):
+        eng.run_chunked(eng.init(16), trace, flush_every=7)
+
+
+def test_as_dict_single_fetch_types():
+    """`as_dict` returns python scalars with n_packages an int."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES))
+    st = eng.init(4)
+    _, _, telem = eng.step(st, 1.5)
+    d = telem.as_dict()
+    assert isinstance(d["n_packages"], int) and d["n_packages"] == 4
+    assert all(isinstance(v, float) for k, v in d.items()
+               if k != "n_packages")
+
+
+def test_scheduler_state_pspecs_congruent():
+    """The sharded-init hook yields a spec pytree congruent with the state."""
+    from jax.sharding import PartitionSpec as P
+    sched = ThermalScheduler(SchedulerConfig(n_tiles=N_TILES))
+    st = sched.init(batch_shape=(8,))
+    specs = sched.state_pspecs(batch_axes=("packages",))
+    flat_s, tdef_s = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    flat_x, tdef_x = jax.tree_util.tree_flatten(st)
+    assert tdef_s == tdef_x
+    for leaf, spec in zip(flat_x, flat_s):
+        assert len(spec) <= leaf.ndim
+        if leaf.shape and leaf.shape[0] == 8:
+            assert spec[0] == "packages"
+        else:
+            assert all(a is None for a in spec)
+
+
 def test_scheduler_batched_init_shapes():
     """Core scheduler init honours arbitrary batch shapes."""
     cfg = SchedulerConfig(n_tiles=3)
