@@ -58,4 +58,35 @@ def run():
     err = float(jnp.abs(d1 - d2).max())
     out.append(row("kernels.thermal_256x1000", us1,
                    f"ref_us={us2:.0f} allclose_err={err:.5f}"))
+
+    # fused whole-fleet-step kernel: the PR-3 fast path — temp/freq traces
+    # must track a pure-JAX scan of ThermalScheduler.update (gated ≤1e-5)
+    from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+    from repro.fleet.backends.fused import FusedBackend
+    steps, n, tiles = 64, 32, 4
+    cfg = SchedulerConfig(n_tiles=tiles, mode="v24")
+    sched = ThermalScheduler(cfg)
+    fused = FusedBackend(sched)
+    trace = 0.9 + 1.8 * jax.random.uniform(KEY, (steps, n, tiles))
+
+    fused_fn = jax.jit(fused.run_block)   # jit once — timed calls reuse it
+
+    def run_fused():
+        _, temps, freqs = fused_fn(fused.init(n), trace)
+        return temps, freqs
+
+    @jax.jit
+    def run_ref():
+        def tick(st, rho):
+            st, o = sched.update(st, rho)
+            return st, (o.temp_c, o.freq)
+        return jax.lax.scan(tick, sched.init(batch_shape=(n,)), trace)[1]
+
+    (t1, f1), us1 = timed(run_fused, iters=2)
+    (t2, f2), us2 = timed(run_ref, iters=2)
+    err = max(float(jnp.abs(t1 - t2).max()) / 100.0,   # °C scale
+              float(jnp.abs(f1 - f2).max()))
+    out.append(row("kernels.fleet_step_32x64", us1,
+                   f"ref_us={us2:.0f} rel_err={err:.2e}(need<=1e-5)"))
+    assert err <= 1e-5, f"fleet_step kernel diverges: {err:.2e}"
     return out

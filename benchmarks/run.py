@@ -5,17 +5,24 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  With ``--json`` the same
 rows plus per-module status/timing are written as a machine-readable
-artifact (CI uploads it).  Exits nonzero if any bench module fails.
+artifact (CI uploads it), and any executed ``bench_fleet`` rows are ALSO
+appended to ``BENCH_fleet.json`` at the repo root — an accumulating perf
+trajectory of the fleet fast path across runs/PRs (CI uploads that too).
+Exits nonzero if any bench module fails.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
 import sys
 import time
 
 from benchmarks import common
+
+FLEET_TRAJECTORY = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json"))
 
 MODULES = [
     "bench_fingerprint",     # §4.1 fingerprint constants table
@@ -75,9 +82,36 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"ok": not failures, "results": results}, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
+        fleet = [r for r in results if r["module"] == "bench_fleet"]
+        if fleet:
+            _append_fleet_trajectory(fleet[0])
+
     if failures:
         print(f"benchmark failures: {failures}", file=sys.stderr)
         sys.exit(1)
+
+
+def _append_fleet_trajectory(result: dict) -> None:
+    """Append the fleet rows to the repo-root BENCH_fleet.json trajectory
+    (a list of timestamped records — one per `--json` run)."""
+    trajectory: list = []
+    try:
+        with open(FLEET_TRAJECTORY) as f:
+            trajectory = json.load(f)
+        if not isinstance(trajectory, list):
+            trajectory = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    trajectory.append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "status": result["status"],
+        "seconds": result["seconds"],
+        "rows": result["rows"],
+    })
+    with open(FLEET_TRAJECTORY, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    print(f"# appended fleet rows to {FLEET_TRAJECTORY} "
+          f"({len(trajectory)} records)", file=sys.stderr)
 
 
 if __name__ == "__main__":

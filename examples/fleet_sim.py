@@ -26,14 +26,19 @@ from repro.fleet import FleetEngine, available_backends, chunk_source, stream
 N_PACKAGES, N_TILES, STEPS = 512, 4, 48
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--backend", default="vmap", choices=available_backends())
+ap.add_argument("--backend", default="broadcast",
+                choices=available_backends())
 ap.add_argument("--devices", type=int, default=0,
                 help="sharded backend device budget (0 = all visible)")
 ap.add_argument("--stream", action="store_true",
                 help="drive the trace through the streaming ingest loop")
+ap.add_argument("--filtration", default="incremental",
+                choices=["incremental", "ring"],
+                help="O(1) sliding-stats fast path or ring-buffer oracle")
 args = ap.parse_args()
 
-eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24",
+                                  filtration_impl=args.filtration),
                   backend=args.backend, devices=args.devices or None)
 state = eng.init(N_PACKAGES)
 

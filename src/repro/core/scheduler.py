@@ -34,6 +34,10 @@ class SchedulerConfig:
     step_ms: float = 10.0          # wall-time of one training step
     lookahead_steps: int = 3       # hint horizon in steps (≈ 20–50 ms)
     filtration_window: int = 16    # Ft depth in steps
+    # "incremental" (O(1)/step sliding sufficient statistics — the serving
+    # fast path) or "ring" (O(W)/step gather + refit — the oracle the
+    # incremental path is verified against, tests/test_filtration.py)
+    filtration_impl: str = "incremental"
     t_safe_margin_c: float = 1.0
     power_exponent: float = 3.0
     straggler_threshold: float = 0.9   # f below this ⇒ tile flagged at-risk
@@ -48,7 +52,9 @@ class SchedulerState(NamedTuple):
     state can carry an entire fleet of packages stepped in lockstep."""
 
     thermal: jnp.ndarray            # [..., n_tiles, n_poles]
-    filtration: pdu_gate.Filtration
+    # FiltrationStats (filtration_impl="incremental", the default) or
+    # Filtration (the "ring" oracle) — structure follows the config
+    filtration: "pdu_gate.FiltrationStats | pdu_gate.Filtration"
     freq: jnp.ndarray               # [..., n_tiles]
     step: jnp.ndarray               # scalar int32
     events: jnp.ndarray             # [...] int32 — T_crit crossings (want 0)
@@ -68,6 +74,9 @@ class ThermalScheduler:
 
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
                  fp: Fingerprint = FINGERPRINT):
+        if cfg.filtration_impl not in ("incremental", "ring"):
+            raise ValueError(f"unknown filtration_impl "
+                             f"{cfg.filtration_impl!r} (incremental|ring)")
         self.cfg = cfg
         self.fp = fp
         base = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
@@ -96,10 +105,14 @@ class ThermalScheduler:
         """
         c = self.cfg
 
+        init_ft = (pdu_gate.init_filtration_stats
+                   if c.filtration_impl == "incremental"
+                   else pdu_gate.init_filtration)
+
         def make() -> SchedulerState:
             return SchedulerState(
                 thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
-                filtration=pdu_gate.init_filtration(
+                filtration=init_ft(
                     c.filtration_window, c.n_tiles, fill=self.fp.rho_min,
                     batch_shape=batch_shape),
                 freq=jnp.ones(batch_shape + (c.n_tiles,)),
@@ -130,9 +143,15 @@ class ThermalScheduler:
         """
         from jax.sharding import PartitionSpec as P
         ba = tuple(batch_axes)
+        if self.cfg.filtration_impl == "incremental":
+            ft = pdu_gate.FiltrationStats(
+                buf=P(*ba, None, None), ptr=P(), wsum=P(*ba, None),
+                csum=P(*ba, None), rsum=P(*ba, None))
+        else:
+            ft = pdu_gate.Filtration(buf=P(*ba, None, None), ptr=P())
         return SchedulerState(
             thermal=P(*ba, None, None),
-            filtration=pdu_gate.Filtration(buf=P(*ba, None, None), ptr=P()),
+            filtration=ft,
             freq=P(*ba, None),
             step=P(),
             events=P(*ba),
@@ -155,10 +174,13 @@ class ThermalScheduler:
         rho = jnp.broadcast_to(jnp.asarray(rho), st.freq.shape)
         ft = pdu_gate.observe(st.filtration, rho)
 
+        # instantaneous tile power, computed ONCE: it floors the hint below
+        # and (scaled by the chosen frequency) drives the plant at the end
+        p_now = power_from_rho(rho)
+
         hint = pdu_gate.hint(ft, self.gamma, c.lookahead_ms, c.step_ms)
         # instantaneous load floors the hint: prediction buys lead time,
         # never permission to exceed budget on a mispredicted onset
-        p_now = power_from_rho(rho)
         hint = jnp.maximum(hint, p_now if self.gamma is None
                            else apply_coupling(self.gamma, p_now))
         dt_now = thermal.delta_t(st.thermal)
@@ -196,7 +218,7 @@ class ThermalScheduler:
         else:  # off — uncontrolled
             freq = jnp.ones_like(st.freq)
 
-        p = power_from_rho(rho) * freq ** c.power_exponent
+        p = p_now * freq ** c.power_exponent
         p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
         thermal_next = thermal.step(self.poles, st.thermal, p_eff)
         temp = fp.t_ambient_c + thermal.delta_t(thermal_next)

@@ -6,8 +6,10 @@ strategies register via `@repro.fleet.backends.register`.
 from repro.fleet.backends.base import (FleetBackend, available_backends,
                                        get_backend, register)
 from repro.fleet.backends.broadcast import BroadcastBackend
+from repro.fleet.backends.fused import FusedBackend
 from repro.fleet.backends.sharded import ShardedBackend
 from repro.fleet.backends.vmap import VmapBackend
 
 __all__ = ["FleetBackend", "available_backends", "get_backend", "register",
-           "VmapBackend", "BroadcastBackend", "ShardedBackend"]
+           "VmapBackend", "BroadcastBackend", "ShardedBackend",
+           "FusedBackend"]

@@ -64,6 +64,16 @@ class FleetBackend:
         """Advance every package one step.  rho: [n_packages, n_tiles]."""
         raise NotImplementedError
 
+    # -- fused fast path ---------------------------------------------------
+    # Backends that can advance a whole [T, n_packages, n_tiles] chunk in
+    # one fused call (e.g. the Pallas whole-step kernel) override this with
+    # a method `(state, rho_trace) -> (state, temps, freqs)` returning the
+    # per-step junction temperatures and frequencies [T, n_packages,
+    # n_tiles]; `FleetEngine` then derives the chunk's telemetry from those
+    # traces in the same jitted program.  ``None`` ⇒ the engine falls back
+    # to scanning `update`.
+    run_block = None
+
     # -- placement --------------------------------------------------------
     def put_trace(self, trace) -> jnp.ndarray:
         """Place a host density chunk [..., n_packages, n_tiles] on device.

@@ -10,7 +10,10 @@ backend (`repro.fleet.backends`):
   * ``vmap``      — `jax.vmap` over a per-package state axis (reference),
   * ``broadcast`` — batch-shaped state arrays, no vmap (lockstep counters),
   * ``sharded``   — package axis partitioned over a device mesh via
-                    `shard_map` (degrades to broadcast on one device).
+                    `shard_map` (degrades to broadcast on one device),
+  * ``fused``     — `run_block`/`run_chunked` chunks advance inside ONE
+                    Pallas whole-step kernel (`repro.kernels.fleet_step`),
+                    state VMEM-resident across the chunk.
 
 All are numerically identical to a Python loop of per-package `update`
 calls — see ``tests/test_fleet.py`` / ``tests/test_fleet_sharded.py`` — but
@@ -94,14 +97,28 @@ class FleetEngine:
     """Pure-functional fleet stepper around one `ThermalScheduler` config.
 
     ``backend`` is a registered backend name (``vmap``/``broadcast``/
-    ``sharded``) or a ready `FleetBackend` instance; ``devices`` is forwarded
-    to the sharded backend (None = all visible devices).
+    ``sharded``/``fused``) or a ready `FleetBackend` instance; ``devices``
+    is forwarded to the sharded backend (None = all visible devices).
+    ``broadcast`` is the default: its lockstep scalar counters are what the
+    O(1) incremental-filtration refresh needs to stay a real `lax.cond`
+    (under vmap's per-lane counters it degrades to a both-branches select);
+    ``vmap`` remains the per-package reference layout.
+
+    ``donate_state``: the jitted `step`/`run`/`run_block`/`run_chunked`
+    entry points donate the state pytree (`jax.jit(donate_argnums=0)`), so
+    a 90k-step soak updates its ring buffers and pole states in place
+    instead of copying the whole fleet state every call.  The engine
+    therefore OWNS the state you pass in — rebind the returned state
+    (``state, ... = eng.step(state, ...)``) and never reuse the old
+    reference.  Defaults to on everywhere donation is implemented (XLA
+    ignores it on CPU, so it is skipped there to avoid warning spam).
     """
 
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
                  fp: Fingerprint = FINGERPRINT,
-                 backend: str | FleetBackend = "vmap",
-                 devices: int | None = None):
+                 backend: str | FleetBackend = "broadcast",
+                 devices: int | None = None,
+                 donate_state: bool | None = None):
         self.cfg = cfg
         self.fp = fp
         self.sched = ThermalScheduler(cfg, fp)
@@ -116,10 +133,14 @@ class FleetEngine:
             kw = {"devices": devices} if backend == "sharded" else {}
             self.backend_impl = get_backend(backend, self.sched, **kw)
         self.backend = self.backend_impl.name
-        self._step = jax.jit(self._step_impl)
-        self._run = jax.jit(self._run_impl)
-        self._run_block = jax.jit(self._run_block_impl)
-        self._run_chunked = jax.jit(self._run_chunked_impl)
+        if donate_state is None:
+            donate_state = jax.default_backend() != "cpu"
+        self.donate_state = donate_state
+        dn = (0,) if donate_state else ()
+        self._step = jax.jit(self._step_impl, donate_argnums=dn)
+        self._run = jax.jit(self._run_impl, donate_argnums=dn)
+        self._run_block = jax.jit(self._run_block_impl, donate_argnums=dn)
+        self._run_chunked = jax.jit(self._run_chunked_impl, donate_argnums=dn)
 
     # ------------------------------------------------------------------ api
     def init(self, n_packages: int) -> SchedulerState:
@@ -195,8 +216,42 @@ class FleetEngine:
             return st, telem
         return jax.lax.scan(tick, state, rho_trace)
 
+    def _telemetry_from_traces(self, rho_trace, temps, freqs,
+                               prev_events) -> FleetTelemetry:
+        """[T]-leaved telemetry derived from per-step temperature/frequency
+        traces — the telemetry plane of the fused whole-chunk backends.
+        Field-for-field identical to stacking `_step_impl`'s records."""
+        t, n = temps.shape[0], temps.shape[1]
+        flat = lambda x: x.reshape(t, -1)
+        crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)    # [T, n]
+        ev_step = crossed.sum(axis=-1).astype(jnp.int32)
+        rtok = rtok_from_rho(rho_trace)
+        return FleetTelemetry(
+            n_packages=jnp.full((t,), n, jnp.int32),
+            events_total=prev_events + jnp.cumsum(ev_step),
+            events_step=ev_step,
+            temp_p50_c=jnp.percentile(flat(temps), 50.0, axis=1),
+            temp_p99_c=jnp.percentile(flat(temps), 99.0, axis=1),
+            temp_max_c=flat(temps).max(axis=1),
+            freq_mean=flat(freqs).mean(axis=1),
+            freq_min=flat(freqs).min(axis=1),
+            released_mtps=flat(rtok * freqs).sum(axis=1),
+            throttled_mtps=flat(rtok * (1.0 - freqs)).sum(axis=1),
+            at_risk_frac=flat(freqs < self.cfg.straggler_threshold
+                              ).mean(axis=1),
+        )
+
     def _run_block_impl(self, state: SchedulerState, rho_trace: jnp.ndarray):
-        state, telems = self._run_impl(state, rho_trace)
+        if self.backend_impl.run_block is not None:
+            # fused whole-chunk path: one kernel for the T-step block, then
+            # the telemetry reductions on its streamed temp/freq traces
+            prev_events = state.events.sum()
+            state, temps, freqs = self.backend_impl.run_block(state,
+                                                              rho_trace)
+            telems = self._telemetry_from_traces(rho_trace, temps, freqs,
+                                                 prev_events)
+        else:
+            state, telems = self._run_impl(state, rho_trace)
         return state, telems.reduce()
 
     def _run_chunked_impl(self, state: SchedulerState, chunked: jnp.ndarray):

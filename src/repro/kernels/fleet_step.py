@@ -1,0 +1,321 @@
+"""Pallas TPU kernel: the WHOLE fleet scheduler step, fused over a K-step chunk.
+
+`thermal_conv.py` fuses only the thermal plant; at fleet scale the paper's
+headline loop (density → filtration → PDU-gate hint → v24 control law →
+two-pole plant → event count, 90 000 steps at the 1 kHz telemetry rate for
+thousands of packages) still crosses HBM once per step per stage.  This
+kernel advances a [packages × tiles] block over a K-step density chunk
+entirely in VMEM:
+
+  * layout: packages on the 128-lane axis, tiles (padded to the 8-sublane
+    f32 tile) on the sublane axis — every per-tile op is a VPU op over the
+    package lanes, and the Γ coupling is a tiny [tp, tp] × [tp, blk] MXU
+    matmul;
+  * grid: 2-D (package-block, time-chunk), extending `thermal_conv.py`'s
+    sequential-grid VMEM-scratch accumulator: the ring buffer, sliding
+    filtration statistics (same closed form as `pdu_gate.FiltrationStats`),
+    two-pole state, frequency and event counters persist in scratch across
+    the time chunks of one package block;
+  * the filtration is the O(1) incremental form: two dynamic sublane reads
+    (evictions) + three FMAs per step — the window is never gathered;
+  * outputs stream the per-step junction temperatures and frequencies (the
+    telemetry plane reduces them outside, in the same jitted program) plus
+    the final ring/thermal state.
+
+The caller (`repro.fleet.backends.fused`) normalises the ring to age-order
+(ptr = 0) before the call and rebuilds the scheduler-state pytree after.
+Interpret mode is the off-TPU fallback, verified against the pure-JAX
+engine to ≤1e-5 (tests/test_fleet_fused.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128      # package-lane block
+SUBLANE = 8     # f32 sublane tile — n_tiles padded up to a multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStepParams:
+    """Static (python-level) scheduler constants baked into the kernel."""
+
+    window: int            # filtration depth W
+    recent: int            # newest-quarter depth Q
+    n_poles: int
+    mode: str              # v24 | reactive | off
+    use_gamma: bool
+    power_exponent: float
+    eta: float
+    t_allow: float         # t_crit − margin − t_ambient
+    gain_sum: float        # Σ pole gains
+    ahead: float           # lookahead_ms / step_ms
+    # power_from_rho's affine chain, kept as the SAME op sequence as
+    # repro.core.density (ρ → R_tok → ΔT → P) so the kernel's floats track
+    # the pure path op-for-op: P = (α·(r_icept + r_slope·ρ) + β) / Rth
+    rtok_slope: float
+    rtok_icept: float
+    alpha: float
+    beta: float
+    rth: float
+    rho_hi: float          # predict_rho clip ceiling (1.5·ρ_max)
+    t_crit_c: float
+    t_ambient_c: float
+    throttle_floor: float
+    decay: tuple           # per-pole a_i = exp(−dt/τ_i), python floats
+    gain: tuple            # per-pole G_i [°C/W]
+
+
+def _pad_axis(x, n, axis, value=0.0):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
+            ev0_ref, temp_ref, freqs_ref, buf_ref, th_ref, ev_ref,
+            ring_scr, th_scr, stat_scr, f_scr, e_scr, *,
+            ck: int, tp: int, n_tiles: int, p: FleetStepParams):
+    c = pl.program_id(1)
+    w, q, np_ = p.window, p.recent, p.n_poles
+    tm = (p.window - 1) / 2.0
+    denom = p.window * (p.window * p.window - 1) / 12.0
+    inv_exp = 1.0 / p.power_exponent
+
+    @pl.when(c == 0)
+    def _load_state():
+        ring_scr[...] = buf0_ref[...]
+        th_scr[...] = th0_ref[...]
+        stat_scr[...] = stats0_ref[...]
+        f_scr[...] = freq0_ref[...]
+        e_scr[...] = ev0_ref[...]
+
+    gamma = gamma_ref[...]                                   # [tp, tp]
+    if p.use_gamma:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (tp, tp), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tp, tp), 1)
+        gdiag = jnp.sum(jnp.where(rows == cols, gamma, 0.0), axis=1,
+                        keepdims=True)                       # [tp, 1]
+
+    def couple(x):                                           # Γ @ x over tiles
+        return jnp.dot(gamma, x, preferred_element_type=jnp.float32)
+
+    def tick(i, _):
+        step = c * ck + i
+        ptr = step % w                   # caller rolled the ring to ptr0 = 0
+        rho = rho_ref[i]                                     # [tp, blk]
+
+        # -- incremental filtration: O(1) evict-reads + FMAs ---------------
+        x_old = ring_scr[pl.ds(ptr * tp, tp), :]
+        x_rec = ring_scr[pl.ds(((ptr + w - q) % w) * tp, tp), :]
+        wsum = stat_scr[0:tp, :]
+        csum = stat_scr[tp:2 * tp, :]
+        rsum = stat_scr[2 * tp:3 * tp, :]
+        wsum_n = wsum - x_old + rho
+        csum_n = csum - wsum + (tm + 1.0) * x_old + tm * rho
+        rsum_n = rsum - x_rec + rho
+        ring_scr[pl.ds(ptr * tp, tp), :] = rho
+
+        # exact refresh at wraparound (same contract as the pure-JAX
+        # `pdu_gate._observe_stats`): recompute the three sums from the
+        # whole ring — at ptr 0 the ring is age-ordered, so each sum is a
+        # constant [tp, W·tp] selection/weight matrix applied on the MXU.
+        # Runs once every W steps, bounding drift over arbitrary chunks.
+        def _refresh():
+            rows = jax.lax.broadcasted_iota(jnp.int32, (tp, w * tp), 1)
+            tiles = jax.lax.broadcasted_iota(jnp.int32, (tp, w * tp), 0)
+            sel = (rows % tp == tiles).astype(jnp.float32)
+            age = (rows // tp).astype(jnp.float32)
+            ring = ring_scr[...]
+            mm = lambda m: jnp.dot(m, ring,
+                                   preferred_element_type=jnp.float32)
+            return (mm(sel), mm(sel * (age - tm)),
+                    mm(sel * (age >= w - q).astype(jnp.float32)))
+
+        wsum_n, csum_n, rsum_n = jax.lax.cond(
+            (step + 1) % w == 0, _refresh,
+            lambda: (wsum_n, csum_n, rsum_n))
+        stat_scr[0:tp, :] = wsum_n
+        stat_scr[tp:2 * tp, :] = csum_n
+        stat_scr[2 * tp:3 * tp, :] = rsum_n
+
+        power_from = lambda r: (p.alpha * (p.rtok_icept + p.rtok_slope * r)
+                                + p.beta) / p.rth
+        p_now = power_from(rho)
+        dt_now = th_scr[0:tp, :]
+        for j in range(1, np_):
+            dt_now = dt_now + th_scr[j * tp:(j + 1) * tp, :]
+        f_prev = f_scr[...]
+
+        # -- PDU-gate hint + v24 control law -------------------------------
+        if p.mode == "v24":
+            pred = jnp.clip(rsum_n / q + (csum_n / denom) * p.ahead,
+                            0.0, p.rho_hi)
+            p_ahead = power_from(pred)
+            if p.use_gamma:
+                hint = jnp.maximum(couple(p_ahead), couple(p_now))
+            else:
+                hint = jnp.maximum(p_ahead, p_now)
+            # η·gain_sum multiplied in f32 like the pure path (gain_sum is
+            # a traced f32 scalar there) — keeps budget bit-aligned
+            budget = (p.t_allow - (1.0 - p.eta) * dt_now) \
+                / (jnp.float32(p.eta) * jnp.float32(p.gain_sum))
+            f_uni = jnp.clip((budget / jnp.maximum(hint, 1e-3)) ** inv_exp,
+                             0.05, 1.0)
+            if p.use_gamma:
+                p_prev = p_now * f_prev ** p.power_exponent
+                neigh = couple(p_prev) - gdiag * p_prev
+                f_cpl = jnp.clip(
+                    (jnp.maximum(budget - neigh, 1e-6)
+                     / jnp.maximum(gdiag * p_now, 1e-3)) ** inv_exp,
+                    0.05, 1.0)
+                freq = jnp.minimum(jnp.minimum(f_uni, f_cpl), f_prev + 0.05)
+            else:
+                freq = f_uni
+        elif p.mode == "reactive":
+            hot = (p.t_ambient_c + dt_now) >= p.t_crit_c
+            freq = jnp.where(hot, p.throttle_floor,
+                             jnp.minimum(f_prev + 0.1, 1.0))
+        else:                                                # off
+            freq = jnp.ones_like(f_prev)
+
+        # -- plant + events -----------------------------------------------
+        power = p_now * freq ** p.power_exponent
+        p_eff = couple(power) if p.use_gamma else power
+        dt_next = jnp.zeros_like(dt_now)
+        for j in range(np_):
+            st_j = p.decay[j] * th_scr[j * tp:(j + 1) * tp, :] \
+                + (1.0 - p.decay[j]) * p.gain[j] * p_eff
+            th_scr[j * tp:(j + 1) * tp, :] = st_j
+            dt_next = dt_next + st_j
+        temp = p.t_ambient_c + dt_next
+        # event = any REAL tile over t_crit: mask the padded phantom tile
+        # rows so they can never inflate a package's counter (they sit at a
+        # benign fill temperature, but t_crit is caller-configurable)
+        real = (jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0) < n_tiles)
+        crossed = jnp.max(
+            jnp.where(real, (temp > p.t_crit_c).astype(jnp.float32), 0.0),
+            axis=0, keepdims=True)                           # any over tiles
+        e_scr[...] = e_scr[...] + crossed
+        f_scr[...] = freq
+
+        temp_ref[pl.ds(i, 1)] = temp[None]
+        freqs_ref[pl.ds(i, 1)] = freq[None]
+        return 0
+
+    jax.lax.fori_loop(0, ck, tick, 0)
+
+    # final-state outputs are rewritten every chunk (same pattern as
+    # thermal_conv.py): the last chunk's write is the one that lands
+    buf_ref[...] = ring_scr[...]
+    th_ref[...] = th_scr[...]
+    ev_ref[...] = e_scr[...]
+
+
+def _divisor_chunk(t: int, target: int) -> int:
+    """Largest divisor of t that is ≤ target (grid chunks must tile T)."""
+    best = 1
+    for d in range(1, min(target, t) + 1):
+        if t % d == 0:
+            best = d
+    return best
+
+
+def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
+               params: FleetStepParams, *, block_packages: int = LANE,
+               time_chunk: int = 256, interpret: bool | None = None):
+    """Fused K-step fleet advance.
+
+    Args (tiles-on-sublanes layout, packages last):
+      rho:    [T, n_tiles, n] density chunk
+      buf0:   [W, n_tiles, n] age-ordered ring (oldest first — ptr = 0)
+      th0:    [n_poles, n_tiles, n] pole states
+      stats0: [3, n_tiles, n] (wsum, csum, rsum)
+      freq0:  [n_tiles, n];  ev0: [1, n] float32 cumulative event counts
+      gamma:  [n_tiles, n_tiles] or None (pole constants ride in ``params``)
+
+    Returns (temps [T, n_tiles, n], freqs [T, n_tiles, n],
+             buf [W, n_tiles, n] (ring, ptr = T mod W),
+             th [n_poles, n_tiles, n], ev [1, n]).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t, n_tiles, n = rho.shape
+    w, np_ = params.window, params.n_poles
+    tp = ((n_tiles + SUBLANE - 1) // SUBLANE) * SUBLANE
+    blk = min(block_packages, LANE * ((n + LANE - 1) // LANE))
+    n_pad = ((n + blk - 1) // blk) * blk
+    ck = _divisor_chunk(t, time_chunk)
+    grid = (n_pad // blk, t // ck)
+
+    f32 = jnp.float32
+    # pad tiles (neutral values) then packages; padded tile rows have zero
+    # Γ rows/cols, so they never contaminate real tiles
+    def prep(x, tile_axis, fill):
+        x = _pad_axis(x.astype(f32), tp, tile_axis, fill)
+        return _pad_axis(x, n_pad, x.ndim - 1, fill)
+
+    rho_p = prep(rho, 1, params.rho_hi / 1.5 / 3.0)   # benign in-domain fill
+    buf_p = prep(buf0, 1, 0.0)
+    th_p = prep(th0, 1, 0.0)
+    stats_p = prep(stats0, 1, 0.0)
+    freq_p = prep(freq0, 0, 1.0)
+    ev_p = _pad_axis(ev0.astype(f32), n_pad, 1, 0.0)
+    g = jnp.zeros((tp, tp), f32) if gamma is None else \
+        _pad_axis(_pad_axis(gamma.astype(f32), tp, 0), tp, 1)
+
+    # fold the [W|poles|stats, tiles] leading dims into the sublane axis
+    buf_p = buf_p.reshape(w * tp, n_pad)
+    th_p = th_p.reshape(np_ * tp, n_pad)
+    stats_p = stats_p.reshape(3 * tp, n_pad)
+
+    state_spec = lambda r: pl.BlockSpec((r, blk), lambda b, c: (0, b))
+    trace_spec = pl.BlockSpec((ck, tp, blk), lambda b, c: (c, 0, b))
+    temps, freqs, buf, th, ev = pl.pallas_call(
+        functools.partial(_kernel, ck=ck, tp=tp, n_tiles=n_tiles, p=params),
+        grid=grid,
+        in_specs=[
+            trace_spec,                                        # rho
+            pl.BlockSpec((tp, tp), lambda b, c: (0, 0)),       # gamma
+            state_spec(w * tp),                                # buf0
+            state_spec(np_ * tp),                              # th0
+            state_spec(3 * tp),                                # stats0
+            state_spec(tp),                                    # freq0
+            state_spec(1),                                     # ev0
+        ],
+        out_specs=[
+            trace_spec,                                        # temps
+            trace_spec,                                        # freqs
+            state_spec(w * tp),                                # buf
+            state_spec(np_ * tp),                              # th
+            state_spec(1),                                     # ev
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, tp, n_pad), f32),
+            jax.ShapeDtypeStruct((t, tp, n_pad), f32),
+            jax.ShapeDtypeStruct((w * tp, n_pad), f32),
+            jax.ShapeDtypeStruct((np_ * tp, n_pad), f32),
+            jax.ShapeDtypeStruct((1, n_pad), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((w * tp, blk), f32),                    # ring
+            pltpu.VMEM((np_ * tp, blk), f32),                  # poles
+            pltpu.VMEM((3 * tp, blk), f32),                    # stats
+            pltpu.VMEM((tp, blk), f32),                        # freq
+            pltpu.VMEM((1, blk), f32),                         # events
+        ],
+        interpret=interpret,
+    )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p)
+
+    return (temps[:, :n_tiles, :n], freqs[:, :n_tiles, :n],
+            buf.reshape(w, tp, n_pad)[:, :n_tiles, :n],
+            th.reshape(np_, tp, n_pad)[:, :n_tiles, :n],
+            ev[:, :n])

@@ -89,11 +89,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=1,
                     help="simulate N packages; >1 enables batched fleet mode")
-    ap.add_argument("--fleet-backend", default="vmap",
+    ap.add_argument("--fleet-backend", default="broadcast",
                     choices=available_backends(),
                     help="fleet execution strategy")
     ap.add_argument("--fleet-devices", type=int, default=0,
                     help="sharded backend device budget (0 = all visible)")
+    ap.add_argument("--filtration", default="incremental",
+                    choices=["incremental", "ring"],
+                    help="filtration fast path (O(1) sliding stats) or the "
+                         "ring-buffer oracle")
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
@@ -104,7 +108,8 @@ def main(argv=None):
         cfg = reduced(cfg)
     key = jax.random.PRNGKey(args.seed)
     max_seq = args.prompt_len + args.gen
-    sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0)
+    sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0,
+                                filtration_impl=args.filtration)
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 

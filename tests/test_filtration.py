@@ -1,0 +1,167 @@
+"""Incremental filtration (O(1) sliding sufficient statistics) vs the
+ring-buffer oracle.
+
+The sliding form must reproduce `predict_rho` over ANY trace — including
+the fill-value warmup phase (buffer still holds init values) and pointer
+wraparound (where the stats are exactly refreshed from the ring) — and the
+scheduler trajectories of the two `filtration_impl` configs must agree to
+the fleet tolerance (≤1e-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdu_gate
+from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _drive(window, n_tiles, fill, trace):
+    """Step both representations through a trace; yield per-step pairs."""
+    ring = pdu_gate.init_filtration(window, n_tiles, fill=fill)
+    stats = pdu_gate.init_filtration_stats(window, n_tiles, fill=fill)
+    obs = jax.jit(pdu_gate.observe)
+    for rho in trace:
+        ring = obs(ring, rho)
+        stats = obs(stats, rho)
+        yield ring, stats
+
+
+# ---------------------------------------------------------------- unit ----
+def test_init_stats_match_exact_stats():
+    st = pdu_gate.init_filtration_stats(16, 3, fill=1.3)
+    w, c, r = pdu_gate.exact_stats(st.buf, st.ptr)
+    np.testing.assert_allclose(np.asarray(st.wsum), np.asarray(w), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st.csum), np.asarray(c), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st.rsum), np.asarray(r), rtol=1e-6)
+
+
+def test_exact_stats_any_ptr():
+    """exact_stats agrees with a brute-force ordered recompute at every ptr."""
+    key = jax.random.PRNGKey(0)
+    buf = 0.9 + 1.8 * jax.random.uniform(key, (8, 2))
+    for ptr in range(8):
+        w, c, r = pdu_gate.exact_stats(buf, jnp.asarray(ptr))
+        hist = np.asarray(pdu_gate._ordered(
+            pdu_gate.Filtration(buf=buf, ptr=jnp.asarray(ptr, jnp.int32))))
+        k = np.arange(8.0)
+        np.testing.assert_allclose(np.asarray(w), hist.sum(0), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(c),
+                                   ((k - k.mean())[:, None] * hist).sum(0),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r), hist[-2:].sum(0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("window", [2, 4, 16, 64])
+def test_incremental_reproduces_ring_predict(window):
+    """Deterministic sweep across warmup + two wraparounds."""
+    key = jax.random.PRNGKey(window)
+    trace = 0.9 + 1.8 * jax.random.uniform(key, (2 * window + 3, 4))
+    for t, (ring, stats) in enumerate(_drive(window, 4, 0.9, trace)):
+        a = np.asarray(pdu_gate.predict_rho(ring, 30.0, 10.0))
+        b = np.asarray(pdu_gate.predict_rho(stats, 30.0, 10.0))
+        np.testing.assert_allclose(a, b, err_msg=f"t={t}", **TOL)
+        np.testing.assert_array_equal(np.asarray(ring.buf),
+                                      np.asarray(stats.buf))
+        assert int(ring.ptr) == int(stats.ptr)
+
+
+def test_incremental_state_is_o1_per_tile():
+    """The stats the predictor actually reads are O(1) per tile (the ring
+    stays only as the O(1)-read eviction source)."""
+    st = pdu_gate.init_filtration_stats(64, 4, fill=0.9)
+    for leaf in (st.wsum, st.csum, st.rsum):
+        assert leaf.shape == (4,)
+
+
+# ----------------------------------------------------- hypothesis ---------
+# hypothesis is an optional dep (see ROADMAP): guard the property tests only,
+# NOT the whole module — the deterministic oracle checks above must always run.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    short = settings(max_examples=20, deadline=None)
+
+    @short
+    @given(st.integers(2, 32), st.integers(1, 4), st.floats(0.0, 2.7),
+           st.integers(0, 2 ** 31 - 1), st.floats(1.0, 5.0))
+    def test_sliding_stats_reproduce_ring(window, n_tiles, fill, seed, ahead):
+        """Property: for random windows, fills, and traces long enough to
+        cover warmup AND wraparound, sliding sufficient statistics reproduce
+        the ring-buffer least-squares predictor at every step."""
+        key = jax.random.PRNGKey(seed)
+        steps = 2 * window + 2
+        trace = 0.9 + 1.8 * jax.random.uniform(key, (steps, n_tiles))
+        for t, (ring, stats) in enumerate(_drive(window, n_tiles, fill,
+                                                 trace)):
+            a = np.asarray(pdu_gate.predict_rho(ring, ahead, 1.0))
+            b = np.asarray(pdu_gate.predict_rho(stats, ahead, 1.0))
+            np.testing.assert_allclose(a, b, err_msg=f"t={t}", **TOL)
+
+    @short
+    @given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+    def test_sliding_stats_sums_exact_after_wrap(window, seed):
+        """Property: right after any wraparound the stats are bit-identical
+        to a fresh recompute (the refresh really fires)."""
+        key = jax.random.PRNGKey(seed)
+        trace = 0.9 + 1.8 * jax.random.uniform(key, (window, 2))
+        *_, (ring, stats) = _drive(window, 2, 1.1, trace)
+        assert int(stats.ptr) == 0
+        w, c, r = pdu_gate.exact_stats(stats.buf, 0)
+        np.testing.assert_array_equal(np.asarray(stats.wsum), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(stats.csum), np.asarray(c))
+        np.testing.assert_array_equal(np.asarray(stats.rsum), np.asarray(r))
+
+
+# ------------------------------------------------- scheduler-level --------
+@pytest.mark.parametrize("mode", ["v24", "reactive"])
+def test_scheduler_incremental_matches_ring(mode):
+    """Full closed-loop trajectories of the two filtration configs agree."""
+    key = jax.random.PRNGKey(7)
+    trace = 0.9 + 1.8 * jax.random.uniform(key, (40, 4))
+    outs = {}
+    for impl in ("incremental", "ring"):
+        cfg = SchedulerConfig(n_tiles=4, mode=mode, filtration_window=8,
+                              filtration_impl=impl)
+        sched = ThermalScheduler(cfg)
+        upd = jax.jit(sched.update)
+        s = sched.init()
+        fs, ts, hs = [], [], []
+        for rho in trace:
+            s, out = upd(s, rho)
+            fs.append(np.asarray(out.freq))
+            ts.append(np.asarray(out.temp_c))
+            hs.append(np.asarray(out.hint_w))
+        outs[impl] = (np.stack(fs), np.stack(ts), np.stack(hs),
+                      int(s.events))
+    for a, b in zip(outs["incremental"][:3], outs["ring"][:3]):
+        np.testing.assert_allclose(a, b, **TOL)
+    assert outs["incremental"][3] == outs["ring"][3]
+
+
+def test_scheduler_state_pspecs_incremental_congruent():
+    """The sharded-init spec pytree tracks the stats state structure."""
+    from jax.sharding import PartitionSpec as P
+    sched = ThermalScheduler(SchedulerConfig(n_tiles=3))
+    state = sched.init(batch_shape=(8,))
+    assert isinstance(state.filtration, pdu_gate.FiltrationStats)
+    specs = sched.state_pspecs(batch_axes=("packages",))
+    flat_s, tdef_s = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    flat_x, tdef_x = jax.tree_util.tree_flatten(state)
+    assert tdef_s == tdef_x
+    for leaf, spec in zip(flat_x, flat_s):
+        assert len(spec) <= leaf.ndim
+
+
+def test_bad_filtration_impl_rejected():
+    with pytest.raises(ValueError, match="filtration_impl"):
+        ThermalScheduler(SchedulerConfig(filtration_impl="nope"))
