@@ -16,10 +16,13 @@ Acceptance bars:
   * incremental filtration (O(1) sliding sufficient statistics) must be
     ≥2× the PR-2 ring-buffer baseline's pkg_steps_per_s at 4096 packages
     with filtration_window=64;
-  * incremental filtration AND the fused Pallas whole-step backend must
-    match the PR-2 pure-JAX vmap/ring reference to ≤1e-5 over a 90k-step
-    trace (fused off-TPU runs in interpret mode: correctness-gated only,
-    its wall-clock is reported, not gated).
+  * incremental filtration AND the fused Pallas whole-step backend AND its
+    sharded_fused composition (one kernel per device partition) must match
+    the PR-2 pure-JAX vmap/ring reference to ≤1e-5 over a 90k-step trace
+    (fused off-TPU runs in interpret mode: correctness-gated only, its
+    wall-clock is reported, not gated);
+  * sharded_fused weak-scales like sharded: released-MTPS capacity tracks
+    the emulated mesh size at 128 packages/device.
 
 `benchmarks.run` appends this module's rows to ``BENCH_fleet.json`` at the
 repo root, so the fleet fast path accumulates a perf trajectory across PRs.
@@ -74,7 +77,7 @@ _SCALE_CODE = """
     NDEV, PER_DEV, STEPS = {ndev}, 128, 64
     n = NDEV * PER_DEV
     eng = FleetEngine(SchedulerConfig(n_tiles=4, mode="v24"),
-                      backend="sharded", devices=NDEV)
+                      backend={backend!r}, devices=NDEV)
     assert eng.backend_impl.n_devices() == NDEV
     trace = 0.9 + 1.8 * jax.random.uniform(jax.random.PRNGKey(0),
                                            (STEPS, n, 4))
@@ -91,14 +94,16 @@ _SCALE_CODE = """
 """
 
 
-def _sharded_scaling() -> None:
+def _sharded_scaling(backend: str = "sharded") -> None:
     """Weak scaling over emulated devices: 128 packages per device, so fleet
     capacity (released MTPS) must track the mesh size — PROVIDED the state
     really partitions (asserted inside the subprocess via the sharding's
     device_set; without that check the MTPS growth would hold by
     construction).  Wall-clock pkg_steps_per_s is reported but not gated:
     emulated devices share the host's cores, so timing scaling is too noisy
-    for CI.  Subprocesses keep the parent single-device."""
+    for CI.  Subprocesses keep the parent single-device.  Runs for both the
+    pure-JAX ``sharded`` backend and the ``sharded_fused`` composition (one
+    Pallas whole-step kernel per device partition)."""
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     released = {}
@@ -106,15 +111,16 @@ def _sharded_scaling() -> None:
         env = dict(os.environ, PYTHONPATH=src,
                    XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}")
         out = subprocess.run(
-            [sys.executable, "-c", textwrap.dedent(_SCALE_CODE.format(ndev=ndev))],
+            [sys.executable, "-c", textwrap.dedent(
+                _SCALE_CODE.format(ndev=ndev, backend=backend))],
             capture_output=True, text=True, env=env, timeout=540)
         assert out.returncode == 0, out.stderr[-2000:]
         mtps, rate = out.stdout.strip().split()[-2:]
         released[ndev] = float(mtps)
-        row(f"fleet.sharded_scale_dev{ndev}", 0.0,
+        row(f"fleet.{backend}_scale_dev{ndev}", 0.0,
             f"released_mtps={float(mtps):.0f};pkg_steps_per_s={rate}")
-    assert released[2] > 1.5 * released[1], released
-    assert released[4] > 1.5 * released[2], released
+    assert released[2] > 1.5 * released[1], (backend, released)
+    assert released[4] > 1.5 * released[2], (backend, released)
 
 
 def _filtration_fast_path() -> None:
@@ -155,14 +161,15 @@ def _filtration_fast_path() -> None:
 
 
 def _fused_backend(cfg) -> None:
-    """Fused Pallas whole-step backend vs vmap over `run_block`.  Off-TPU
-    the kernel runs in interpret mode, so the wall-clock row is informative
-    only; correctness (≤1e-5 vs the pure-JAX reference) IS gated."""
+    """Fused Pallas whole-step backend — and its sharded_fused composition
+    on the trivial 1-mesh — vs vmap over `run_block`.  Off-TPU the kernel
+    runs in interpret mode, so the wall-clock rows are informative only;
+    correctness (≤1e-5 vs the pure-JAX reference) IS gated for both."""
     n, steps = 256, 64
     trace = jax.block_until_ready(0.9 + 1.8 * jax.random.uniform(
         jax.random.PRNGKey(1), (steps, n, N_TILES)))
     us, telem = {}, {}
-    for backend in ("vmap", "fused"):
+    for backend in ("vmap", "fused", "sharded_fused"):
         # donate_state=False: the timing closure feeds the SAME state every
         # iteration, which a donating engine would have deleted after call 1
         eng = FleetEngine(cfg, backend=backend, donate_state=False)
@@ -176,21 +183,24 @@ def _fused_backend(cfg) -> None:
         telem[backend], us[backend] = timed(go, iters=3, best=True)
         row(f"fleet.fused_{backend}_{n}", us[backend] / steps,
             f"pkg_steps_per_s={n * steps / (us[backend] / 1e6):.0f}")
-    def rel(f):
-        return (abs(float(getattr(telem["fused"], f))
-                    - float(getattr(telem["vmap"], f)))
-                / max(abs(float(getattr(telem["vmap"], f))), 1.0))
-    # freq_min / at_risk_frac are order/threshold statistics — one ulp-level
-    # flag flip moves them past 1e-5 (see _equivalence_90k) — discrete bound
-    err = max(rel(f) for f in telem["vmap"]._fields
-              if f not in ("freq_min", "at_risk_frac"))
-    knife = max(rel("freq_min"), rel("at_risk_frac"))
+
     on_tpu = jax.default_backend() == "tpu"
-    row("fleet.fused_vs_vmap", 0.0,
-        f"ratio={us['fused'] / us['vmap']:.2f}x;rel_err={err:.2e}"
-        f"(need<=1e-5);knife_edge_err={knife:.2e};interpret={not on_tpu}")
-    assert err <= 1e-5, f"fused backend diverges from vmap: {err:.2e}"
-    assert knife <= 1e-3, f"fused knife-edge stats diverge: {knife:.2e}"
+    for backend in ("fused", "sharded_fused"):
+        def rel(f, backend=backend):
+            return (abs(float(getattr(telem[backend], f))
+                        - float(getattr(telem["vmap"], f)))
+                    / max(abs(float(getattr(telem["vmap"], f))), 1.0))
+        # freq_min / at_risk_frac are order/threshold statistics — one
+        # ulp-level flag flip moves them past 1e-5 (see _equivalence_90k)
+        # — discrete bound
+        err = max(rel(f) for f in telem["vmap"]._fields
+                  if f not in ("freq_min", "at_risk_frac"))
+        knife = max(rel("freq_min"), rel("at_risk_frac"))
+        row(f"fleet.{backend}_vs_vmap", 0.0,
+            f"ratio={us[backend] / us['vmap']:.2f}x;rel_err={err:.2e}"
+            f"(need<=1e-5);knife_edge_err={knife:.2e};interpret={not on_tpu}")
+        assert err <= 1e-5, f"{backend} diverges from vmap: {err:.2e}"
+        assert knife <= 1e-3, f"{backend} knife-edge stats: {knife:.2e}"
 
 
 def _equivalence_90k() -> None:
@@ -220,8 +230,12 @@ def _equivalence_90k() -> None:
     # the integer event counters carry the 1e-5 contract.
     knife_edge = {"freq_min": 1e-3, "at_risk_frac": 1e-3}
     _, ref, dt_ref = soak("ring", "vmap")            # the PR-2 baseline
-    for name, impl, backend in (("incremental", "incremental", "broadcast"),
-                                ("fused", "incremental", "fused")):
+    for name, impl, backend in (
+            ("incremental", "incremental", "broadcast"),
+            ("fused", "incremental", "fused"),
+            # the composition on the trivial 1-mesh (multi-device meshes are
+            # gated by tests/test_fleet_sharded_fused.py subprocesses)
+            ("sharded_fused", "incremental", "sharded_fused")):
         state, got, dt = soak(impl, backend)
         errs = {f: np.max(np.abs(np.asarray(gf, np.float64)
                                  - np.asarray(rf, np.float64))
@@ -335,7 +349,8 @@ def run() -> None:
 
     _filtration_fast_path()
     _fused_backend(cfg)
-    _sharded_scaling()
+    _sharded_scaling("sharded")
+    _sharded_scaling("sharded_fused")
     _streaming_90k(cfg)
     _equivalence_90k()
 

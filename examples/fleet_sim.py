@@ -29,7 +29,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--backend", default="broadcast",
                 choices=available_backends())
 ap.add_argument("--devices", type=int, default=0,
-                help="sharded backend device budget (0 = all visible)")
+                help="sharded/sharded_fused backend device budget "
+                     "(0 = all visible)")
 ap.add_argument("--stream", action="store_true",
                 help="drive the trace through the streaming ingest loop")
 ap.add_argument("--filtration", default="incremental",

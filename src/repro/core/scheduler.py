@@ -72,8 +72,11 @@ class SchedulerOutput(NamedTuple):
 class ThermalScheduler:
     """Pure-functional scheduler: `state = init(); state, out = update(state, ρ)`."""
 
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+    def __init__(self, cfg: SchedulerConfig | None = None,
                  fp: Fingerprint = FINGERPRINT):
+        # default constructed per instance — a shared default-argument
+        # object would alias every default-constructed scheduler's config
+        cfg = SchedulerConfig() if cfg is None else cfg
         if cfg.filtration_impl not in ("incremental", "ring"):
             raise ValueError(f"unknown filtration_impl "
                              f"{cfg.filtration_impl!r} (incremental|ring)")

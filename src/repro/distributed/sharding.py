@@ -207,11 +207,34 @@ def fleet_trace_spec(ndim: int, axis: str = FLEET_AXIS,
     """Spec for density traces: shard ``package_dim`` over the fleet axis.
 
     [n_packages, n_tiles] chunks use the default; [T, n_packages, n_tiles]
-    streaming chunks pass ``package_dim=1``.
+    streaming chunks pass ``package_dim=1`` and [C, K, n_packages, n_tiles]
+    pre-chunked traces ``package_dim=2`` (the package axis always sits just
+    before the tile axis).
     """
     dims = [None] * ndim
     dims[package_dim] = axis
     return P(*dims)
+
+
+def fleet_shard_map(f, mesh, in_specs, out_specs):
+    """`shard_map` across JAX versions with replication checking OFF.
+
+    The sharded-fused fleet backend maps a `pallas_call` over the package
+    mesh; pallas has no replication rule, so `check_rep` (0.4.x) /
+    `check_vma` (newer top-level `jax.shard_map`) must be disabled.  The
+    out_specs still place every result, so disabling the check loses
+    nothing but the static verifier.
+    """
+    if hasattr(jax, "shard_map"):
+        for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+            try:                                 # pragma: no cover
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 # ===================================================== activation constraints

@@ -4,12 +4,13 @@ Importing this package registers the built-in backends; third-party
 strategies register via `@repro.fleet.backends.register`.
 """
 from repro.fleet.backends.base import (FleetBackend, available_backends,
-                                       get_backend, register)
+                                       backend_class, get_backend, register)
 from repro.fleet.backends.broadcast import BroadcastBackend
 from repro.fleet.backends.fused import FusedBackend
 from repro.fleet.backends.sharded import ShardedBackend
+from repro.fleet.backends.sharded_fused import ShardedFusedBackend
 from repro.fleet.backends.vmap import VmapBackend
 
-__all__ = ["FleetBackend", "available_backends", "get_backend", "register",
-           "VmapBackend", "BroadcastBackend", "ShardedBackend",
-           "FusedBackend"]
+__all__ = ["FleetBackend", "available_backends", "backend_class",
+           "get_backend", "register", "VmapBackend", "BroadcastBackend",
+           "ShardedBackend", "ShardedFusedBackend", "FusedBackend"]

@@ -31,14 +31,18 @@ def available_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def get_backend(name: str, sched: ThermalScheduler, **kwargs) -> "FleetBackend":
-    """Instantiate a registered backend by name (kwargs are backend-specific)."""
+def backend_class(name: str) -> type["FleetBackend"]:
+    """Resolve a registered backend class by name (no instantiation)."""
     try:
-        cls = _REGISTRY[name]
+        return _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown fleet backend {name!r}; "
                          f"available: {available_backends()}") from None
-    return cls(sched, **kwargs)
+
+
+def get_backend(name: str, sched: ThermalScheduler, **kwargs) -> "FleetBackend":
+    """Instantiate a registered backend by name (kwargs are backend-specific)."""
+    return backend_class(name)(sched, **kwargs)
 
 
 class FleetBackend:
@@ -50,6 +54,10 @@ class FleetBackend:
     """
 
     name: str = ""
+    # device-mesh backends (sharded / sharded_fused) take a ``devices=``
+    # budget in their constructor; `FleetEngine` forwards its ``devices``
+    # argument only to backends that declare it
+    accepts_devices: bool = False
 
     def __init__(self, sched: ThermalScheduler):
         self.sched = sched

@@ -9,11 +9,16 @@ via `ThermalScheduler.init(shardings=...)` so the full fleet never
 materialises on one device.
 
 Graceful degradation: requesting more devices than the host has, or a fleet
-size the mesh doesn't divide, silently falls back to the largest compatible
-mesh (worst case a trivial 1-device mesh, where sharded ≡ broadcast —
-bit-identical, see tests/test_fleet_sharded.py).
+size the mesh doesn't divide, falls back to the largest compatible mesh
+(worst case a trivial 1-device mesh, where sharded ≡ broadcast —
+bit-identical, see tests/test_fleet_sharded.py).  The fallback is LOUD: a
+`RuntimeWarning` names the requested→actual device counts, and
+`describe()` always carries the actual mesh size, so a soak run can't
+silently collapse onto one device.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +34,7 @@ from repro.fleet.backends.base import FleetBackend, register
 @register
 class ShardedBackend(FleetBackend):
     name = "sharded"
+    accepts_devices = True
 
     def __init__(self, sched: ThermalScheduler, devices: int | None = None):
         super().__init__(sched)
@@ -38,22 +44,55 @@ class ShardedBackend(FleetBackend):
         self._out_specs = sched.output_pspecs(batch_axes=(FLEET_AXIS,))
 
     # -- state ------------------------------------------------------------
-    def init(self, n_packages: int) -> SchedulerState:
-        # re-derive the mesh from the requested budget on every init — a
-        # previous indivisible fleet must not stick the engine on a shrunken
-        # mesh once a divisible fleet size comes along
-        budget = len(fleet_mesh(self._requested).devices.ravel())
+    def _resolve_mesh(self, n_packages: int) -> None:
+        """Re-derive the mesh from the requested budget for this fleet size.
+
+        Re-derived on every init — a previous indivisible fleet must not
+        stick the engine on a shrunken mesh once a divisible size comes
+        along.  Any downgrade (host has fewer devices than requested, or
+        the fleet size is indivisible) warns with the requested→actual
+        counts instead of degrading silently.
+        """
+        visible = len(jax.devices())
+        requested = self._requested or visible
+        clamped = len(fleet_mesh(self._requested).devices.ravel())
+        budget = clamped
         if n_packages % budget:
             # largest divisor of n_packages the device budget covers
             budget = max(d for d in range(1, budget + 1)
                          if n_packages % d == 0)
+        if budget != requested:
+            # name the cause(s) precisely — a visible-device clamp and an
+            # indivisible fleet size call for different operator fixes —
+            # and only say "requested" when devices= was actually passed
+            causes = []
+            if clamped < requested:
+                causes.append(f"only {visible} devices visible")
+            if budget < clamped:
+                causes.append(f"n_packages={n_packages} must divide "
+                              f"the mesh")
+            what = (f"requested {requested} devices but running on {budget}"
+                    if self._requested else
+                    f"using {budget} of {visible} visible devices")
+            warnings.warn(
+                f"{self.name} fleet backend: {what} "
+                f"({'; '.join(causes)}) — check describe() before "
+                f"trusting scaling numbers",
+                RuntimeWarning, stacklevel=3)
         self.mesh = fleet_mesh(budget)
+
+    def init(self, n_packages: int) -> SchedulerState:
+        self._resolve_mesh(n_packages)
         return self.sched.init(
             batch_shape=(n_packages,),
             shardings=to_shardings(self.mesh, self._state_specs))
 
     def update(self, state: SchedulerState, rho: jnp.ndarray
                ) -> tuple[SchedulerState, SchedulerOutput]:
+        # plain shard_map, replication checking ON: the pure-JAX update HAS
+        # replication rules, so keep the static verifier that would catch a
+        # wrong scalar-leaf spec (the checks-off `fleet_shard_map` wrapper
+        # is only for the pallas_call in the sharded_fused subclass)
         fn = shard_map(self.sched.update, mesh=self.mesh,
                        in_specs=(self._state_specs, fleet_trace_spec(2)),
                        out_specs=(self._state_specs, self._out_specs))
@@ -62,9 +101,11 @@ class ShardedBackend(FleetBackend):
     # -- placement --------------------------------------------------------
     def put_trace(self, trace) -> jnp.ndarray:
         """Upload a density chunk with each package partition landing on its
-        owning device ([n, t] chunks shard dim 0; [T, n, t] chunks dim 1)."""
+        owning device.  The package axis always sits just before the tile
+        axis: [n, t] chunks shard dim 0, [T, n, t] dim 1, pre-chunked
+        [C, K, n, t] traces dim 2."""
         trace = jnp.asarray(trace)
-        pdim = 0 if trace.ndim <= 2 else 1
+        pdim = max(trace.ndim - 2, 0)
         spec = fleet_trace_spec(trace.ndim, package_dim=pdim)
         if trace.shape[pdim] % len(self.mesh.devices.ravel()):
             spec = fleet_trace_spec(trace.ndim, package_dim=pdim, axis=None)

@@ -13,7 +13,10 @@ backend (`repro.fleet.backends`):
                     `shard_map` (degrades to broadcast on one device),
   * ``fused``     — `run_block`/`run_chunked` chunks advance inside ONE
                     Pallas whole-step kernel (`repro.kernels.fleet_step`),
-                    state VMEM-resident across the chunk.
+                    state VMEM-resident across the chunk,
+  * ``sharded_fused`` — fused × sharded: each mesh device runs the
+                    whole-step kernel on its package partition; telemetry
+                    is all-reduced in-graph before the single host sync.
 
 All are numerically identical to a Python loop of per-package `update`
 calls — see ``tests/test_fleet.py`` / ``tests/test_fleet_sharded.py`` — but
@@ -40,7 +43,7 @@ from repro.core.density import rtok_from_rho
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
 from repro.core.scheduler import (SchedulerConfig, SchedulerOutput,
                                   SchedulerState, ThermalScheduler)
-from repro.fleet.backends import FleetBackend, get_backend
+from repro.fleet.backends import FleetBackend, backend_class
 
 
 class FleetTelemetry(NamedTuple):
@@ -97,8 +100,9 @@ class FleetEngine:
     """Pure-functional fleet stepper around one `ThermalScheduler` config.
 
     ``backend`` is a registered backend name (``vmap``/``broadcast``/
-    ``sharded``/``fused``) or a ready `FleetBackend` instance; ``devices``
-    is forwarded to the sharded backend (None = all visible devices).
+    ``sharded``/``fused``/``sharded_fused``) or a ready `FleetBackend`
+    instance; ``devices`` is forwarded to the device-mesh backends
+    (None = all visible devices).
     ``broadcast`` is the default: its lockstep scalar counters are what the
     O(1) incremental-filtration refresh needs to stay a real `lax.cond`
     (under vmap's per-lane counters it degrades to a both-branches select);
@@ -114,24 +118,27 @@ class FleetEngine:
     ignores it on CPU, so it is skipped there to avoid warning spam).
     """
 
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+    def __init__(self, cfg: SchedulerConfig | None = None,
                  fp: Fingerprint = FINGERPRINT,
                  backend: str | FleetBackend = "broadcast",
                  devices: int | None = None,
                  donate_state: bool | None = None):
-        self.cfg = cfg
+        # construct-per-instance: a shared default-argument instance would
+        # alias every default-constructed engine onto ONE config object
+        self.cfg = cfg = SchedulerConfig() if cfg is None else cfg
         self.fp = fp
         self.sched = ThermalScheduler(cfg, fp)
-        if (devices is not None and isinstance(backend, str)
-                and backend != "sharded"):
-            raise ValueError(
-                f"devices={devices} only applies to the sharded backend, "
-                f"got backend={backend!r}")
         if isinstance(backend, FleetBackend):
             self.backend_impl = backend
         else:
-            kw = {"devices": devices} if backend == "sharded" else {}
-            self.backend_impl = get_backend(backend, self.sched, **kw)
+            cls = backend_class(backend)
+            if devices is not None and not cls.accepts_devices:
+                raise ValueError(
+                    f"devices={devices} only applies to device-mesh "
+                    f"backends (sharded/sharded_fused), got "
+                    f"backend={backend!r}")
+            kw = {"devices": devices} if cls.accepts_devices else {}
+            self.backend_impl = cls(self.sched, **kw)
         self.backend = self.backend_impl.name
         if donate_state is None:
             donate_state = jax.default_backend() != "cpu"
@@ -154,36 +161,81 @@ class FleetEngine:
 
         rho: scalar, [n_packages], or [n_packages, n_tiles] workload density.
         """
+        self._guard_donated(state)
         return self._step(state, self._rho_fleet(state, rho))
 
     def run(self, state: SchedulerState, rho_trace) -> tuple[
             SchedulerState, FleetTelemetry]:
         """`lax.scan` the fleet over a [T, n_packages, n_tiles] density trace;
         returns final state + stacked per-step telemetry ([T]-leaved)."""
+        self._guard_donated(state)
         return self._run(state, rho_trace)
 
     def run_chunked(self, state: SchedulerState, rho_trace,
                     flush_every: int) -> tuple[SchedulerState, FleetTelemetry]:
         """Scan a [T, n, tiles] trace in K-step chunks, reducing telemetry
         over each chunk IN-GRAPH: the result carries one record per flush
-        interval ([T//K]-leaved), so fetching it costs T//K host syncs
-        instead of T.  T must be a multiple of ``flush_every``."""
+        interval, so fetching it costs one host sync per flush instead of
+        one per step.
+
+        A trace length that is NOT a multiple of ``flush_every`` is legal:
+        the final partial chunk becomes its own (shorter) flush window,
+        exactly as `repro.fleet.ingest.chunk_source`/`stream` deliver it —
+        the result is ceil(T/K)-leaved and every step of the trace is
+        counted (nothing is silently dropped, no padding enters the
+        telemetry).  Chunks are placed via the backend's `put_trace`, so
+        device-mesh backends receive each package partition pre-sharded."""
+        self._guard_donated(state)
         t = rho_trace.shape[0]
-        if t % flush_every:
-            raise ValueError(f"trace length {t} not a multiple of "
-                             f"flush_every={flush_every}")
-        chunked = rho_trace.reshape((t // flush_every, flush_every)
-                                    + rho_trace.shape[1:])
-        return self._run_chunked(state, chunked)
+        if t == 0:
+            raise ValueError("empty density trace")
+        n_full, rem = divmod(t, flush_every)
+        telems = None
+        if n_full:
+            chunked = rho_trace[:n_full * flush_every].reshape(
+                (n_full, flush_every) + rho_trace.shape[1:])
+            state, telems = self._run_chunked(
+                state, self.backend_impl.put_trace(chunked))
+        if rem:
+            state, tail = self._run_block(
+                state, self.backend_impl.put_trace(
+                    rho_trace[n_full * flush_every:]))
+            telems = (jax.tree_util.tree_map(lambda b: b[None], tail)
+                      if telems is None else
+                      jax.tree_util.tree_map(
+                          lambda a, b: jnp.concatenate([a, b[None]]),
+                          telems, tail))
+        return state, telems
 
     def run_block(self, state: SchedulerState, rho_trace) -> tuple[
             SchedulerState, FleetTelemetry]:
         """One jitted call: scan a [K, n, tiles] chunk and return the state
         plus the chunk's SINGLE reduced telemetry record (the streaming
         ingest loop's unit of work — one host sync per block)."""
+        self._guard_donated(state)
         return self._run_block(state, rho_trace)
 
     # ------------------------------------------------------------- internals
+    def _guard_donated(self, state: SchedulerState) -> None:
+        """Fail readably when a donated state pytree is passed back in.
+
+        With ``donate_state=True`` every jitted entry point donates its
+        state argument, so on accelerators the buffers are invalidated the
+        moment the call is dispatched; reusing the old reference would
+        otherwise surface as an opaque XLA "buffer has been deleted" crash
+        deep inside the next call."""
+        if not self.donate_state:
+            return
+        for leaf in jax.tree_util.tree_leaves(state):
+            if isinstance(leaf, jax.Array) and leaf.is_deleted():
+                raise ValueError(
+                    "this SchedulerState was already donated to a previous "
+                    "FleetEngine call (donate_state=True invalidates the "
+                    "input buffers): rebind the returned state — "
+                    "`state, ... = eng.step(state, ...)` — instead of "
+                    "reusing the old reference, or construct the engine "
+                    "with donate_state=False")
+
     def _rho_fleet(self, state: SchedulerState, rho) -> jnp.ndarray:
         n = state.freq.shape[0]
         rho = jnp.asarray(rho, state.freq.dtype)

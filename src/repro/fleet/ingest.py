@@ -83,10 +83,16 @@ class HintQueue:
 
 
 def chunk_source(trace: np.ndarray, flush_every: int) -> Iterator[np.ndarray]:
-    """Split a host [T, n, tiles] trace into [K, n, tiles] flush chunks
-    (drops a non-divisible tail, mirroring `run_chunked`'s contract)."""
-    for i in range(trace.shape[0] // flush_every):
-        yield trace[i * flush_every:(i + 1) * flush_every]
+    """Split a host [T, n, tiles] trace into [K, n, tiles] flush chunks.
+
+    A non-divisible tail is yielded as a final SHORTER chunk — its own
+    flush window — never silently dropped: `stream()`'s step count always
+    equals the trace length, matching `FleetEngine.run_chunked`'s contract.
+    (A short real chunk needs no padding, so no masking enters the
+    telemetry/event counters.)
+    """
+    for i in range(0, trace.shape[0], flush_every):
+        yield trace[i:i + flush_every]
 
 
 def stream(engine: FleetEngine, state: SchedulerState,

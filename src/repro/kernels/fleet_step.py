@@ -251,7 +251,14 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
     t, n_tiles, n = rho.shape
     w, np_ = params.window, params.n_poles
     tp = ((n_tiles + SUBLANE - 1) // SUBLANE) * SUBLANE
-    blk = min(block_packages, LANE * ((n + LANE - 1) // LANE))
+    # per-shard grid sizing: on TPU the package block must fill 128 lanes,
+    # but in interpret mode (plain XLA on the block shapes) any width works —
+    # pad small partitions (e.g. one device's slice of a sharded fleet) to
+    # the sublane tile only, instead of 128, so a 2-package shard doesn't pay
+    # for 126 phantom lanes.  No step mixes package lanes, so the block
+    # width cannot change any real lane's numerics.
+    align = LANE if not interpret else SUBLANE
+    blk = min(block_packages, align * ((n + align - 1) // align))
     n_pad = ((n + blk - 1) // blk) * blk
     ck = _divisor_chunk(t, time_chunk)
     grid = (n_pad // blk, t // ck)

@@ -17,8 +17,10 @@ telemetry (events, p50/p99 junction temp, released MTPS) is printed per
 wave — the single-host stand-in for a datacenter-scale control plane.
 
 ``--fleet-backend`` picks the fleet execution strategy (``vmap`` /
-``broadcast`` / ``sharded``); ``--fleet-devices`` caps the sharded
-backend's package-axis mesh (0 = every visible device).  ``--stream``
+``broadcast`` / ``sharded`` / ``fused`` / ``sharded_fused``);
+``--fleet-devices`` caps the device-mesh backends' package-axis mesh
+(0 = every visible device).  The resolved backend (including the ACTUAL
+device count after any mesh fallback) is logged up front.  ``--stream``
 replaces the wave loop with a control-plane soak: the whole
 ``waves × gen``-step density trace is driven through the streaming ingest
 loop (`repro.fleet.ingest`) — double-buffered host→device uploads, bounded
@@ -64,6 +66,10 @@ def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
               f"events {int(d['events_total'])}")
 
     state = eng.init(n)
+    # the mesh is resolved at init: log the ACTUAL device count so a soak
+    # degraded by an indivisible fleet size can't masquerade as multi-device
+    print(f"[stream] backend {eng.backend_impl.describe()} "
+          f"({eng.backend_impl.n_devices()} device(s)), fleet {n}")
     t0 = time.time()
     state, flushed, stats = stream(eng, state,
                                    chunk_source(trace, args.gen),
@@ -93,7 +99,8 @@ def main(argv=None):
                     choices=available_backends(),
                     help="fleet execution strategy")
     ap.add_argument("--fleet-devices", type=int, default=0,
-                    help="sharded backend device budget (0 = all visible)")
+                    help="sharded/sharded_fused backend device budget "
+                         "(0 = all visible)")
     ap.add_argument("--filtration", default="incremental",
                     choices=["incremental", "ring"],
                     help="filtration fast path (O(1) sliding stats) or the "
@@ -126,6 +133,8 @@ def main(argv=None):
         fleet = FleetEngine(sched_cfg, backend=args.fleet_backend,
                             devices=args.fleet_devices or None)
         fst = fleet.init(args.fleet)
+        print(f"[fleet] backend {fleet.backend_impl.describe()} "
+              f"({fleet.backend_impl.n_devices()} device(s))")
         # deterministic per-package load jitter around the base density
         jitter = 0.15 * jax.random.normal(jax.random.fold_in(key, 7777),
                                           (args.fleet,))

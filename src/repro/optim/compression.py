@@ -18,16 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """`shard_map` across jax versions (top-level `jax.shard_map`/`check_vma`
-    landed after 0.4.x, which has the experimental module and `check_rep`)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+# one cross-version checks-off shard_map wrapper for the whole repo
+from repro.distributed.sharding import fleet_shard_map as _shard_map
 
 
 class CompressionState(NamedTuple):

@@ -1,0 +1,24 @@
+"""Shared helper: run a test snippet on an emulated multi-device host.
+
+The main pytest process deliberately keeps 1 device (see conftest.py), so
+multi-device fleet cases spawn a fresh interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count set.  Used by
+tests/test_fleet_sharded.py and tests/test_fleet_sharded_fused.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str, n_devices: int, timeout: int = 540) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

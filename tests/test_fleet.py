@@ -193,8 +193,78 @@ def test_run_chunked_reduces_in_graph():
             int(np.asarray(per_step.events_step)[sl].sum())
     assert int(reduced.events_total[-1]) == \
         int(np.asarray(per_step.events_total)[-1])
-    with pytest.raises(ValueError, match="not a multiple"):
-        eng.run_chunked(eng.init(16), trace, flush_every=7)
+
+
+def test_run_chunked_processes_tail():
+    """A non-divisible trace is legal: the partial final chunk becomes its
+    own (shorter) flush window — every step counted, cumulative event totals
+    continuous across the boundary (regression: this used to raise, while
+    `chunk_source` silently DROPPED the tail — the two contracts now agree
+    on full coverage)."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                      backend="broadcast")
+    trace = _trace(16, seed=8)
+    trace = jnp.concatenate([trace, trace[:STEPS - 2]], axis=0)   # T=8, K=5
+    st = eng.init(16)
+    _, per_step = eng.run(st, trace)
+    st2 = eng.init(16)
+    _, reduced = eng.run_chunked(st2, trace, flush_every=STEPS)
+    assert reduced.temp_p99_c.shape == (2,)        # [5-step, 3-step tail]
+    np.testing.assert_allclose(
+        float(reduced.temp_p99_c[1]),
+        np.asarray(per_step.temp_p99_c)[STEPS:].max(), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(reduced.released_mtps[1]),
+        np.asarray(per_step.released_mtps)[STEPS:].mean(), rtol=1e-6)
+    assert int(reduced.events_total[-1]) == \
+        int(np.asarray(per_step.events_total)[-1])
+    assert int(reduced.events_step.sum()) == \
+        int(np.asarray(per_step.events_step).sum())
+    # flush interval longer than the whole trace ⇒ one short window
+    st3 = eng.init(16)
+    _, one = eng.run_chunked(st3, trace, flush_every=100)
+    assert one.temp_p99_c.shape == (1,)
+    np.testing.assert_allclose(float(one.temp_p99_c[0]),
+                               np.asarray(per_step.temp_p99_c).max(),
+                               rtol=1e-6)
+    with pytest.raises(ValueError, match="empty"):
+        eng.run_chunked(eng.init(16), trace[:0], flush_every=5)
+
+
+def test_engine_configs_not_aliased():
+    """Regression (shared mutable default): two default-constructed engines
+    (and schedulers) must own DISTINCT config objects — mutating one via
+    `dataclasses.replace`-style rebuild or `object.__setattr__` must not
+    leak into the other."""
+    e1, e2 = FleetEngine(), FleetEngine()
+    assert e1.cfg is not e2.cfg
+    assert e1.cfg == e2.cfg                        # equal but not aliased
+    s1, s2 = ThermalScheduler(), ThermalScheduler()
+    assert s1.cfg is not s2.cfg
+    # even a forced mutation (frozen dataclass bypass) stays contained
+    object.__setattr__(e2.cfg, "n_tiles", 99)
+    assert e1.cfg.n_tiles == 1
+
+
+def test_donated_state_reuse_raises_readably():
+    """Regression (donation guard): reusing a state whose buffers were
+    donated fails at the ENGINE boundary with an actionable message, not
+    deep inside XLA.  CPU ignores donation, so deletion is simulated the
+    way an accelerator donation would leave the pytree."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES), backend="broadcast",
+                      donate_state=True)
+    st = eng.init(4)
+    jax.tree_util.tree_map(lambda x: x.delete(), st)
+    for call in (lambda: eng.step(st, 1.5),
+                 lambda: eng.run(st, _trace(4)[:, :4]),
+                 lambda: eng.run_block(st, _trace(4)[:, :4]),
+                 lambda: eng.run_chunked(st, _trace(4)[:, :4], STEPS)):
+        with pytest.raises(ValueError, match="rebind the returned state"):
+            call()
+    # a non-donating engine never pays the per-call leaf walk
+    eng2 = FleetEngine(SchedulerConfig(n_tiles=N_TILES), donate_state=False)
+    st2 = eng2.init(4)
+    eng2.step(st2, 1.5)                            # no guard, no error
 
 
 def test_as_dict_single_fetch_types():

@@ -8,25 +8,8 @@ has no cross-package ops, so sharding cannot change it); fleet telemetry
 aggregates cross device boundaries and is allowed reduction-reassociation
 noise only.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-
-
-def _run_sub(code: str, n_devices: int) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
-               PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=540)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+from fleet_multidev import run_sub as _run_sub
 
 
 _BITMATCH = """
@@ -63,33 +46,58 @@ def test_sharded_bitmatches_vmap(ndev):
     assert f"OK bitmatch {ndev}" in out
 
 
-def test_sharded_degrades_gracefully():
+def test_sharded_degrades_gracefully_and_loudly():
     """Indivisible fleet sizes and over-requested device counts fall back to
-    the largest compatible mesh instead of erroring."""
+    the largest compatible mesh instead of erroring — but NEVER silently: a
+    RuntimeWarning names the requested→actual counts (regression: the
+    fallback used to be silent, so a soak could unknowingly run on 1
+    device), and describe() carries the actual mesh size."""
     out = _run_sub("""
+        import warnings
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.scheduler import SchedulerConfig
         from repro.fleet import FleetEngine
 
         cfg = SchedulerConfig(n_tiles=4, mode="v24")
         # 6 packages on a 4-device budget -> largest divisor of 6 that fits
-        # the budget = 3 devices
+        # the budget = 3 devices, and the downgrade must warn
         eng = FleetEngine(cfg, backend="sharded", devices=4)
-        st = eng.init(6)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            st = eng.init(6)
         assert eng.backend_impl.n_devices() == 3, eng.backend_impl.describe()
+        assert "3dev" in eng.backend_impl.describe()
+        msgs = [str(x.message) for x in w
+                if issubclass(x.category, RuntimeWarning)]
+        assert any("requested 4 devices" in m and "running on 3" in m
+                   for m in msgs), msgs
         st, out, telem = eng.step(st, jnp.full((6, 4), 1.8))
         assert telem.as_dict()["n_packages"] == 6
         # the shrunken mesh must NOT stick: a divisible fleet size recovers
-        # the full requested budget
-        st = eng.init(8)
+        # the full requested budget, with no warning
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            st = eng.init(8)
+        assert not [x for x in w if issubclass(x.category, RuntimeWarning)]
         assert eng.backend_impl.n_devices() == 4, eng.backend_impl.describe()
         assert len(st.freq.sharding.device_set) == 4
         eng.step(st, jnp.full((8, 4), 1.8))
-        # more devices than the host has -> clamp to what exists
+        # more devices than the host has -> clamp to what exists, loudly
         eng2 = FleetEngine(cfg, backend="sharded", devices=64)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            st2 = eng2.init(8)
         assert eng2.backend_impl.n_devices() == 4
-        st2 = eng2.init(8)
+        assert any("requested 64 devices" in str(x.message) for x in w), \\
+            [str(x.message) for x in w]
         eng2.step(st2, jnp.full((8, 4), 1.8))
+        # sharded_fused inherits the same loud-degradation contract
+        eng3 = FleetEngine(cfg, backend="sharded_fused", devices=4)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng3.init(6)
+        assert eng3.backend_impl.n_devices() == 3
+        assert any("sharded_fused" in str(x.message) for x in w)
         print("OK degrade")
     """, n_devices=4)
     assert "OK degrade" in out

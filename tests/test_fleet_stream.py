@@ -30,10 +30,37 @@ def test_hint_queue_bounds():
         HintQueue(0)
 
 
-def test_chunk_source_drops_tail():
+def test_chunk_source_yields_tail():
+    """A non-divisible tail is a final SHORTER chunk, never dropped: the
+    chunked steps always sum to the trace length (regression — the tail
+    used to be silently discarded, under-reporting `stream()` steps)."""
     chunks = list(chunk_source(_trace(23), flush_every=5))
-    assert len(chunks) == 4
-    assert all(c.shape == (5, N, TILES) for c in chunks)
+    assert len(chunks) == 5
+    assert [c.shape[0] for c in chunks] == [5, 5, 5, 5, 3]
+    assert all(c.shape[1:] == (N, TILES) for c in chunks)
+    assert sum(c.shape[0] for c in chunks) == 23
+    # divisible traces are unchanged
+    assert [c.shape[0] for c in chunk_source(_trace(20), 5)] == [5] * 4
+
+
+def test_stream_counts_tail_steps():
+    """`stream()` over a non-divisible trace executes every step, with the
+    tail as its own flush window, and matches `run_chunked` (which shares
+    the tail contract)."""
+    cfg = SchedulerConfig(n_tiles=TILES, mode="v24")
+    eng = FleetEngine(cfg, backend="broadcast")
+    trace = _trace(23, seed=7)
+    st, flushed, stats = stream(eng, eng.init(N), chunk_source(trace, 5))
+    assert stats.steps == 23                      # nothing dropped
+    assert stats.flushes == 5 == stats.host_syncs == len(flushed)
+    ref = FleetEngine(cfg, backend="vmap")
+    _, red = ref.run_chunked(ref.init(N), jnp.asarray(trace), flush_every=5)
+    assert red.temp_p99_c.shape == (5,)
+    for field in ("temp_p99_c", "released_mtps", "events_total"):
+        np.testing.assert_allclose([f[field] for f in flushed],
+                                   np.asarray(getattr(red, field)),
+                                   rtol=1e-5, err_msg=field)
+    assert (np.asarray(st.step).ravel() == 23).all()
 
 
 @pytest.mark.parametrize("backend", ["vmap", "broadcast", "sharded"])
@@ -105,3 +132,32 @@ def test_telemetry_log_array_fields(tmp_path):
     # dump stays as a compatible alias
     log.dump(str(p))
     assert json.loads(p.read_text()) == row
+
+
+# ----------------------------------------------------- hypothesis ---------
+# hypothesis is an optional dep (ROADMAP): guard only the property test —
+# the deterministic tail-contract checks above must always run.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st_.integers(1, 33), st_.integers(1, 12))
+    def test_stream_step_count_equals_trace_length(steps, flush_every):
+        """Property: for ANY trace length T and flush interval K, `stream()`
+        executes exactly T steps in ceil(T/K) flushes — the tail is never
+        dropped and never double-counted."""
+        import math
+        eng = FleetEngine(SchedulerConfig(n_tiles=2), backend="broadcast")
+        trace = _trace(steps, seed=steps * 131 + flush_every)[:, :4, :2]
+        st, flushed, stats = stream(eng, eng.init(4),
+                                    chunk_source(trace, flush_every))
+        assert stats.steps == steps
+        assert stats.flushes == math.ceil(steps / flush_every)
+        assert stats.host_syncs == stats.flushes == len(flushed)
+        assert (np.asarray(st.step).ravel() == steps).all()
