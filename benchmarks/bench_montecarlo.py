@@ -1,28 +1,106 @@
 """Paper §10 / Fig. 6 — Monte-Carlo thermal simulation (N = 2000 trials;
-Rth ±8 %, τ ±12 %, ρ ±15 %) + per-workload uplift."""
+Rth ±8 %, τ ±12 %, ρ ±15 %) + per-workload uplift — at FLEET scale.
+
+Acceptance bars (PR 5):
+  * the fleet-backed `montecarlo.run` (one trial = one lane of a
+    heterogeneous fleet, per-trial Rth/τ/η/poll draws riding in the state)
+    must match the legacy per-trial vmap oracle (`montecarlo.run_reference`)
+    to ≤1e-5 on the aggregate §10 statistics — mean AND σ of peak-T and
+    delivered perf, mean exceedance fraction — on EVERY registered backend
+    (vmap / broadcast / sharded / fused / sharded_fused), N = 2000 trials
+    over the full ≥3k-step traces;
+  * the fused (Pallas whole-step kernel) backend must sustain ≥2×
+    the oracle's trials/s — the population workload is the fleet fast
+    path's flagship customer.
+
+`benchmarks.run --json` appends this module's rows to
+``BENCH_montecarlo.json`` at the repo root (uploaded by CI like
+``BENCH_fleet.json``), so the Monte-Carlo fast path accumulates its own
+perf trajectory across PRs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
 from benchmarks.common import row, timed
-from repro.core import montecarlo
+from repro.core import guardband, montecarlo
+
+N_TRIALS = 2_000
+N_STEPS = 3_000
+
+BACKENDS = ("vmap", "broadcast", "sharded", "fused", "sharded_fused")
+
+# aggregate §10 statistics gated against the oracle.  Exceedance fractions
+# live in [0, 1], so with the rel-err convention |a−b|/max(|a|, 1) their
+# bound is effectively absolute; σ of the exceedance is a knife-edge
+# statistic (single threshold flips move it) and is reported, not gated.
+_GATED = ("peak_t_baseline", "peak_t_v24", "perf_baseline", "perf_v24",
+          "time_above_baseline", "time_above_v24")
+
+
+def _agg_err(ref: montecarlo.MCResult, got: montecarlo.MCResult) -> float:
+    errs = []
+    for f in _GATED:
+        a = np.asarray(getattr(ref, f), np.float64)
+        b = np.asarray(getattr(got, f), np.float64)
+        errs.append(abs(a.mean() - b.mean()) / max(abs(a.mean()), 1.0))
+        if not f.startswith("time_above"):
+            errs.append(abs(a.std() - b.std()) / max(abs(a.std()), 1.0))
+    return max(errs)
 
 
 def run():
     out = []
-    r, us = timed(lambda: montecarlo.run(n_trials=2000, n_steps=3000),
-                  iters=1, warmup=0)
-    s = r.stats()
-    out.append(row("montecarlo.baseline_peak", us,
+    # ---- the legacy per-trial vmap oracle (ground truth + speed baseline)
+    ref, us_ref = timed(lambda: montecarlo.run_reference(
+        n_trials=N_TRIALS, n_steps=N_STEPS), iters=2, best=True)
+    out.append(row("montecarlo.oracle_2000", us_ref,
+                   f"trials_per_s={N_TRIALS / (us_ref / 1e6):.0f}"))
+
+    # ---- the fleet path on every backend: gated equivalence + trials/s
+    us, fused_result = {}, None
+    for backend in BACKENDS:
+        r, us[backend] = timed(lambda b=backend: montecarlo.run(
+            n_trials=N_TRIALS, n_steps=N_STEPS, backend=b),
+            iters=2, best=True)
+        if backend == "fused":
+            fused_result = r           # reused for the §10 stats below
+        err = _agg_err(ref, r)
+        out.append(row(f"montecarlo.fleet_{backend}", us[backend],
+                       f"trials_per_s={N_TRIALS / (us[backend] / 1e6):.0f};"
+                       f"agg_err={err:.2e}(need<=1e-5)"))
+        assert err <= 1e-5, \
+            f"fleet MC on {backend} diverges from the oracle: {err:.2e}"
+
+    speedup = us_ref / us["fused"]
+    out.append(row("montecarlo.fused_speedup", 0.0,
+                   f"fused_vs_oracle={speedup:.2f}x(need>=2)"))
+    assert speedup >= 2.0, \
+        f"fused Monte-Carlo {speedup:.2f}x below the 2x trials/s bar"
+
+    # ---- published §10 statistics from the (fused) fleet run ------------
+    s = fused_result.stats()
+    out.append(row("montecarlo.baseline_peak", 0.0,
                    f"mean={s['baseline_mean_c']:.1f}C(pub ~91) "
                    f"sigma={s['baseline_std_c']:.1f}C(pub ~6) "
                    f"t_above={s['baseline_time_above_frac'] * 100:.1f}%"
                    f"(pub 23)"))
-    out.append(row("montecarlo.v24_peak", us,
+    out.append(row("montecarlo.v24_peak", 0.0,
                    f"mean={s['v24_mean_c']:.1f}C(pub ~82.5) "
                    f"sigma={s['v24_std_c']:.1f}C(pub ~2.1) "
                    f"t_above={s['v24_time_above_frac'] * 100:.2f}%(pub <1)"))
-    out.append(row("montecarlo.tightening", us,
+    out.append(row("montecarlo.tightening", 0.0,
                    f"sigma_x={s['sigma_tighter_x']:.1f}(pub 3.5) "
                    f"uplift={s['uplift_mean'] * 100:.1f}% "
                    f"p5={s['uplift_p5'] * 100:.1f}% "
                    f"p95={s['uplift_p95'] * 100:.1f}%"))
+
+    # ---- §3.4 guard-band liberation fed straight from the MC σ ratio ----
+    gb = guardband.from_montecarlo(s)
+    out.append(row("montecarlo.guardband", 0.0,
+                   " ".join(f"{g.category}={g.reduction_pct:.1f}%"
+                            for g in gb) + " (pub 65-68)"))
+
     up, us2 = timed(montecarlo.uplift_by_workload, iters=1, warmup=0)
     out.append(row("montecarlo.uplift_by_workload", us2,
                    " ".join(f"{k}={v * 100:.1f}%" for k, v in up.items())

@@ -5,10 +5,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  With ``--json`` the same
 rows plus per-module status/timing are written as a machine-readable
-artifact (CI uploads it), and any executed ``bench_fleet`` rows are ALSO
-appended to ``BENCH_fleet.json`` at the repo root — an accumulating perf
-trajectory of the fleet fast path across runs/PRs (CI uploads that too).
-Exits nonzero if any bench module fails.
+artifact (CI uploads it), and any executed trajectory-tracked modules
+(``bench_fleet`` → ``BENCH_fleet.json``, ``bench_montecarlo`` →
+``BENCH_montecarlo.json``) ALSO append their rows to the repo-root
+trajectory files — an accumulating perf record across runs/PRs (CI
+uploads those too).  Exits nonzero if any bench module fails.
 """
 from __future__ import annotations
 
@@ -21,8 +22,12 @@ import time
 
 from benchmarks import common
 
-FLEET_TRAJECTORY = os.path.abspath(
-    os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json"))
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+# module → repo-root trajectory artifact (appended per --json run)
+TRAJECTORIES = {
+    "bench_fleet": os.path.join(_ROOT, "BENCH_fleet.json"),
+    "bench_montecarlo": os.path.join(_ROOT, "BENCH_montecarlo.json"),
+}
 
 MODULES = [
     "bench_fingerprint",     # §4.1 fingerprint constants table
@@ -82,21 +87,22 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"ok": not failures, "results": results}, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
-        fleet = [r for r in results if r["module"] == "bench_fleet"]
-        if fleet:
-            _append_fleet_trajectory(fleet[0])
+        for result in results:
+            path = TRAJECTORIES.get(result["module"])
+            if path:
+                _append_trajectory(path, result)
 
     if failures:
         print(f"benchmark failures: {failures}", file=sys.stderr)
         sys.exit(1)
 
 
-def _append_fleet_trajectory(result: dict) -> None:
-    """Append the fleet rows to the repo-root BENCH_fleet.json trajectory
+def _append_trajectory(path: str, result: dict) -> None:
+    """Append a module's rows to its repo-root trajectory artifact
     (a list of timestamped records — one per `--json` run)."""
     trajectory: list = []
     try:
-        with open(FLEET_TRAJECTORY) as f:
+        with open(path) as f:
             trajectory = json.load(f)
         if not isinstance(trajectory, list):
             trajectory = []
@@ -108,9 +114,9 @@ def _append_fleet_trajectory(result: dict) -> None:
         "seconds": result["seconds"],
         "rows": result["rows"],
     })
-    with open(FLEET_TRAJECTORY, "w") as f:
+    with open(path, "w") as f:
         json.dump(trajectory, f, indent=2)
-    print(f"# appended fleet rows to {FLEET_TRAJECTORY} "
+    print(f"# appended {result['module']} rows to {path} "
           f"({len(trajectory)} records)", file=sys.stderr)
 
 

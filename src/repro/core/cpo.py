@@ -59,10 +59,12 @@ def open_loop(rho_trace: jnp.ndarray,
 
 
 def closed_loop(rho_trace: jnp.ndarray,
-                cfg: dvfs.DVFSConfig = dvfs.DVFSConfig(),
+                cfg: dvfs.DVFSConfig | None = None,
                 fp: Fingerprint = FINGERPRINT) -> CPOResult:
     """V24 pre-emptive thermal clamping: run the PDU-gate controller and read
     the PIC excursion off the controlled plant (paper: ΔT_PIC ≤ 4.15 °C)."""
+    # construct-per-call, never a shared default-argument instance
+    cfg = dvfs.DVFSConfig() if cfg is None else cfg
     res = dvfs.simulate_v24(rho_trace, cfg, fp)
     t = res.temp[:, 0]
     # controller clamps junction ≤ T_crit; PIC excursion = residual swing

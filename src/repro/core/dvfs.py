@@ -64,7 +64,7 @@ def _finish(freqs, temps, events) -> SimResult:
 
 
 def simulate_reactive(rho_trace: jnp.ndarray,
-                      cfg: DVFSConfig = DVFSConfig(),
+                      cfg: DVFSConfig | None = None,
                       fp: Fingerprint = FINGERPRINT,
                       gamma: jnp.ndarray | None = None,
                       poles: thermal.PoleParams | None = None,
@@ -74,6 +74,9 @@ def simulate_reactive(rho_trace: jnp.ndarray,
     ``poll_ticks`` may be a traced value (the Monte-Carlo harness samples
     per-OEM polling-period diversity); defaults to the config's poll interval.
     """
+    # construct-per-call (never a default argument: that instance would be
+    # built once at import and aliased across every caller)
+    cfg = DVFSConfig() if cfg is None else cfg
     rho_trace = jnp.atleast_2d(rho_trace.T).T            # [T, n_tiles]
     n_tiles = rho_trace.shape[1]
     poles = poles if poles is not None else thermal.single_pole(fp, cfg.dt_ms)
@@ -109,7 +112,7 @@ def simulate_reactive(rho_trace: jnp.ndarray,
 
 
 def simulate_v24(rho_trace: jnp.ndarray,
-                 cfg: DVFSConfig = DVFSConfig(),
+                 cfg: DVFSConfig | None = None,
                  fp: Fingerprint = FINGERPRINT,
                  gamma: jnp.ndarray | None = None,
                  poles: thermal.PoleParams | None = None) -> SimResult:
@@ -126,6 +129,7 @@ def simulate_v24(rho_trace: jnp.ndarray,
     sawtooth disappears — the released-compute gap vs the reactive baseline is
     Effect ①'s +20–30 %.
     """
+    cfg = DVFSConfig() if cfg is None else cfg
     rho_trace = jnp.atleast_2d(rho_trace.T).T
     n_tiles = rho_trace.shape[1]
     poles = poles if poles is not None else thermal.single_pole(fp, cfg.dt_ms)

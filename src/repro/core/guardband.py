@@ -55,6 +55,18 @@ def derived(sigma_uncontrolled: float, sigma_controlled: float,
     return out
 
 
+def from_montecarlo(stats: dict,
+                    fp: Fingerprint = FINGERPRINT) -> list[GuardBandReport]:
+    """Margins derived straight from a fleet Monte-Carlo run.
+
+    ``stats`` is `repro.core.montecarlo.MCResult.stats()` — the
+    uncontrolled/controlled peak-temperature σs come from the per-trial
+    survey reductions of the heterogeneous fleet, closing the loop from
+    process-variation draws to EDA guard-band liberation (§3.4 ← §10).
+    """
+    return derived(stats["baseline_std_c"], stats["v24_std_c"], fp)
+
+
 def wafer_roi_gain(reduction_pct: float) -> float:
     """§8.4: guard-band liberation → reticle-area utilisation gain.
 

@@ -8,6 +8,24 @@ period (the §9 baseline is "reactive DVFS + temperature polling"; polling
 heterogeneity across deployed governors is what spreads the baseline
 peak-temperature tail).
 
+`run` drives the whole population through the FLEET ENGINE: one trial = one
+(package, tile) lane of a heterogeneous fleet whose per-trial Rth/τ pole
+banks, preposition fractions and polling periods ride in the state
+(`repro.core.scheduler.PackageParams`), so every fleet fast path — O(1)
+incremental filtration, the fused Pallas whole-step kernel, sharded device
+meshes — applies to the paper's flagship population workload.  Trials are
+packed onto the tile axis in groups of `_TILE_PACK` (the f32 sublane width):
+with Γ disabled, tiles are physically independent lanes, so a [N/8, 8] fleet
+is the same population as [N, 1] but fills the kernel's sublane tile with
+real work.  The per-trial peak-T / exceedance / delivered-perf statistics
+reduce in-graph via `FleetEngine.run_survey` (O(N) accumulators — no [T, N]
+trace is ever materialised).
+
+`run_reference` keeps the original per-trial `jax.vmap` over the
+`repro.core.dvfs` simulators — the oracle `benchmarks/bench_montecarlo.py`
+gates the fleet path against (≤1e-5 on the aggregate statistics, every
+backend).
+
 Published findings reproduced by `benchmarks/bench_montecarlo.py`:
 
   * baseline peak-T: mean ≈ 91 °C, σ ≈ 6 °C; time above the 85 °C safe
@@ -19,6 +37,7 @@ Published findings reproduced by `benchmarks/bench_montecarlo.py`:
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -26,6 +45,9 @@ import jax.numpy as jnp
 
 from repro.core import dvfs, thermal, workload
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
+from repro.core.scheduler import SchedulerConfig
+
+_TILE_PACK = 8      # f32 sublane width — trials packed per fleet package
 
 
 class MCResult(NamedTuple):
@@ -66,11 +88,128 @@ def sample_params(key, n_trials: int, fp: Fingerprint = FINGERPRINT):
             jnp.clip(util, 0.5, 1.35), poll)
 
 
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _trial_traces(trial_keys, util, n_steps: int, kind: str,
+                  fp: Fingerprint) -> jnp.ndarray:
+    """[N, T] per-trial density traces, exactly the oracle's draws.
+
+    Jitted with static shape/kind/fingerprint so repeated experiments reuse
+    the compiled generator (trace synthesis at N=2000 otherwise re-traces
+    2000 vmapped OU/burst programs per call and dominates the wall-clock).
+    """
+    def one(key_i, util_i):
+        tr = workload.make_trace(key_i, n_steps, kind) * util_i
+        return jnp.clip(tr, 0.4 * fp.rho_min, 1.3 * fp.rho_max)[:, 0]
+    return jax.vmap(one)(trial_keys, util)
+
+
+def _pack(n_trials: int) -> int:
+    """Trials per package: the largest divisor of N up to the sublane tile."""
+    return max(d for d in range(1, _TILE_PACK + 1) if n_trials % d == 0)
+
+
+def _scheduler_cfg(cfg: dvfs.DVFSConfig, lanes: int, mode: str,
+                   filtration_impl: str) -> SchedulerConfig:
+    """Map the DVFS simulator's knobs onto an equivalent fleet scheduler."""
+    return SchedulerConfig(
+        n_tiles=lanes, mode=mode, two_pole=False, use_coupling=False,
+        step_ms=cfg.dt_ms,
+        lookahead_steps=cfg.lookahead_ms / cfg.dt_ms,
+        filtration_window=cfg.filtration_window,
+        filtration_impl=filtration_impl,
+        t_safe_margin_c=cfg.t_safe_margin_c,
+        power_exponent=cfg.power_exponent,
+        heterogeneous=True,
+        throttle_level=cfg.throttle_level,
+        resume_below_c=cfg.resume_below_c,
+        recover_ms=cfg.recover_ms,
+        poll_interval_ms=cfg.poll_interval_ms)
+
+
+@functools.lru_cache(maxsize=16)
+def _engine(scfg: SchedulerConfig, fp: Fingerprint, backend: str,
+            devices: int | None):
+    """One engine (and its compiled jits) per distinct configuration —
+    repeated Monte-Carlo calls reuse the compiled fleet programs instead of
+    paying a fresh trace/compile per experiment.  Both config dataclasses
+    are frozen, so the cache keys by value; the LRU bound keeps a process
+    sweeping trial counts / backends / configs from accumulating compiled
+    XLA programs without limit."""
+    from repro.fleet import FleetEngine
+    return FleetEngine(scfg, fp=fp, backend=backend, devices=devices)
+
+
 def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
         kind: str = "inference", burn_in: int = 400,
-        cfg: dvfs.DVFSConfig = dvfs.DVFSConfig(),
-        fp: Fingerprint = FINGERPRINT) -> MCResult:
-    """Run the paired (baseline, V24) Monte-Carlo experiment."""
+        cfg: dvfs.DVFSConfig | None = None,
+        fp: Fingerprint = FINGERPRINT, *,
+        backend: str = "broadcast", devices: int | None = None,
+        filtration_impl: str = "incremental") -> MCResult:
+    """Run the paired (baseline, V24) Monte-Carlo experiment at fleet scale.
+
+    One trial = one lane of a heterogeneous `FleetEngine` fleet (per-trial
+    Rth/τ/η/poll draws in the state, trials packed onto the tile axis);
+    baseline and V24 run as two fleets over the same traces and draws.
+    ``backend`` picks any registered fleet backend (vmap / broadcast /
+    sharded / fused / sharded_fused), ``devices`` caps the device-mesh
+    backends, ``filtration_impl`` picks the Ft fast path ("incremental",
+    the O(1) serving default) or the ring oracle.  Statistically identical
+    to `run_reference` — gated ≤1e-5 on the aggregate §10 statistics by
+    `benchmarks/bench_montecarlo.py`.
+    """
+    from repro.fleet import FleetEngine   # late import: engine ← core cycle
+
+    # construct-per-call: a dataclass default argument would be built once
+    # at import and shared by every caller (the FleetEngine bug class)
+    cfg = dvfs.DVFSConfig() if cfg is None else cfg
+    key = jax.random.PRNGKey(2_000) if key is None else key
+    k_par, k_tr = jax.random.split(key)
+    rth, tau, util, poll = sample_params(k_par, n_trials, fp)
+    trial_keys = jax.random.split(k_tr, n_trials)
+
+    lanes = _pack(n_trials)
+    n_pkg = n_trials // lanes
+    traces = _trial_traces(trial_keys, util, n_steps, kind, fp)   # [N, T]
+    fleet_trace = traces.T.reshape(n_steps, n_pkg, lanes)
+
+    lane_shape = (n_pkg, lanes)
+    banks = thermal.pole_bank(rth.reshape(lane_shape),
+                              tau.reshape(lane_shape), cfg.dt_ms)
+
+    def survey(mode: str):
+        eng = _engine(_scheduler_cfg(cfg, lanes, mode, filtration_impl),
+                      fp, backend, devices)
+        pkg = eng.sched.package_params(
+            banks, poll_ticks=poll.reshape(lane_shape),
+            batch_shape=(n_pkg,))
+        # the oracle seeds each trial's ring with its opening density
+        state = eng.init(n_pkg, pkg=pkg, filtration_fill=fleet_trace[0])
+        _, sv = eng.run_survey(state, fleet_trace, burn_in=burn_in)
+        return sv
+
+    sb = survey("reactive_poll")
+    sv = survey("v24")
+    flat = lambda x: x.reshape(n_trials)
+    return MCResult(peak_t_baseline=flat(sb.peak_t_c),
+                    peak_t_v24=flat(sv.peak_t_c),
+                    time_above_baseline=flat(sb.exceed_frac),
+                    time_above_v24=flat(sv.exceed_frac),
+                    perf_baseline=flat(sb.freq_mean),
+                    perf_v24=flat(sv.freq_mean))
+
+
+def run_reference(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
+                  kind: str = "inference", burn_in: int = 400,
+                  cfg: dvfs.DVFSConfig | None = None,
+                  fp: Fingerprint = FINGERPRINT) -> MCResult:
+    """The original per-trial vmap oracle (one `dvfs` scan pair per trial).
+
+    Kept as the ground truth the fleet-backed `run` is gated against; it
+    bypasses the fleet engine entirely, so none of the fleet fast paths
+    apply — O(W) ring refits every step, [T]-long per-trial traces, and a
+    per-trial percentile sort.
+    """
+    cfg = dvfs.DVFSConfig() if cfg is None else cfg
     key = jax.random.PRNGKey(2_000) if key is None else key
     k_par, k_tr = jax.random.split(key)
     rth, tau, util, poll = sample_params(k_par, n_trials, fp)
@@ -97,14 +236,17 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
 
 
 def uplift_by_workload(key=None, n_steps: int = 4_000,
-                       cfg: dvfs.DVFSConfig = dvfs.DVFSConfig(),
+                       cfg: dvfs.DVFSConfig | None = None,
                        fp: Fingerprint = FINGERPRINT) -> dict[str, float]:
     """Fig. 6 (right): V24 performance uplift per workload type."""
+    cfg = dvfs.DVFSConfig() if cfg is None else cfg
     key = jax.random.PRNGKey(6) if key is None else key
     out = {}
-    for kind in workload.KINDS:
-        tr = workload.make_trace(jax.random.fold_in(key, hash(kind) % 997),
-                                 n_steps, kind)
+    for i, kind in enumerate(workload.KINDS):
+        # fold in the kind's INDEX — `hash(kind)` is salted per process
+        # (PYTHONHASHSEED), which made the Fig. 6 numbers irreproducible
+        # across runs
+        tr = workload.make_trace(jax.random.fold_in(key, i), n_steps, kind)
         base = dvfs.simulate_reactive(tr, cfg, fp)
         v24 = dvfs.simulate_v24(tr, cfg, fp)
         out[kind] = float(dvfs.released_compute(base, v24))

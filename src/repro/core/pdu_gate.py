@@ -93,23 +93,43 @@ def recent_len(window: int) -> int:
     return max(window // 4, 1)
 
 
-def init_filtration(window: int, n_tiles: int, fill: float = 0.0,
+def _fill_buf(fill, batch_shape: tuple[int, ...], window: int,
+              n_tiles: int) -> jnp.ndarray:
+    """[*batch, window, n_tiles] buffer at ``fill``.
+
+    ``fill`` may be a scalar (possibly traced) or an array broadcastable to
+    [*batch, n_tiles] — the Monte-Carlo harness seeds every package's ring
+    with ITS OWN trace's opening density, matching the per-trial oracle.
+    """
+    fill = jnp.asarray(fill)
+    shape = batch_shape + (window, n_tiles)
+    if fill.ndim == 0:
+        return jnp.full(shape, fill)
+    return jnp.broadcast_to(fill[..., None, :], shape)
+
+
+def init_filtration(window: int, n_tiles: int, fill=0.0,
                     batch_shape: tuple[int, ...] = ()) -> Filtration:
-    return Filtration(buf=jnp.full(batch_shape + (window, n_tiles), fill),
+    return Filtration(buf=_fill_buf(fill, batch_shape, window, n_tiles),
                       ptr=jnp.zeros((), jnp.int32))
 
 
-def init_filtration_stats(window: int, n_tiles: int, fill: float = 0.0,
+def init_filtration_stats(window: int, n_tiles: int, fill=0.0,
                           batch_shape: tuple[int, ...] = ()
                           ) -> FiltrationStats:
-    """Stats state for a buffer uniformly at ``fill`` (closed-form sums)."""
+    """Stats state for a buffer uniformly at ``fill`` (closed-form sums).
+
+    ``fill`` follows `_fill_buf`'s contract (scalar or per-batch/per-tile).
+    """
     shape = batch_shape + (n_tiles,)
+    fill = jnp.asarray(fill)
+    tile = lambda x: jnp.broadcast_to(jnp.asarray(x), shape)
     return FiltrationStats(
-        buf=jnp.full(batch_shape + (window, n_tiles), fill),
+        buf=_fill_buf(fill, batch_shape, window, n_tiles),
         ptr=jnp.zeros((), jnp.int32),
-        wsum=jnp.full(shape, window * fill),
+        wsum=tile(window * fill),
         csum=jnp.zeros(shape),       # Σ(k − t̄) = 0 exactly
-        rsum=jnp.full(shape, recent_len(window) * fill))
+        rsum=tile(recent_len(window) * fill))
 
 
 def exact_stats(buf: jnp.ndarray, ptr) -> tuple[jnp.ndarray, jnp.ndarray,

@@ -25,10 +25,27 @@ from repro.core.density import power_from_rho
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
 
 
+def _eta_f32(decay_slow, ahead: float):
+    """η = 1 − a_slow^ahead in f32, via NUMPY.
+
+    One derivation shared by the homogeneous scheduler constant and the
+    per-package `PackageParams.eta` draws: identical inputs give bitwise
+    identical η on both paths, and the computation stays concrete even when
+    a scheduler is constructed inside a jit trace (jnp would stage it).
+    """
+    import numpy as np
+    a = np.asarray(decay_slow, np.float32)
+    return np.float32(1.0) - a ** np.float32(ahead)
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     n_tiles: int = 1
-    mode: str = "v24"              # v24 | reactive | off
+    # v24 | reactive | reactive_poll | off.  ``reactive_poll`` is the §9/§10
+    # baseline row ("reactive DVFS + temperature polling"): the sensor loop
+    # only observes the junction every poll interval, with throttle
+    # hysteresis — op-for-op the fleet form of `dvfs.simulate_reactive`.
+    mode: str = "v24"
     two_pole: bool = True          # V7.0 kernel (V24 single-pole if False)
     use_coupling: bool = True      # V7.0 N×N Γ (identity if False)
     step_ms: float = 10.0          # wall-time of one training step
@@ -41,10 +58,37 @@ class SchedulerConfig:
     t_safe_margin_c: float = 1.0
     power_exponent: float = 3.0
     straggler_threshold: float = 0.9   # f below this ⇒ tile flagged at-risk
+    # per-package process variation: the state carries a `PackageParams`
+    # pytree (pole decay/gain, preposition fraction, polling period) and
+    # every batch lane runs ITS OWN physics — the §10 Monte-Carlo object
+    heterogeneous: bool = False
+    # ``reactive_poll`` baseline knobs (mirror repro.core.dvfs.DVFSConfig)
+    throttle_level: float = 0.55   # emergency floor while throttled
+    resume_below_c: float = 66.0   # hysteresis: throttled until T ≤ this
+    recover_ms: float = 100.0      # ramp-back time constant
+    poll_interval_ms: float = 25.0 # homogeneous polling period
 
     @property
     def lookahead_ms(self) -> float:
         return self.lookahead_steps * self.step_ms
+
+
+class PackageParams(NamedTuple):
+    """Per-package process/deployment draws riding IN the state (§10.1).
+
+    Leaves broadcast against the state's [*batch, n_tiles, ...] layout: the
+    tile axis may be 1 (one draw per package) or n_tiles (one draw per
+    tile — how the Monte-Carlo harness packs independent trials onto the
+    tile lanes).  ``eta``/``gain_sum`` are derived EAGERLY from decay/gain
+    at construction (`ThermalScheduler.package_params`) so the pure-JAX,
+    vmap and Pallas paths all consume the exact same float32 constants.
+    """
+
+    decay: jnp.ndarray      # [*batch, n_tiles | 1, n_poles]  a = exp(−dt/τ)
+    gain: jnp.ndarray       # [*batch, n_tiles | 1, n_poles]  G [°C/W]
+    eta: jnp.ndarray        # [*batch, n_tiles | 1]  1 − a_slow^(Δt_la/dt)
+    gain_sum: jnp.ndarray   # [*batch, n_tiles | 1]  Σ G (= Rth)
+    poll_ticks: jnp.ndarray # [*batch, n_tiles | 1] int32 — OEM poll period
 
 
 class SchedulerState(NamedTuple):
@@ -58,6 +102,11 @@ class SchedulerState(NamedTuple):
     freq: jnp.ndarray               # [..., n_tiles]
     step: jnp.ndarray               # scalar int32
     events: jnp.ndarray             # [...] int32 — T_crit crossings (want 0)
+    # per-package physics (config.heterogeneous) — None ⇒ homogeneous fleet,
+    # every package on the scheduler's shared fingerprint poles
+    pkg: "PackageParams | None" = None
+    # reactive_poll hysteresis latch [..., n_tiles] bool — None otherwise
+    throttled: "jnp.ndarray | None" = None
 
 
 class SchedulerOutput(NamedTuple):
@@ -80,6 +129,9 @@ class ThermalScheduler:
         if cfg.filtration_impl not in ("incremental", "ring"):
             raise ValueError(f"unknown filtration_impl "
                              f"{cfg.filtration_impl!r} (incremental|ring)")
+        if cfg.mode not in ("v24", "reactive", "reactive_poll", "off"):
+            raise ValueError(f"unknown mode {cfg.mode!r} "
+                             f"(v24|reactive|reactive_poll|off)")
         self.cfg = cfg
         self.fp = fp
         base = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
@@ -91,13 +143,67 @@ class ThermalScheduler:
         # same °C/W fingerprint frame as the single-tile validation
         if self.gamma is not None:
             self.gamma = self.gamma / self.gamma.sum(axis=1, keepdims=True)
-        import math
-        self.eta = 1.0 - math.exp(-cfg.lookahead_ms / fp.tau_ms)
+        # η = 1 − a_slow^(Δt_la/dt) (= 1 − e^(−Δt_la/τ)), derived from the
+        # slow pole's f32 decay with the SAME ops per-package heterogeneous
+        # draws use (`_eta_f32`, shared with PackageParams) — so a
+        # heterogeneous fleet whose draws all equal the fingerprint
+        # bit-matches the homogeneous path.  Numpy, not jnp: stays a
+        # concrete python float even under a jit trace.
+        self.eta = float(_eta_f32(self.poles.decay[-1],
+                                  cfg.lookahead_ms / cfg.step_ms))
+        # reactive_poll ramp-back per step (mirrors dvfs.simulate_reactive)
+        self.ramp = (1.0 - cfg.throttle_level) / max(
+            int(cfg.recover_ms / cfg.step_ms), 1)
+        self.poll_ticks = max(int(cfg.poll_interval_ms / cfg.step_ms), 1)
         self._init_cache: dict = {}   # compiled sharded-init per layout
 
     # ------------------------------------------------------------------ api
+    def package_params(self, poles: thermal.PoleParams | None = None,
+                       poll_ticks=None,
+                       batch_shape: tuple[int, ...] = ()) -> PackageParams:
+        """Build per-package draws for a heterogeneous fleet.
+
+        ``poles``: batched `thermal.PoleParams` with decay/gain shaped
+        [*batch, n_tiles | 1, n_poles] (see `thermal.pole_bank`; an
+        [*batch, n_poles] bank gains a broadcast tile axis).  ``None``
+        replicates the scheduler's fingerprint poles — a heterogeneous fleet
+        with all-identical draws, bit-matching the homogeneous path.
+        ``poll_ticks``: [*batch, n_tiles | 1]-broadcastable int polling
+        periods for the ``reactive_poll`` baseline (default: the config's
+        homogeneous interval).  η and ΣG are derived here, eagerly, in f32.
+        """
+        c = self.cfg
+        if poles is None:
+            poles = thermal.PoleParams(
+                decay=jnp.broadcast_to(self.poles.decay,
+                                       batch_shape + (1,) + self.poles.decay.shape),
+                gain=jnp.broadcast_to(self.poles.gain,
+                                      batch_shape + (1,) + self.poles.gain.shape))
+        decay, gain = jnp.asarray(poles.decay), jnp.asarray(poles.gain)
+        if decay.ndim == len(batch_shape) + 1:     # [*batch, n_poles]
+            decay, gain = decay[..., None, :], gain[..., None, :]
+        n_poles = self.poles.decay.shape[0]
+        if decay.shape[-1] != n_poles or gain.shape != decay.shape:
+            raise ValueError(
+                f"per-package poles must carry decay/gain "
+                f"[*batch, n_tiles|1, {n_poles}], got {decay.shape} / "
+                f"{gain.shape}")
+        if poll_ticks is None:
+            poll_ticks = jnp.full(decay.shape[:-1], self.poll_ticks,
+                                  jnp.int32)
+        # η eagerly, via the SAME numpy f32 derivation as the homogeneous
+        # self.eta — identical draws therefore carry bitwise identical η
+        # (draws must be concrete; they are experiment inputs, not traces)
+        return PackageParams(
+            decay=decay, gain=gain,
+            eta=jnp.asarray(_eta_f32(decay[..., -1],
+                                     c.lookahead_ms / c.step_ms)),
+            gain_sum=gain.sum(-1),
+            poll_ticks=jnp.asarray(poll_ticks, jnp.int32))
+
     def init(self, batch_shape: tuple[int, ...] = (),
-             shardings=None) -> SchedulerState:
+             shardings=None, pkg: PackageParams | None = None,
+             filtration_fill=None) -> SchedulerState:
         """Fresh state; ``batch_shape`` prepends fleet/package dimensions.
 
         Batched states share the scalar step/ptr counters (packages step in
@@ -105,36 +211,63 @@ class ThermalScheduler:
         ``shardings`` (a pytree of `jax.sharding.Sharding` congruent with the
         state — see `state_pspecs`) places each leaf at creation, so sharded
         fleet backends never materialise the full state on one device.
+        With ``config.heterogeneous`` the state additionally carries ``pkg``
+        per-package draws (default: fingerprint replicas — see
+        `package_params`); ``filtration_fill`` overrides the ring's seed
+        value (scalar or [*batch, n_tiles]-broadcastable, the Monte-Carlo
+        harness seeds each trial with its trace's opening density).
         """
         c = self.cfg
+        if pkg is not None and not c.heterogeneous:
+            raise ValueError("per-package draws require "
+                             "SchedulerConfig(heterogeneous=True)")
+        if c.heterogeneous and pkg is None:
+            pkg = self.package_params(batch_shape=batch_shape)
+        if pkg is not None:
+            # loud shape contract: a [*batch, n_poles] bank passed without
+            # its tile axis would otherwise broadcast into a wrong-rank
+            # state deep inside the first update
+            if (pkg.decay.ndim != len(batch_shape) + 2
+                    or pkg.decay.shape[:len(batch_shape)] != batch_shape
+                    or pkg.decay.shape[-2] not in (1, c.n_tiles)):
+                raise ValueError(
+                    f"PackageParams.decay must be "
+                    f"[*{batch_shape}, {c.n_tiles}|1, n_poles], got "
+                    f"{pkg.decay.shape} (build it with "
+                    f"package_params(..., batch_shape=...))")
+        fill = self.fp.rho_min if filtration_fill is None else filtration_fill
 
         init_ft = (pdu_gate.init_filtration_stats
                    if c.filtration_impl == "incremental"
                    else pdu_gate.init_filtration)
 
-        def make() -> SchedulerState:
+        def make(pkg_in, fill_in) -> SchedulerState:
             return SchedulerState(
                 thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
                 filtration=init_ft(
-                    c.filtration_window, c.n_tiles, fill=self.fp.rho_min,
+                    c.filtration_window, c.n_tiles, fill=fill_in,
                     batch_shape=batch_shape),
                 freq=jnp.ones(batch_shape + (c.n_tiles,)),
                 step=jnp.zeros((), jnp.int32),
                 events=jnp.zeros(batch_shape, jnp.int32),
+                pkg=pkg_in,
+                throttled=(jnp.zeros(batch_shape + (c.n_tiles,), bool)
+                           if c.mode == "reactive_poll" else None),
             )
 
         if shardings is None:
-            return make()
+            return make(pkg, fill)
         # born sharded: jit with out_shardings materialises each leaf
         # directly on its owning device(s) — the full fleet state never
         # lands on one device.  The compiled initializer is cached per
-        # layout (a fresh jit per call would recompile every init).
+        # layout (a fresh jit per call would recompile every init); the
+        # per-package draws and fill ride in as (small) jit arguments.
         key = (batch_shape, tuple(jax.tree_util.tree_leaves(shardings)))
         fn = self._init_cache.get(key)
         if fn is None:
             fn = self._init_cache[key] = jax.jit(make,
                                                  out_shardings=shardings)
-        return fn()
+        return fn(pkg, fill)
 
     def state_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerState:
         """PartitionSpec pytree congruent with ``init(batch_shape)`` output.
@@ -152,12 +285,22 @@ class ThermalScheduler:
                 csum=P(*ba, None), rsum=P(*ba, None))
         else:
             ft = pdu_gate.Filtration(buf=P(*ba, None, None), ptr=P())
+        pkg = None
+        if self.cfg.heterogeneous:
+            # per-package draws partition with the packages they describe
+            pkg = PackageParams(decay=P(*ba, None, None),
+                                gain=P(*ba, None, None),
+                                eta=P(*ba, None), gain_sum=P(*ba, None),
+                                poll_ticks=P(*ba, None))
         return SchedulerState(
             thermal=P(*ba, None, None),
             filtration=ft,
             freq=P(*ba, None),
             step=P(),
             events=P(*ba),
+            pkg=pkg,
+            throttled=(P(*ba, None) if self.cfg.mode == "reactive_poll"
+                       else None),
         )
 
     def output_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerOutput:
@@ -168,6 +311,16 @@ class ThermalScheduler:
         tile = P(*ba, None)
         return SchedulerOutput(freq=tile, temp_c=tile, hint_w=tile,
                                eta=P(), at_risk=tile, balance=tile)
+
+    def _physics(self, st: SchedulerState):
+        """(poles, eta, gain_sum) — the shared fingerprint constants, or the
+        state's per-package draws when the fleet is heterogeneous.  Both
+        sources carry the same eagerly-derived f32 values, so identical
+        draws reproduce the homogeneous trajectory bit-for-bit."""
+        if st.pkg is None:
+            return self.poles, self.eta, self.poles.gain.sum()
+        return (thermal.PoleParams(decay=st.pkg.decay, gain=st.pkg.gain),
+                st.pkg.eta, st.pkg.gain_sum)
 
     def update(self, st: SchedulerState,
                rho: jnp.ndarray) -> tuple[SchedulerState, SchedulerOutput]:
@@ -180,18 +333,26 @@ class ThermalScheduler:
         # instantaneous tile power, computed ONCE: it floors the hint below
         # and (scaled by the chosen frequency) drives the plant at the end
         p_now = power_from_rho(rho)
+        poles, eta, gain_sum = self._physics(st)
 
-        hint = pdu_gate.hint(ft, self.gamma, c.lookahead_ms, c.step_ms)
-        # instantaneous load floors the hint: prediction buys lead time,
-        # never permission to exceed budget on a mispredicted onset
-        hint = jnp.maximum(hint, p_now if self.gamma is None
-                           else apply_coupling(self.gamma, p_now))
+        if c.mode == "reactive_poll":
+            return self._update_reactive_poll(st, ft, p_now, poles)
+
         dt_now = thermal.delta_t(st.thermal)
         t_allow = fp.t_crit_c - c.t_safe_margin_c - fp.t_ambient_c
-        gain_sum = self.poles.gain.sum()
 
         if c.mode == "v24":
-            budget = (t_allow - (1.0 - self.eta) * dt_now) / (self.eta * gain_sum)
+            hint = pdu_gate.hint(ft, self.gamma, c.lookahead_ms, c.step_ms)
+            # instantaneous load floors the hint: prediction buys lead time,
+            # never permission to exceed budget on a mispredicted onset
+            hint = jnp.maximum(hint, p_now if self.gamma is None
+                               else apply_coupling(self.gamma, p_now))
+            # explicit reciprocal-multiply: XLA rewrites division by a
+            # SCALAR constant (the homogeneous η·ΣG) to `* (1/c)` anyway,
+            # but keeps true division for the per-package ARRAY denominator
+            # — writing the reciprocal out makes the heterogeneous path
+            # bit-identical to the homogeneous one for identical draws
+            budget = (t_allow - (1.0 - eta) * dt_now) * (1.0 / (eta * gain_sum))
             f_uni = jnp.clip((budget / jnp.maximum(hint, 1e-3))
                              ** (1.0 / c.power_exponent), 0.05, 1.0)
             if self.gamma is None:
@@ -221,9 +382,15 @@ class ThermalScheduler:
         else:  # off — uncontrolled
             freq = jnp.ones_like(st.freq)
 
+        if c.mode != "v24":
+            # prediction only drives the v24 gate; the reported hint falls
+            # back to the instantaneous (Γ-coupled) load floor
+            hint = (p_now if self.gamma is None
+                    else apply_coupling(self.gamma, p_now))
+
         p = p_now * freq ** c.power_exponent
         p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
-        thermal_next = thermal.step(self.poles, st.thermal, p_eff)
+        thermal_next = thermal.step(poles, st.thermal, p_eff)
         temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
         events = st.events + jnp.any(temp > fp.t_crit_c, axis=-1).astype(jnp.int32)
 
@@ -234,4 +401,43 @@ class ThermalScheduler:
                               eta=jnp.asarray(self.eta), at_risk=at_risk,
                               balance=balance)
         return SchedulerState(thermal=thermal_next, filtration=ft, freq=freq,
-                              step=st.step + 1, events=events), out
+                              step=st.step + 1, events=events,
+                              pkg=st.pkg, throttled=st.throttled), out
+
+    def _update_reactive_poll(self, st: SchedulerState, ft, p_now,
+                              poles) -> tuple[SchedulerState, SchedulerOutput]:
+        """§9 baseline: reactive DVFS + temperature polling with hysteresis.
+
+        Op-for-op the fleet form of `dvfs.simulate_reactive`'s tick: the
+        plant runs at the frequency DECIDED LAST STEP (`st.freq`), the
+        sensor loop only observes the post-step junction every
+        ``poll_ticks`` (per-package under heterogeneity), and the throttle
+        latch releases only once the junction cools below ``resume_below_c``.
+        ``events`` counts trigger events (fresh throttle engagements), not
+        T_crit crossings — the §10 baseline statistic.  The emitted ``freq``
+        is next step's decision, matching the oracle's reported trace.
+        """
+        c, fp = self.cfg, self.fp
+        p = p_now * st.freq ** c.power_exponent
+        p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
+        thermal_next = thermal.step(poles, st.thermal, p_eff)
+        temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+
+        poll = self.poll_ticks if st.pkg is None else st.pkg.poll_ticks
+        polled = (st.step % poll) == 0
+        trig = (temp >= fp.t_crit_c) & polled
+        cool = (temp <= c.resume_below_c) & polled
+        events = st.events + jnp.any(trig & ~st.throttled,
+                                     axis=-1).astype(jnp.int32)
+        throttled = (st.throttled | trig) & ~cool
+        freq = jnp.where(throttled, c.throttle_level,
+                         jnp.minimum(st.freq + self.ramp, 1.0))
+
+        at_risk = freq < c.straggler_threshold
+        balance = freq / jnp.maximum(freq.sum(axis=-1, keepdims=True), 1e-6)
+        out = SchedulerOutput(freq=freq, temp_c=temp, hint_w=p_eff,
+                              eta=jnp.asarray(self.eta), at_risk=at_risk,
+                              balance=balance)
+        return SchedulerState(thermal=thermal_next, filtration=ft, freq=freq,
+                              step=st.step + 1, events=events,
+                              pkg=st.pkg, throttled=throttled), out

@@ -36,9 +36,18 @@ class PoleParams(NamedTuple):
 
 
 def single_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0) -> PoleParams:
-    """V24 single-pole discretisation (τ = 80 ms, gain = Rth)."""
-    a = jnp.exp(-dt_ms / fp.tau_ms)
-    return PoleParams(decay=jnp.array([a]), gain=jnp.array([fp.rth_c_per_w]))
+    """V24 single-pole discretisation (τ = 80 ms, gain = Rth).
+
+    The discretised constants are NUMPY-backed (f32): numpy leaves flow
+    through every jnp expression as constants, but — unlike jnp arrays —
+    indexing or `float()`-ing them stays concrete even when a scheduler is
+    constructed inside a jit trace (a jnp.exp here would stage to a tracer
+    and poison every downstream constant derivation).
+    """
+    import numpy as np
+    a = np.exp(np.float32(-dt_ms / fp.tau_ms))
+    return PoleParams(decay=np.asarray([a], np.float32),
+                      gain=np.asarray([fp.rth_c_per_w], np.float32))
 
 
 def two_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0,
@@ -47,10 +56,28 @@ def two_pole(fp: Fingerprint = FINGERPRINT, dt_ms: float = 1.0,
 
     With ``emib=True`` the slow pole moves to the EMIB lateral value
     (τ₂ ≈ 200–500 ms, organic substrate dominated — paper §5.2).
+    Constants are numpy-backed (see `single_pole`) — concrete under trace.
     """
+    import numpy as np
     tau2 = fp.tau2_emib_ms if emib else fp.tau2_ms
-    a = jnp.exp(-dt_ms / jnp.array([fp.tau1_ms, tau2]))
-    return PoleParams(decay=a, gain=jnp.array([fp.a1, fp.a2]))
+    a = np.exp(np.asarray([-dt_ms / fp.tau1_ms, -dt_ms / tau2], np.float32))
+    return PoleParams(decay=a,
+                      gain=np.asarray([fp.a1, fp.a2], np.float32))
+
+
+def pole_bank(rth, tau_ms, dt_ms: float = 1.0) -> PoleParams:
+    """Batched single-pole banks from per-package process draws (§10.1).
+
+    ``rth``/``tau_ms`` are arrays of any matching shape [*batch]; the result
+    carries decay/gain [*batch, 1] — one pole per draw, discretised exactly
+    like `single_pole` (a = exp(−dt/τ), gain = Rth).  The fleet layer aligns
+    these against [..., n_tiles, n_poles] state by keeping a broadcastable
+    tile axis in `repro.core.scheduler.PackageParams`.
+    """
+    rth = jnp.asarray(rth)
+    tau = jnp.asarray(tau_ms)
+    return PoleParams(decay=jnp.exp(-dt_ms / tau)[..., None],
+                      gain=rth[..., None])
 
 
 def init_state(poles: PoleParams, n_tiles: int = 1,
@@ -70,6 +97,9 @@ def step(poles: PoleParams, state: jnp.ndarray, power_w: jnp.ndarray) -> jnp.nda
     power_w: [..., n_tiles] effective (Γ-coupled) power; state
     [..., n_tiles, n_poles].  Broadcasting is against the trailing pole
     axis only, so arbitrary leading batch dimensions are supported.
+    Heterogeneous pole banks (per-package decay/gain shaped
+    [*batch, n_tiles | 1, n_poles] — see `pole_bank`) broadcast through
+    the same expressions element-wise.
     """
     return (poles.decay * state
             + (1.0 - poles.decay) * poles.gain * power_w[..., None])

@@ -5,9 +5,9 @@ Layering: `engine` (backend-agnostic stepping + telemetry) over
 `ingest` (streaming serving loop with bounded look-ahead ingest).
 """
 from repro.fleet.backends import available_backends, get_backend, register
-from repro.fleet.engine import FleetEngine, FleetTelemetry
+from repro.fleet.engine import FleetEngine, FleetSurvey, FleetTelemetry
 from repro.fleet.ingest import HintQueue, StreamStats, chunk_source, stream
 
-__all__ = ["FleetEngine", "FleetTelemetry", "available_backends",
-           "get_backend", "register", "HintQueue", "StreamStats",
-           "chunk_source", "stream"]
+__all__ = ["FleetEngine", "FleetSurvey", "FleetTelemetry",
+           "available_backends", "get_backend", "register", "HintQueue",
+           "StreamStats", "chunk_source", "stream"]

@@ -63,8 +63,16 @@ class FleetBackend:
         self.sched = sched
 
     # -- state ------------------------------------------------------------
-    def init(self, n_packages: int) -> SchedulerState:
-        """Fleet state with a leading [n_packages] axis on per-package leaves."""
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
+        """Fleet state with a leading [n_packages] axis on per-package leaves.
+
+        ``pkg`` (a `repro.core.scheduler.PackageParams` with [n_packages]
+        leading leaves; requires ``SchedulerConfig(heterogeneous=True)``)
+        gives every package its own process-variation physics;
+        ``filtration_fill`` seeds each package's ring with its own opening
+        density.  Both default to the homogeneous fingerprint behaviour.
+        """
         raise NotImplementedError
 
     def update(self, state: SchedulerState, rho: jnp.ndarray

@@ -16,8 +16,10 @@ from repro.fleet.backends.base import FleetBackend, register
 class BroadcastBackend(FleetBackend):
     name = "broadcast"
 
-    def init(self, n_packages: int) -> SchedulerState:
-        return self.sched.init(batch_shape=(n_packages,))
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
+        return self.sched.init(batch_shape=(n_packages,), pkg=pkg,
+                               filtration_fill=filtration_fill)
 
     def update(self, state: SchedulerState, rho: jnp.ndarray
                ) -> tuple[SchedulerState, SchedulerOutput]:

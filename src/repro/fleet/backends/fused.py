@@ -65,11 +65,19 @@ class FusedBackend(FleetBackend):
             throttle_floor=float(fp.throttle_floor),
             decay=tuple(float(d) for d in sched.poles.decay),
             gain=tuple(float(g) for g in sched.poles.gain),
+            # reactive_poll baseline constants (homogeneous defaults; a
+            # heterogeneous fleet overrides poll per package via het rows)
+            throttle_level=float(c.throttle_level),
+            resume_below_c=float(c.resume_below_c),
+            ramp=float(sched.ramp),
+            poll_ticks=int(sched.poll_ticks),
         )
 
     # -- state ------------------------------------------------------------
-    def init(self, n_packages: int) -> SchedulerState:
-        return self.sched.init(batch_shape=(n_packages,))
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
+        return self.sched.init(batch_shape=(n_packages,), pkg=pkg,
+                               filtration_fill=filtration_fill)
 
     def update(self, state: SchedulerState, rho: jnp.ndarray
                ) -> tuple[SchedulerState, SchedulerOutput]:
@@ -77,10 +85,30 @@ class FusedBackend(FleetBackend):
         return self.sched.update(state, rho)
 
     # -- fused fast path ---------------------------------------------------
+    def _het_rows(self, pkg) -> jnp.ndarray:
+        """Stack per-package draws for the kernel's VMEM-resident het input.
+
+        Layout [2·n_poles + 3, n_tiles | 1, n]: decay per pole, gain per
+        pole, then η, ΣG and the polling period — each a tiles-on-sublanes /
+        packages-on-lanes plane, padded (benignly) and folded into the
+        sublane axis by `fleet_step` exactly like the thermal state.
+        """
+        f32 = jnp.float32
+        tr = lambda x: jnp.transpose(x.astype(f32), (2, 1, 0))  # → [np, t, n]
+        one = lambda x: x.astype(f32).T[None]                   # → [1, t, n]
+        return jnp.concatenate([
+            tr(pkg.decay), tr(pkg.gain),
+            one(pkg.eta), one(pkg.gain_sum), one(pkg.poll_ticks),
+        ], axis=0)
+
     def run_block(self, state: SchedulerState, rho_trace: jnp.ndarray):
         """Advance T steps in one kernel.  rho_trace: [T, n, tiles].
 
         Returns (state', temps [T, n, tiles], freqs [T, n, tiles]).
+        Heterogeneous fleets feed their per-package decay/gain/η/ΣG/poll
+        draws into the kernel alongside the ring (`_het_rows`), and the
+        ``reactive_poll`` baseline threads its hysteresis latch through
+        kernel scratch.
         """
         t = rho_trace.shape[0]
         ft = state.filtration
@@ -90,9 +118,13 @@ class FusedBackend(FleetBackend):
         buf0 = jnp.roll(ft.buf, -ft.ptr, axis=-2)
         wsum, csum, rsum = pdu_gate.exact_stats(buf0, 0)
 
+        het = None if state.pkg is None else self._het_rows(state.pkg)
+        thr0 = (None if state.throttled is None
+                else state.throttled.astype(jnp.float32).T)
+
         # tiles-on-sublanes, packages-on-lanes layout
         tnl = lambda x: jnp.moveaxis(x, -1, -2)            # [.., n, t]->[.., t, n]
-        temps, freqs, buf, th, ev = fleet_step(
+        temps, freqs, buf, th, ev, thr = fleet_step(
             tnl(rho_trace),
             jnp.transpose(buf0, (1, 2, 0)),                # [W, tiles, n]
             jnp.transpose(state.thermal, (2, 1, 0)),       # [poles, tiles, n]
@@ -101,6 +133,9 @@ class FusedBackend(FleetBackend):
             state.events.astype(jnp.float32)[None, :],
             self.sched.gamma,
             self.params,
+            het=het,
+            thr0=thr0,
+            step0=state.step,
             block_packages=self.block_packages,
             time_chunk=self.time_chunk,
             interpret=self.interpret,
@@ -119,6 +154,8 @@ class FusedBackend(FleetBackend):
             freq=freqs[-1].T,
             step=state.step + t,
             events=ev[0].astype(state.events.dtype),
+            pkg=state.pkg,
+            throttled=None if thr is None else (thr.T > 0.5),
         )
         return state, tnl(temps), tnl(freqs)
 

@@ -81,11 +81,13 @@ class ShardedBackend(FleetBackend):
                 RuntimeWarning, stacklevel=3)
         self.mesh = fleet_mesh(budget)
 
-    def init(self, n_packages: int) -> SchedulerState:
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
         self._resolve_mesh(n_packages)
         return self.sched.init(
             batch_shape=(n_packages,),
-            shardings=to_shardings(self.mesh, self._state_specs))
+            shardings=to_shardings(self.mesh, self._state_specs),
+            pkg=pkg, filtration_fill=filtration_fill)
 
     def update(self, state: SchedulerState, rho: jnp.ndarray
                ) -> tuple[SchedulerState, SchedulerOutput]:

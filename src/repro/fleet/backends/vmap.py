@@ -18,10 +18,17 @@ from repro.fleet.backends.base import FleetBackend, register
 class VmapBackend(FleetBackend):
     name = "vmap"
 
-    def init(self, n_packages: int) -> SchedulerState:
-        base = self.sched.init()
-        return jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (n_packages,) + x.shape), base)
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
+        # build the broadcast layout (per-package draws / fills land on
+        # their packages), then give the lockstep scalar counters a
+        # per-lane axis — every leaf carries the package dim under vmap
+        st = self.sched.init(batch_shape=(n_packages,), pkg=pkg,
+                             filtration_fill=filtration_fill)
+        lane = lambda x: jnp.broadcast_to(x, (n_packages,) + x.shape)
+        return st._replace(
+            step=lane(st.step),
+            filtration=st.filtration._replace(ptr=lane(st.filtration.ptr)))
 
     def update(self, state: SchedulerState, rho: jnp.ndarray
                ) -> tuple[SchedulerState, SchedulerOutput]:

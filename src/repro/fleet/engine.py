@@ -55,6 +55,7 @@ class FleetTelemetry(NamedTuple):
     temp_p50_c: jnp.ndarray      # fleet junction-temperature percentiles
     temp_p99_c: jnp.ndarray
     temp_max_c: jnp.ndarray
+    temp_var_c2: jnp.ndarray     # fleet junction-temperature variance [°C²]
     freq_mean: jnp.ndarray       # mean frequency multiplier
     freq_min: jnp.ndarray
     released_mtps: jnp.ndarray   # Σ R_tok(ρ)·f — compute actually released
@@ -88,12 +89,25 @@ class FleetTelemetry(NamedTuple):
             temp_p50_c=self.temp_p50_c.mean(),
             temp_p99_c=self.temp_p99_c.max(),
             temp_max_c=self.temp_max_c.max(),
+            temp_var_c2=self.temp_var_c2.mean(),   # mean per-step spread
             freq_mean=self.freq_mean.mean(),
             freq_min=self.freq_min.min(),
             released_mtps=self.released_mtps.mean(),
             throttled_mtps=self.throttled_mtps.mean(),
             at_risk_frac=self.at_risk_frac.mean(),
         )
+
+
+class FleetSurvey(NamedTuple):
+    """Per-(package, tile) lane reductions over a trace (the §10 Monte-Carlo
+    plane): one record per lane, accumulated in-graph — see
+    `FleetEngine.run_survey`."""
+
+    peak_t_c: jnp.ndarray      # [n, tiles] max junction temp past burn-in
+    exceed_frac: jnp.ndarray   # [n, tiles] fraction of counted steps > T_crit
+    freq_mean: jnp.ndarray     # [n, tiles] mean delivered frequency (all steps)
+    steps: jnp.ndarray         # int32 — trace length
+    counted_steps: jnp.ndarray # int32 — steps past burn-in
 
 
 class FleetEngine:
@@ -148,12 +162,26 @@ class FleetEngine:
         self._run = jax.jit(self._run_impl, donate_argnums=dn)
         self._run_block = jax.jit(self._run_block_impl, donate_argnums=dn)
         self._run_chunked = jax.jit(self._run_chunked_impl, donate_argnums=dn)
+        # survey entry points donate the state AND the accumulator pytree
+        # (argument 3) — the chunk loop rebinds both every call
+        dns = (0, 3) if donate_state else ()
+        self._survey = jax.jit(self._survey_impl, donate_argnums=dns)
+        self._survey_block = jax.jit(self._survey_block_impl,
+                                     donate_argnums=dns)
 
     # ------------------------------------------------------------------ api
-    def init(self, n_packages: int) -> SchedulerState:
+    def init(self, n_packages: int, pkg=None,
+             filtration_fill=None) -> SchedulerState:
         """Fleet state with a leading [n_packages] axis on every per-package
-        leaf; layout (and device placement) is the backend's choice."""
-        return self.backend_impl.init(n_packages)
+        leaf; layout (and device placement) is the backend's choice.
+
+        ``pkg`` (`repro.core.scheduler.PackageParams`, requires
+        ``SchedulerConfig(heterogeneous=True)``) gives every package its own
+        process-variation draws — Rth/τ pole banks, preposition fraction,
+        polling period; ``filtration_fill`` seeds each package's ring (the
+        Monte-Carlo harness uses its trace's opening density)."""
+        return self.backend_impl.init(n_packages, pkg=pkg,
+                                      filtration_fill=filtration_fill)
 
     def step(self, state: SchedulerState, rho) -> tuple[
             SchedulerState, SchedulerOutput, FleetTelemetry]:
@@ -169,6 +197,7 @@ class FleetEngine:
         """`lax.scan` the fleet over a [T, n_packages, n_tiles] density trace;
         returns final state + stacked per-step telemetry ([T]-leaved)."""
         self._guard_donated(state)
+        self._check_trace(rho_trace)
         return self._run(state, rho_trace)
 
     def run_chunked(self, state: SchedulerState, rho_trace,
@@ -186,9 +215,8 @@ class FleetEngine:
         telemetry).  Chunks are placed via the backend's `put_trace`, so
         device-mesh backends receive each package partition pre-sharded."""
         self._guard_donated(state)
+        self._check_trace(rho_trace)
         t = rho_trace.shape[0]
-        if t == 0:
-            raise ValueError("empty density trace")
         n_full, rem = divmod(t, flush_every)
         telems = None
         if n_full:
@@ -213,9 +241,59 @@ class FleetEngine:
         plus the chunk's SINGLE reduced telemetry record (the streaming
         ingest loop's unit of work — one host sync per block)."""
         self._guard_donated(state)
+        self._check_trace(rho_trace)
         return self._run_block(state, rho_trace)
 
+    def run_survey(self, state: SchedulerState, rho_trace, burn_in: int = 0,
+                   chunk: int = 1024) -> tuple[SchedulerState, "FleetSurvey"]:
+        """Scan a [T, n, tiles] trace accumulating PER-PACKAGE (per-tile)
+        reductions in-graph — the Monte-Carlo plane.
+
+        Unlike `run`/`run_chunked` (fleet-aggregate telemetry), the survey
+        keeps one record per (package, tile) lane: running peak junction
+        temperature and T_crit exceedance fraction over the steps past
+        ``burn_in``, plus the mean delivered frequency over the whole trace
+        — exactly the §10 per-trial statistics, with O(n) accumulator state
+        instead of an O(T·n) trace.  Backends with a fused `run_block`
+        advance ``chunk``-step blocks through the kernel and reduce its
+        streamed temp/freq traces; pure backends accumulate inside one scan.
+        One host transfer total (when the caller fetches the result).
+        """
+        self._guard_donated(state)
+        self._check_trace(rho_trace)
+        t = rho_trace.shape[0]
+        if not 0 <= burn_in < t:
+            raise ValueError(f"burn_in={burn_in} outside the trace [0, {t})")
+        acc = (jnp.full(state.freq.shape, -jnp.inf),     # running peak T
+               jnp.zeros(state.freq.shape),              # exceedance count
+               jnp.zeros(state.freq.shape),              # Σ freq (Kahan)
+               jnp.zeros(state.freq.shape))              # Kahan compensation
+        counted = jnp.arange(t) >= burn_in
+        put = self.backend_impl.put_trace
+        if self.backend_impl.run_block is None:
+            state, acc = self._survey(state, put(rho_trace), counted, acc)
+        else:
+            for i in range(0, t, chunk):
+                state, acc = self._survey_block(
+                    state, put(rho_trace[i:i + chunk]), counted[i:i + chunk],
+                    acc)
+        peak, exceed, fsum, _ = acc
+        return state, FleetSurvey(
+            peak_t_c=peak,
+            exceed_frac=exceed / (t - burn_in),
+            freq_mean=fsum / t,
+            steps=jnp.asarray(t, jnp.int32),
+            counted_steps=jnp.asarray(t - burn_in, jnp.int32))
+
     # ------------------------------------------------------------- internals
+    @staticmethod
+    def _check_trace(rho_trace) -> None:
+        """One guard for every trace entry point (run/run_block/run_chunked/
+        run_survey): a zero-length trace would otherwise fall through to a
+        zero-length scan or kernel call with an opaque failure mode."""
+        if rho_trace.shape[0] == 0:
+            raise ValueError("empty density trace")
+
     def _guard_donated(self, state: SchedulerState) -> None:
         """Fail readably when a donated state pytree is passed back in.
 
@@ -254,6 +332,7 @@ class FleetEngine:
             temp_p50_c=jnp.percentile(out.temp_c, 50.0),
             temp_p99_c=jnp.percentile(out.temp_c, 99.0),
             temp_max_c=out.temp_c.max(),
+            temp_var_c2=out.temp_c.var(),
             freq_mean=out.freq.mean(),
             freq_min=out.freq.min(),
             released_mtps=(rtok * out.freq).sum(),
@@ -268,15 +347,89 @@ class FleetEngine:
             return st, telem
         return jax.lax.scan(tick, state, rho_trace)
 
-    def _telemetry_from_traces(self, rho_trace, temps, freqs,
-                               prev_events) -> FleetTelemetry:
+    @staticmethod
+    def _kahan(fsum, comp, x):
+        """Compensated add: a 3000-step sequential f32 Σfreq otherwise
+        drifts ~1e-5 relative (the dominant fleet-vs-oracle survey error;
+        peak is a max and the exceedance count is exact small integers, so
+        only this accumulator needs compensation)."""
+        y = x - comp
+        tot = fsum + y
+        return tot, (tot - fsum) - y
+
+    def _survey_impl(self, state: SchedulerState, rho_trace, counted, acc):
+        """Pure-backend survey: one scan carrying O(n) accumulators."""
+        t_crit = self.fp.t_crit_c
+
+        def tick(carry, x):
+            st, peak, exceed, fsum, comp = carry
+            rho, m = x
+            st, out = self.backend_impl.update(st, rho)
+            peak = jnp.maximum(peak, jnp.where(m, out.temp_c, -jnp.inf))
+            exceed = exceed + jnp.where(m & (out.temp_c > t_crit), 1.0, 0.0)
+            fsum, comp = self._kahan(fsum, comp, out.freq)
+            return (st, peak, exceed, fsum, comp), None
+
+        (state, *acc), _ = jax.lax.scan(tick, (state, *acc),
+                                        (rho_trace, counted))
+        return state, tuple(acc)
+
+    def _survey_block_impl(self, state: SchedulerState, rho_trace, counted,
+                           acc):
+        """Fused-backend survey: whole-chunk kernel, then lane reductions
+        over its streamed temp/freq traces — same jitted program."""
+        peak, exceed, fsum, comp = acc
+        state, temps, freqs = self.backend_impl.run_block(state, rho_trace)
+        m = counted[:, None, None]
+        peak = jnp.maximum(peak, jnp.where(m, temps, -jnp.inf).max(0))
+        exceed = exceed + jnp.where(
+            m & (temps > self.fp.t_crit_c), 1.0, 0.0).sum(0)
+        fsum, comp = self._kahan(fsum, comp, freqs.sum(0))
+        return state, (peak, exceed, fsum, comp)
+
+    def _reactive_poll_events(self, state0: SchedulerState,
+                              temps: jnp.ndarray) -> jnp.ndarray:
+        """[T] per-step fresh throttle engagements reconstructed from a
+        temperature trace — the reactive_poll event statistic.
+
+        Replays the sensor/hysteresis recurrence of
+        `ThermalScheduler._update_reactive_poll` (polled → trig/cool →
+        latch) over the streamed temps, starting from the pre-block latch
+        and global step, so the trace-derived telemetry counts the SAME
+        events as the state counter the kernel advances (the comparisons
+        are exact on identical f32 temperatures)."""
+        c, fp = self.cfg, self.fp
+        poll = (self.sched.poll_ticks if state0.pkg is None
+                else state0.pkg.poll_ticks)
+        t = temps.shape[0]
+        steps = state0.step + jnp.arange(t)
+
+        def tick(latch, x):
+            temp, k = x
+            polled = (k % poll) == 0
+            trig = (temp >= fp.t_crit_c) & polled
+            cool = (temp <= c.resume_below_c) & polled
+            fresh = jnp.any(trig & ~latch, axis=-1)          # [n]
+            return (latch | trig) & ~cool, fresh.sum().astype(jnp.int32)
+
+        _, ev_step = jax.lax.scan(tick, state0.throttled, (temps, steps))
+        return ev_step
+
+    def _telemetry_from_traces(self, rho_trace, temps, freqs, prev_events,
+                               state0: SchedulerState) -> FleetTelemetry:
         """[T]-leaved telemetry derived from per-step temperature/frequency
         traces — the telemetry plane of the fused whole-chunk backends.
-        Field-for-field identical to stacking `_step_impl`'s records."""
+        Field-for-field identical to stacking `_step_impl`'s records: under
+        ``mode="reactive_poll"`` the event plane replays the sensor
+        recurrence from ``state0`` (throttle engagements, the §10 baseline
+        statistic); every other mode counts T_crit crossings."""
         t, n = temps.shape[0], temps.shape[1]
         flat = lambda x: x.reshape(t, -1)
-        crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)    # [T, n]
-        ev_step = crossed.sum(axis=-1).astype(jnp.int32)
+        if self.cfg.mode == "reactive_poll":
+            ev_step = self._reactive_poll_events(state0, temps)
+        else:
+            crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)  # [T, n]
+            ev_step = crossed.sum(axis=-1).astype(jnp.int32)
         rtok = rtok_from_rho(rho_trace)
         return FleetTelemetry(
             n_packages=jnp.full((t,), n, jnp.int32),
@@ -285,6 +438,7 @@ class FleetEngine:
             temp_p50_c=jnp.percentile(flat(temps), 50.0, axis=1),
             temp_p99_c=jnp.percentile(flat(temps), 99.0, axis=1),
             temp_max_c=flat(temps).max(axis=1),
+            temp_var_c2=flat(temps).var(axis=1),
             freq_mean=flat(freqs).mean(axis=1),
             freq_min=flat(freqs).min(axis=1),
             released_mtps=flat(rtok * freqs).sum(axis=1),
@@ -298,10 +452,11 @@ class FleetEngine:
             # fused whole-chunk path: one kernel for the T-step block, then
             # the telemetry reductions on its streamed temp/freq traces
             prev_events = state.events.sum()
+            state0 = state
             state, temps, freqs = self.backend_impl.run_block(state,
                                                               rho_trace)
             telems = self._telemetry_from_traces(rho_trace, temps, freqs,
-                                                 prev_events)
+                                                 prev_events, state0)
         else:
             state, telems = self._run_impl(state, rho_trace)
         return state, telems.reduce()

@@ -69,6 +69,12 @@ class FleetStepParams:
     throttle_floor: float
     decay: tuple           # per-pole a_i = exp(−dt/τ_i), python floats
     gain: tuple            # per-pole G_i [°C/W]
+    # reactive_poll baseline constants (mode == "reactive_poll"); per-package
+    # polling periods override ``poll_ticks`` via the heterogeneous rows
+    throttle_level: float = 0.55
+    resume_below_c: float = 66.0
+    ramp: float = 0.045    # per-step frequency ramp-back
+    poll_ticks: int = 25   # homogeneous sensor polling period [steps]
 
 
 def _pad_axis(x, n, axis, value=0.0):
@@ -81,9 +87,10 @@ def _pad_axis(x, n, axis, value=0.0):
 
 
 def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
-            ev0_ref, temp_ref, freqs_ref, buf_ref, th_ref, ev_ref,
-            ring_scr, th_scr, stat_scr, f_scr, e_scr, *,
-            ck: int, tp: int, n_tiles: int, p: FleetStepParams):
+            ev0_ref, het_ref, thr0_ref, step0_ref, temp_ref, freqs_ref,
+            buf_ref, th_ref, ev_ref, thr_ref,
+            ring_scr, th_scr, stat_scr, f_scr, e_scr, thr_scr, *,
+            ck: int, tp: int, n_tiles: int, het: bool, p: FleetStepParams):
     c = pl.program_id(1)
     w, q, np_ = p.window, p.recent, p.n_poles
     tm = (p.window - 1) / 2.0
@@ -97,6 +104,7 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
         stat_scr[...] = stats0_ref[...]
         f_scr[...] = freq0_ref[...]
         e_scr[...] = ev0_ref[...]
+        thr_scr[...] = thr0_ref[...]
 
     gamma = gamma_ref[...]                                   # [tp, tp]
     if p.use_gamma:
@@ -107,6 +115,20 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
 
     def couple(x):                                           # Γ @ x over tiles
         return jnp.dot(gamma, x, preferred_element_type=jnp.float32)
+
+    # per-package physics: with the heterogeneous rows resident in VMEM,
+    # every pole/η/ΣG/poll constant becomes a [tp, blk] plane read; the
+    # homogeneous path keeps the baked python-float constants (bit-identical
+    # products — the floats are the same f32 values)
+    if het:
+        hrow = lambda r: het_ref[pl.ds(r * tp, tp), :]
+        decay = [hrow(j) for j in range(np_)]
+        gain = [hrow(np_ + j) for j in range(np_)]
+        eta_l = hrow(2 * np_)
+        gsum_l = hrow(2 * np_ + 1)
+        poll_l = hrow(2 * np_ + 2).astype(jnp.int32)
+    else:
+        decay, gain, poll_l = p.decay, p.gain, p.poll_ticks
 
     def tick(i, _):
         step = c * ck + i
@@ -150,10 +172,51 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
         power_from = lambda r: (p.alpha * (p.rtok_icept + p.rtok_slope * r)
                                 + p.beta) / p.rth
         p_now = power_from(rho)
+        f_prev = f_scr[...]
+        real = (jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0) < n_tiles)
+
+        def plant(freq_used):
+            """Advance the pole bank at ``freq_used``; returns the new
+            junction temperature (scratch updated in place)."""
+            power = p_now * freq_used ** p.power_exponent
+            p_eff = couple(power) if p.use_gamma else power
+            dt_next = jnp.zeros((tp, p_now.shape[-1]), jnp.float32)
+            for j in range(np_):
+                st_j = decay[j] * th_scr[j * tp:(j + 1) * tp, :] \
+                    + (1.0 - decay[j]) * gain[j] * p_eff
+                th_scr[j * tp:(j + 1) * tp, :] = st_j
+                dt_next = dt_next + st_j
+            return p.t_ambient_c + dt_next
+
+        if p.mode == "reactive_poll":
+            # §9 baseline: the plant runs at LAST step's frequency, the
+            # sensor only observes every poll interval, and the throttle
+            # latch (scratch, f32 0/1) carries the hysteresis.  ``events``
+            # counts fresh trigger engagements, not crossings.  Polling
+            # phase follows the GLOBAL scheduler step (step0 + local) so
+            # chunk boundaries never reset a package's sensor cadence.
+            temp = plant(f_prev)
+            step_g = step0_ref[0, 0].astype(jnp.int32) + step
+            polled = (step_g % poll_l) == 0
+            trig = (temp >= p.t_crit_c) & polled
+            cool = (temp <= p.resume_below_c) & polled
+            thr = thr_scr[...] > 0.5
+            fresh = jnp.max(
+                jnp.where(real, (trig & ~thr).astype(jnp.float32), 0.0),
+                axis=0, keepdims=True)                       # any real tile
+            e_scr[...] = e_scr[...] + fresh
+            thr_n = (thr | trig) & ~cool
+            freq = jnp.where(thr_n, p.throttle_level,
+                             jnp.minimum(f_prev + p.ramp, 1.0))
+            thr_scr[...] = thr_n.astype(jnp.float32)
+            f_scr[...] = freq
+            temp_ref[pl.ds(i, 1)] = temp[None]
+            freqs_ref[pl.ds(i, 1)] = freq[None]
+            return 0
+
         dt_now = th_scr[0:tp, :]
         for j in range(1, np_):
             dt_now = dt_now + th_scr[j * tp:(j + 1) * tp, :]
-        f_prev = f_scr[...]
 
         # -- PDU-gate hint + v24 control law -------------------------------
         if p.mode == "v24":
@@ -164,10 +227,16 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
                 hint = jnp.maximum(couple(p_ahead), couple(p_now))
             else:
                 hint = jnp.maximum(p_ahead, p_now)
-            # η·gain_sum multiplied in f32 like the pure path (gain_sum is
-            # a traced f32 scalar there) — keeps budget bit-aligned
-            budget = (p.t_allow - (1.0 - p.eta) * dt_now) \
-                / (jnp.float32(p.eta) * jnp.float32(p.gain_sum))
+            if het:
+                # per-package η/ΣG planes, same op order as the pure path
+                # (explicit reciprocal-multiply, matching the pure budget)
+                budget = (p.t_allow - (1.0 - eta_l) * dt_now) \
+                    * (1.0 / (eta_l * gsum_l))
+            else:
+                # η·gain_sum multiplied in f32 like the pure path (gain_sum
+                # is a traced f32 scalar there) — keeps budget bit-aligned
+                budget = (p.t_allow - (1.0 - p.eta) * dt_now) \
+                    * (1.0 / (jnp.float32(p.eta) * jnp.float32(p.gain_sum)))
             f_uni = jnp.clip((budget / jnp.maximum(hint, 1e-3)) ** inv_exp,
                              0.05, 1.0)
             if p.use_gamma:
@@ -188,19 +257,10 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
             freq = jnp.ones_like(f_prev)
 
         # -- plant + events -----------------------------------------------
-        power = p_now * freq ** p.power_exponent
-        p_eff = couple(power) if p.use_gamma else power
-        dt_next = jnp.zeros_like(dt_now)
-        for j in range(np_):
-            st_j = p.decay[j] * th_scr[j * tp:(j + 1) * tp, :] \
-                + (1.0 - p.decay[j]) * p.gain[j] * p_eff
-            th_scr[j * tp:(j + 1) * tp, :] = st_j
-            dt_next = dt_next + st_j
-        temp = p.t_ambient_c + dt_next
+        temp = plant(freq)
         # event = any REAL tile over t_crit: mask the padded phantom tile
         # rows so they can never inflate a package's counter (they sit at a
         # benign fill temperature, but t_crit is caller-configurable)
-        real = (jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0) < n_tiles)
         crossed = jnp.max(
             jnp.where(real, (temp > p.t_crit_c).astype(jnp.float32), 0.0),
             axis=0, keepdims=True)                           # any over tiles
@@ -218,6 +278,7 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
     buf_ref[...] = ring_scr[...]
     th_ref[...] = th_scr[...]
     ev_ref[...] = e_scr[...]
+    thr_ref[...] = thr_scr[...]
 
 
 def _divisor_chunk(t: int, target: int) -> int:
@@ -230,7 +291,8 @@ def _divisor_chunk(t: int, target: int) -> int:
 
 
 def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
-               params: FleetStepParams, *, block_packages: int = LANE,
+               params: FleetStepParams, *, het=None, thr0=None, step0=0,
+               block_packages: int = LANE,
                time_chunk: int = 256, interpret: bool | None = None):
     """Fused K-step fleet advance.
 
@@ -241,10 +303,19 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
       stats0: [3, n_tiles, n] (wsum, csum, rsum)
       freq0:  [n_tiles, n];  ev0: [1, n] float32 cumulative event counts
       gamma:  [n_tiles, n_tiles] or None (pole constants ride in ``params``)
+      het:    optional [2·n_poles + 3, n_tiles | 1, n] per-package physics
+              (decay per pole, gain per pole, η, ΣG, poll — see
+              `repro.fleet.backends.fused.FusedBackend._het_rows`); loaded
+              into VMEM alongside the ring, overriding the baked constants
+      thr0:   optional [n_tiles, n] f32 0/1 reactive_poll hysteresis latch
+      step0:  global scheduler step at chunk entry (traced or python int) —
+              keeps the reactive_poll sensor cadence continuous across
+              chunk boundaries
 
     Returns (temps [T, n_tiles, n], freqs [T, n_tiles, n],
              buf [W, n_tiles, n] (ring, ptr = T mod W),
-             th [n_poles, n_tiles, n], ev [1, n]).
+             th [n_poles, n_tiles, n], ev [1, n],
+             thr [n_tiles, n] f32 latch, or None when ``thr0`` is None).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -279,6 +350,30 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
     g = jnp.zeros((tp, tp), f32) if gamma is None else \
         _pad_axis(_pad_axis(gamma.astype(f32), tp, 0), tp, 1)
 
+    # heterogeneous rows: broadcast a per-package (tile-axis-1) plane over
+    # the real tiles, then pad with 1.0 — decay 1 freezes phantom-tile pole
+    # state at 0, ΣG 1 keeps the budget division finite, poll 1 is a legal
+    # period; phantom tiles are masked out of event counting regardless
+    has_het = het is not None
+    n_het = (2 * np_ + 3) if has_het else 1
+    if has_het:
+        het_p = jnp.broadcast_to(het.astype(f32),
+                                 (n_het, n_tiles, het.shape[-1]))
+        het_p = prep(het_p, 1, 1.0).reshape(n_het * tp, n_pad)
+        h_rows = n_het * tp
+    else:
+        het_p = jnp.zeros((1, n_pad), f32)
+        h_rows = 1
+    has_thr = thr0 is not None
+    if has_thr:
+        thr_p = prep(thr0.astype(f32), 0, 0.0)
+        t_rows = tp
+    else:
+        thr_p = jnp.zeros((1, n_pad), f32)
+        t_rows = 1
+    # global-step offset: f32 is exact for the 90k-scale step counts
+    step0_p = jnp.broadcast_to(jnp.asarray(step0, f32), (1, 1))
+
     # fold the [W|poles|stats, tiles] leading dims into the sublane axis
     buf_p = buf_p.reshape(w * tp, n_pad)
     th_p = th_p.reshape(np_ * tp, n_pad)
@@ -286,8 +381,9 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
 
     state_spec = lambda r: pl.BlockSpec((r, blk), lambda b, c: (0, b))
     trace_spec = pl.BlockSpec((ck, tp, blk), lambda b, c: (c, 0, b))
-    temps, freqs, buf, th, ev = pl.pallas_call(
-        functools.partial(_kernel, ck=ck, tp=tp, n_tiles=n_tiles, p=params),
+    temps, freqs, buf, th, ev, thr = pl.pallas_call(
+        functools.partial(_kernel, ck=ck, tp=tp, n_tiles=n_tiles,
+                          het=has_het, p=params),
         grid=grid,
         in_specs=[
             trace_spec,                                        # rho
@@ -297,6 +393,9 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             state_spec(3 * tp),                                # stats0
             state_spec(tp),                                    # freq0
             state_spec(1),                                     # ev0
+            state_spec(h_rows),                                # het
+            state_spec(t_rows),                                # thr0
+            pl.BlockSpec((1, 1), lambda b, c: (0, 0)),         # step0
         ],
         out_specs=[
             trace_spec,                                        # temps
@@ -304,6 +403,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             state_spec(w * tp),                                # buf
             state_spec(np_ * tp),                              # th
             state_spec(1),                                     # ev
+            state_spec(t_rows),                                # thr
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t, tp, n_pad), f32),
@@ -311,6 +411,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             jax.ShapeDtypeStruct((w * tp, n_pad), f32),
             jax.ShapeDtypeStruct((np_ * tp, n_pad), f32),
             jax.ShapeDtypeStruct((1, n_pad), f32),
+            jax.ShapeDtypeStruct((t_rows, n_pad), f32),
         ],
         scratch_shapes=[
             pltpu.VMEM((w * tp, blk), f32),                    # ring
@@ -318,11 +419,13 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             pltpu.VMEM((3 * tp, blk), f32),                    # stats
             pltpu.VMEM((tp, blk), f32),                        # freq
             pltpu.VMEM((1, blk), f32),                         # events
+            pltpu.VMEM((t_rows, blk), f32),                    # thr latch
         ],
         interpret=interpret,
-    )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p)
+    )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p, het_p, thr_p, step0_p)
 
     return (temps[:, :n_tiles, :n], freqs[:, :n_tiles, :n],
             buf.reshape(w, tp, n_pad)[:, :n_tiles, :n],
             th.reshape(np_, tp, n_pad)[:, :n_tiles, :n],
-            ev[:, :n])
+            ev[:, :n],
+            thr[:n_tiles, :n] if has_thr else None)

@@ -26,6 +26,12 @@ replaces the wave loop with a control-plane soak: the whole
 loop (`repro.fleet.ingest`) — double-buffered host→device uploads, bounded
 look-ahead hint queue, telemetry reduced in-graph over each ``gen``-step
 flush window and fetched with ONE host sync per flush.
+
+``--montecarlo N`` runs the §10 process-variation population instead: N
+heterogeneous trials (per-trial Rth/τ/η/polling draws in the fleet state)
+paired baseline/V24 through the selected ``--fleet-backend``, reporting the
+peak-temperature distributions, σ tightening and the §3.4 guard-band
+margins derived from them.
 """
 from __future__ import annotations
 
@@ -44,6 +50,41 @@ from repro.fleet import (FleetEngine, available_backends, chunk_source,
                          stream)
 from repro.launch import steps as S
 from repro.models import transformer as tf
+
+
+def _montecarlo(args):
+    """--montecarlo N: §10 process-variation population through the fleet.
+
+    Each trial is one lane of a heterogeneous fleet (per-trial Rth/τ/η/poll
+    draws riding in the scheduler state) driven through the selected fleet
+    backend; prints the §10 distribution statistics and the §3.4 guard-band
+    margins derived from the measured σ ratio.
+    """
+    from repro.core import guardband, montecarlo
+    t0 = time.time()
+    r = montecarlo.run(n_trials=args.montecarlo, n_steps=args.mc_steps,
+                       key=jax.random.PRNGKey(args.seed),
+                       backend=args.fleet_backend,
+                       devices=args.fleet_devices or None,
+                       filtration_impl=args.filtration)
+    s = r.stats()
+    dt = time.time() - t0
+    print(f"[mc] {args.montecarlo} trials x {args.mc_steps} steps "
+          f"(paired baseline+v24) on '{args.fleet_backend}' in {dt:.1f} s "
+          f"({args.montecarlo / dt:.0f} trials/s)")
+    print(f"[mc] baseline peak-T {s['baseline_mean_c']:.1f}C "
+          f"sigma {s['baseline_std_c']:.2f}C, exceedance "
+          f"{s['baseline_time_above_frac'] * 100:.1f}%")
+    print(f"[mc] v24      peak-T {s['v24_mean_c']:.1f}C "
+          f"sigma {s['v24_std_c']:.2f}C, exceedance "
+          f"{s['v24_time_above_frac'] * 100:.2f}%")
+    print(f"[mc] sigma tightening {s['sigma_tighter_x']:.1f}x, uplift "
+          f"{s['uplift_mean'] * 100:.1f}% "
+          f"[p5 {s['uplift_p5'] * 100:.1f}%, p95 {s['uplift_p95'] * 100:.1f}%]")
+    for g in guardband.from_montecarlo(s):
+        print(f"[mc] guard-band {g.category}: {g.margin_before * 100:.0f}% "
+              f"-> {g.margin_after * 100:.1f}% (-{g.reduction_pct:.1f}%)")
+    return {"montecarlo": s, "trials_per_s": args.montecarlo / dt}
 
 
 def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
@@ -108,7 +149,17 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
+    ap.add_argument("--montecarlo", type=int, default=0,
+                    help="run the §10 process-variation Monte-Carlo with N "
+                         "trials through the fleet backend instead of "
+                         "serving")
+    ap.add_argument("--mc-steps", type=int, default=3_000,
+                    help="steps per Monte-Carlo trial (>= 3000 reproduces "
+                         "the paper's §10 distributions)")
     args = ap.parse_args(argv)
+
+    if args.montecarlo:
+        return _montecarlo(args)
 
     cfg = get_arch(args.arch)
     if args.reduced:

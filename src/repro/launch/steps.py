@@ -57,7 +57,7 @@ def train_state_specs(cfg: ArchConfig, state: TrainState, mesh):
 
 # ============================================================= train step ==
 def make_train_step(cfg: ArchConfig, n_tiles: int,
-                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    opt_cfg: AdamWConfig | None = None,
                     remat: bool = True, n_microbatches: int = 1):
     """``n_microbatches > 1`` enables gradient accumulation: the global batch
     is processed in B/n slices inside a lax.scan, so per-step activation

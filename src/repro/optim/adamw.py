@@ -56,8 +56,11 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def adamw_update(grads, state: AdamWState, params,
-                 cfg: AdamWConfig = AdamWConfig()):
+                 cfg: AdamWConfig | None = None):
     """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    # construct-per-call: a dataclass default argument is built once at
+    # import and shared by every caller (the FleetEngine/scheduler bug class)
+    cfg = AdamWConfig() if cfg is None else cfg
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
     count = state.count + 1

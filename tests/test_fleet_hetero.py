@@ -1,0 +1,372 @@
+"""Heterogeneous fleets: per-package process variation through every backend.
+
+Contracts:
+  * a heterogeneous fleet whose per-package draws all equal the fingerprint
+    BIT-matches the homogeneous path on every backend (the het plumbing is
+    pure plumbing — same f32 constants, same op order);
+  * per-trial physics match the `repro.core.dvfs` simulators lane-for-lane
+    (the §10 oracle) for both controllers, v24 and the reactive_poll
+    baseline;
+  * the fleet-backed `montecarlo.run` reproduces `run_reference`'s
+    aggregate §10 statistics on the pure and fused backends (full-scale
+    N=2000 is gated by benchmarks/bench_montecarlo.py);
+  * every trace entry point rejects an empty trace readably;
+  * `sharded_fused` partitions per-package draws consistently with
+    `put_trace` chunks on 1/2/4 emulated devices (subprocesses);
+  * seeding is stable across processes (PYTHONHASHSEED regression);
+  * no audited entry point carries a shared config-instance default.
+"""
+import dataclasses
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from fleet_multidev import run_sub as _run_sub
+
+from repro.core import dvfs, montecarlo, thermal, workload
+from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+from repro.fleet import FleetEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ("vmap", "broadcast", "sharded", "fused", "sharded_fused")
+N_TILES = 4
+
+
+def _trace(steps, n, tiles, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return 0.9 + 1.8 * jax.random.uniform(key, (steps, n, tiles))
+
+
+# ------------------------------------------------- identical-draw bitmatch --
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", ["v24", "reactive", "off"])
+def test_identical_draws_bitmatch_homogeneous(backend, mode):
+    """All-identical per-package params ≡ homogeneous path, bit-for-bit."""
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode=mode)
+    hcfg = dataclasses.replace(cfg, heterogeneous=True)
+    trace = _trace(24, 16, N_TILES, seed=1)
+    e0 = FleetEngine(cfg, backend=backend)
+    e1 = FleetEngine(hcfg, backend=backend)
+    s0, t0 = e0.run_block(e0.init(16), trace)
+    s1, t1 = e1.run_block(e1.init(16), trace)
+    for f in ("thermal", "freq", "events"):
+        np.testing.assert_array_equal(np.asarray(getattr(s0, f)),
+                                      np.asarray(getattr(s1, f)),
+                                      err_msg=f"{backend}/{mode}/{f}")
+    for f in t0._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(t0, f)),
+                                      np.asarray(getattr(t1, f)),
+                                      err_msg=f"{backend}/{mode}/telem.{f}")
+
+
+def test_identical_draws_bitmatch_step_path():
+    """The per-step `step()` fallback holds the same bit-match contract."""
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24")
+    hcfg = dataclasses.replace(cfg, heterogeneous=True)
+    trace = _trace(6, 8, N_TILES, seed=2)
+    e0 = FleetEngine(cfg, backend="broadcast")
+    e1 = FleetEngine(hcfg, backend="broadcast")
+    s0, s1 = e0.init(8), e1.init(8)
+    for t in range(6):
+        s0, o0, _ = e0.step(s0, trace[t])
+        s1, o1, _ = e1.step(s1, trace[t])
+        np.testing.assert_array_equal(np.asarray(o0.freq),
+                                      np.asarray(o1.freq))
+        np.testing.assert_array_equal(np.asarray(o0.temp_c),
+                                      np.asarray(o1.temp_c))
+
+
+# ----------------------------------------------- per-trial oracle parity ----
+def _mc_cfg(mode, **kw):
+    d = dvfs.DVFSConfig()
+    return SchedulerConfig(
+        n_tiles=1, mode=mode, two_pole=False, use_coupling=False,
+        step_ms=d.dt_ms, lookahead_steps=d.lookahead_ms / d.dt_ms,
+        filtration_window=d.filtration_window,
+        t_safe_margin_c=d.t_safe_margin_c, heterogeneous=True,
+        throttle_level=d.throttle_level, resume_below_c=d.resume_below_c,
+        recover_ms=d.recover_ms, **kw)
+
+
+@pytest.mark.parametrize("backend", ["vmap", "fused"])
+@pytest.mark.parametrize("mode", ["reactive_poll", "v24"])
+def test_het_fleet_matches_dvfs_oracle(backend, mode):
+    """Each lane of a heterogeneous fleet reproduces its own
+    `dvfs.simulate_*` trajectory statistics (≤2e-5)."""
+    d = dvfs.DVFSConfig()
+    n, steps = 4, 400
+    key = jax.random.PRNGKey(5)
+    tr = jnp.stack([workload.make_trace(jax.random.fold_in(key, i), steps,
+                                        "inference")[:, 0]
+                    for i in range(n)], 1)[:, :, None]
+    rth = jnp.asarray([0.35, 0.45, 0.55, 0.62])
+    tau = jnp.asarray([60.0, 80.0, 100.0, 140.0])
+    poll = jnp.asarray([15, 25, 40, 75])
+
+    eng = FleetEngine(_mc_cfg(mode, filtration_impl="ring"), backend=backend)
+    pkg = eng.sched.package_params(thermal.pole_bank(rth, tau, d.dt_ms),
+                                   poll_ticks=poll[:, None],
+                                   batch_shape=(n,))
+    st = eng.init(n, pkg=pkg, filtration_fill=tr[0])
+    # two survey chunks — exercises the latch/poll-phase chunk handoff
+    st, sv = eng.run_survey(st, tr, burn_in=50, chunk=steps // 2)
+
+    for i in range(n):
+        poles = thermal.PoleParams(decay=jnp.exp(-d.dt_ms / tau[i])[None],
+                                   gain=rth[i][None])
+        if mode == "reactive_poll":
+            ref = dvfs.simulate_reactive(tr[:, i], d, poles=poles,
+                                         poll_ticks=poll[i])
+        else:
+            ref = dvfs.simulate_v24(tr[:, i], d, poles=poles)
+        temp = np.asarray(ref.temp)[50:]
+        want = (temp.max(), (temp > 85.0).mean(), float(ref.perf))
+        got = (float(sv.peak_t_c[i, 0]), float(sv.exceed_frac[i, 0]),
+               float(sv.freq_mean[i, 0]))
+        err = max(abs(g - w) / max(abs(w), 1.0) for g, w in zip(got, want))
+        assert err <= 2e-5, (backend, mode, i, got, want)
+
+
+@pytest.mark.parametrize("backend", ["broadcast", "fused"])
+def test_montecarlo_fleet_matches_reference(backend):
+    """Reduced-size §10 experiment: fleet path ≡ per-trial oracle on the
+    aggregate statistics (full N=2000 is gated in bench_montecarlo)."""
+    n, steps = 48, 600
+    ref = montecarlo.run_reference(n_trials=n, n_steps=steps, burn_in=100)
+    got = montecarlo.run(n_trials=n, n_steps=steps, burn_in=100,
+                         backend=backend)
+    for f in ref._fields:
+        a = np.asarray(getattr(ref, f), np.float64)
+        b = np.asarray(getattr(got, f), np.float64)
+        assert abs(a.mean() - b.mean()) / max(abs(a.mean()), 1.0) <= 1e-5, f
+        if not f.startswith("time_above"):
+            assert abs(a.std() - b.std()) / max(abs(a.std()), 1.0) <= 1e-4, f
+
+
+def test_montecarlo_lane_packing_invariant():
+    """Trial→lane packing is an implementation detail: a trial count that
+    packs 8-wide and one that forces narrower packing agree with the oracle
+    (per-trial peaks, not just aggregates)."""
+    for n in (16, 6):          # lanes 8 and 6... and 6 → pack 6
+        ref = montecarlo.run_reference(n_trials=n, n_steps=300, burn_in=50)
+        got = montecarlo.run(n_trials=n, n_steps=300, burn_in=50)
+        np.testing.assert_allclose(np.asarray(got.peak_t_baseline),
+                                   np.asarray(ref.peak_t_baseline),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.perf_v24),
+                                   np.asarray(ref.perf_v24),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["fused", "sharded_fused"])
+def test_reactive_poll_fused_telemetry_events_consistent(backend):
+    """Regression: the fused backends' trace-derived telemetry must count
+    the SAME reactive_poll events (fresh throttle engagements) as the pure
+    backends and the state counter — not T_crit crossings — including
+    across run_chunked flush boundaries."""
+    cfg = _mc_cfg("reactive_poll")
+    cfg = dataclasses.replace(cfg, n_tiles=2)
+    # hot enough, long enough (τ = 80 ms at 1 kHz) that the junction really
+    # crosses T_crit and the hysteresis latch cycles a few times
+    trace = jnp.clip(_trace(500, 8, 2, seed=9) + 1.5, 0.9, 2.7)
+    eb = FleetEngine(cfg, backend="broadcast")
+    ef = FleetEngine(cfg, backend=backend)
+    sb, rb = eb.run_chunked(eb.init(8), trace, 200)    # 200+200+100 windows
+    sf, rf = ef.run_chunked(ef.init(8), trace, 200)
+    np.testing.assert_array_equal(np.asarray(rb.events_step),
+                                  np.asarray(rf.events_step))
+    np.testing.assert_array_equal(np.asarray(rb.events_total),
+                                  np.asarray(rf.events_total))
+    np.testing.assert_array_equal(np.asarray(sb.events), np.asarray(sf.events))
+    assert int(np.asarray(rf.events_total)[-1]) == \
+        int(np.asarray(sf.events).sum())
+    assert int(np.asarray(sf.events).sum()) > 0          # events really fired
+
+
+# -------------------------------------------------------- empty traces ------
+def test_empty_trace_raises_on_every_entry_point():
+    """run / run_block / run_chunked / run_survey all fail readably on T=0
+    (run_chunked already did; run/run_block used to fall through into a
+    zero-length scan or kernel call)."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                      backend="broadcast")
+    empty = jnp.zeros((0, 4, N_TILES))
+    for call in (lambda: eng.run(eng.init(4), empty),
+                 lambda: eng.run_block(eng.init(4), empty),
+                 lambda: eng.run_chunked(eng.init(4), empty, 5),
+                 lambda: eng.run_survey(eng.init(4), empty)):
+        with pytest.raises(ValueError, match="empty density trace"):
+            call()
+    with pytest.raises(ValueError, match="burn_in"):
+        eng.run_survey(eng.init(4), _trace(3, 4, N_TILES), burn_in=3)
+
+
+# ------------------------------------------------------- shape contracts ----
+def test_package_params_shape_contract():
+    sched = ThermalScheduler(SchedulerConfig(n_tiles=2, two_pole=False,
+                                             heterogeneous=True))
+    bank = thermal.pole_bank(jnp.ones((8,)) * 0.45, jnp.ones((8,)) * 80.0)
+    pkg = sched.package_params(bank, batch_shape=(8,))
+    assert pkg.decay.shape == (8, 1, 1) and pkg.eta.shape == (8, 1)
+    # missing tile axis relative to batch_shape fails loudly at init
+    bad = pkg._replace(decay=pkg.decay[..., 0, :], gain=pkg.gain[..., 0, :])
+    with pytest.raises(ValueError, match="PackageParams.decay"):
+        sched.init(batch_shape=(8,), pkg=bad)
+    # per-package draws without the config flag fail loudly too
+    plain = ThermalScheduler(SchedulerConfig(n_tiles=2, two_pole=False))
+    with pytest.raises(ValueError, match="heterogeneous=True"):
+        plain.init(batch_shape=(8,), pkg=pkg)
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown mode"):
+        ThermalScheduler(SchedulerConfig(mode="nope"))
+
+
+def test_state_pspecs_congruent_heterogeneous():
+    """The sharded-init spec pytree tracks the het + reactive_poll state."""
+    from jax.sharding import PartitionSpec as P
+    sched = ThermalScheduler(SchedulerConfig(
+        n_tiles=3, mode="reactive_poll", heterogeneous=True))
+    st = sched.init(batch_shape=(8,))
+    specs = sched.state_pspecs(batch_axes=("packages",))
+    flat_s, tdef_s = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    flat_x, tdef_x = jax.tree_util.tree_flatten(st)
+    assert tdef_s == tdef_x
+    for leaf, spec in zip(flat_x, flat_s):
+        assert len(spec) <= leaf.ndim
+
+
+# ------------------------------------------- sharded_fused multi-device -----
+_HET_MULTIDEV = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import thermal
+    from repro.core.scheduler import SchedulerConfig
+    from repro.fleet import FleetEngine
+
+    NDEV, N, TILES, STEPS = {ndev}, 8, 4, 300
+    key = jax.random.PRNGKey(7)
+    rth = 0.45 * (1 + 0.08 * jax.random.normal(key, (N,)))
+    tau = 80.0 * (1 + 0.12 * jax.random.normal(jax.random.fold_in(key, 1),
+                                               (N,)))
+    trace = 0.9 + 1.8 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                           (STEPS, N, TILES))
+    cfg = SchedulerConfig(n_tiles=TILES, mode="v24", two_pole=False,
+                          heterogeneous=True)
+
+    def survey(backend, devices=None):
+        eng = FleetEngine(cfg, backend=backend, devices=devices)
+        pkg = eng.sched.package_params(thermal.pole_bank(rth, tau, 10.0),
+                                       batch_shape=(N,))
+        st = eng.init(N, pkg=pkg)
+        st, sv = eng.run_survey(st, trace, burn_in=30)
+        return eng, st, jax.device_get(sv)
+
+    esf, ssf, svf = survey("sharded_fused", devices=NDEV)
+    assert esf.backend_impl.n_devices() == NDEV, esf.backend_impl.describe()
+    # per-package draws really partition over the mesh...
+    assert len(ssf.pkg.decay.sharding.device_set) == NDEV
+    # ...CONSISTENTLY with put_trace chunk delivery: each device owns the
+    # same package index range of the draws as of an uploaded chunk
+    chunk = esf.backend_impl.put_trace(np.asarray(trace))
+    def ranges(arr, dim):
+        return {{s.device: s.index[dim] for s in arr.addressable_shards}}
+    assert ranges(ssf.pkg.decay, 0) == ranges(chunk, 1)
+    assert ranges(ssf.pkg.decay, 0) == ranges(ssf.freq, 0)
+
+    for refb in ("fused", "vmap"):
+        _, _, ref = survey(refb)
+        for f in ("peak_t_c", "exceed_frac", "freq_mean"):
+            a = np.asarray(getattr(ref, f), np.float64)
+            b = np.asarray(getattr(svf, f), np.float64)
+            err = np.max(np.abs(a - b) / np.maximum(np.abs(a), 1.0))
+            assert err <= 1e-5, (refb, f, err)
+    print("OK het multidev", NDEV)
+"""
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 4])
+def test_sharded_fused_het_partitioning(ndev):
+    """Per-package draws shard with their packages (consistent with
+    `put_trace` chunks) and the surveyed physics match the fused and vmap
+    parents on 1/2/4 emulated devices."""
+    out = _run_sub(_HET_MULTIDEV.format(ndev=ndev), n_devices=ndev)
+    assert f"OK het multidev {ndev}" in out
+
+
+# --------------------------------------------------- seeding stability ------
+_SEED_SNIPPET = """
+    import jax, numpy as np
+    from repro.core import montecarlo, workload
+    tr = workload.make_trace(jax.random.PRNGKey(3), 64, "vision")
+    up = montecarlo.uplift_by_workload(n_steps=300)
+    print("TRACE", float(np.asarray(tr).sum()))
+    print("UPLIFT", " ".join(f"{k}={v:.9f}" for k, v in up.items()))
+"""
+
+
+def test_seeding_stable_across_processes():
+    """Regression: `hash(kind)` seeding was salted by PYTHONHASHSEED, so
+    the same key yielded different traces (and Fig. 6 numbers) on every
+    run.  Two interpreters with explicitly different hash seeds must now
+    agree exactly."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    from fleet_multidev import SRC
+    outs = []
+    for seed in ("1", "4242"):
+        env = dict(os.environ, PYTHONPATH=SRC, PYTHONHASHSEED=seed)
+        r = subprocess.run([sys.executable, "-c",
+                            textwrap.dedent(_SEED_SNIPPET)],
+                           capture_output=True, text=True, env=env,
+                           timeout=540)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout)
+    assert outs[0] == outs[1], f"seed-dependent output:\n{outs[0]}\n{outs[1]}"
+
+
+# ------------------------------------------- shared-default-config audit ----
+def test_no_config_instance_defaults():
+    """Regression (shared mutable default, PR-4/PR-5 bug class): no
+    module-level function in the audited modules may hold a config INSTANCE
+    as a parameter default — they construct per call from None instead.
+    The audit scans whole modules (not a hand-kept function list) so a new
+    `= SomeConfig()` default anywhere in them fails here."""
+    from repro.core import cpo, hbm, pdu_gate, serdes, thermal
+    from repro.core.fingerprint import FINGERPRINT
+    from repro.launch import steps as launch_steps
+    from repro.optim import adamw
+
+    modules = [montecarlo, dvfs, cpo, hbm, serdes, thermal, pdu_gate,
+               workload, adamw, launch_steps]
+    audited = [fn for mod in modules
+               for fn in vars(mod).values()
+               if inspect.isfunction(fn) and fn.__module__ == mod.__name__]
+    assert len(audited) > 20          # the scan really found the surface
+    for fn in audited:
+        for name, param in inspect.signature(fn).parameters.items():
+            default = param.default
+            if default is inspect.Parameter.empty or default is None:
+                continue
+            if default is FINGERPRINT:
+                # the one sanctioned singleton: a frozen module-level
+                # CONSTANTS table (never mutated, aliasing is the point)
+                continue
+            assert not dataclasses.is_dataclass(default), \
+                f"{fn.__module__}.{fn.__qualname__}({name}=...) holds a " \
+                f"shared {type(default).__name__} instance default"
+
+
+def test_uplift_by_workload_in_band():
+    """Fig. 6 sanity on the stable seeding: positive uplift per kind."""
+    up = montecarlo.uplift_by_workload(n_steps=1_000)
+    assert set(up) == set(workload.KINDS)
+    for kind, v in up.items():
+        assert 0.05 <= v <= 0.45, (kind, v)
