@@ -22,7 +22,10 @@ Acceptance bars:
     (fused off-TPU runs in interpret mode: correctness-gated only, its
     wall-clock is reported, not gated);
   * sharded_fused weak-scales like sharded: released-MTPS capacity tracks
-    the emulated mesh size at 128 packages/device.
+    the emulated mesh size at 128 packages/device;
+  * the control plane's masked capacity pools are near-free: run_block at
+    50% occupancy (512-lane pool, [capacity] active mask, masked telemetry
+    reductions) stays within 1.10× of the dense same-capacity fleet.
 
 `benchmarks.run` appends this module's rows to ``BENCH_fleet.json`` at the
 repo root, so the fleet fast path accumulates a perf trajectory across PRs.
@@ -255,6 +258,48 @@ def _equivalence_90k() -> None:
             int(np.asarray(ref.events_total[-1]))
 
 
+MASK_CAPACITY = 512
+MASK_STEPS = 64
+
+
+def _masked_occupancy(cfg) -> None:
+    """Control-plane mask overhead bound (ISSUE-6 gate): a capacity pool at
+    50% occupancy — run_block with a [capacity] active mask — must stay
+    within 1.10× of the dense same-capacity fleet.  The padded lanes step
+    either way (lockstep execution is the zero-recompile design); what the
+    gate bounds is the PRICE of masking itself: the where-sums, inf-padded
+    masked quantiles and traced-count telemetry reductions
+    `repro.fleet.service` adds to every flush."""
+    eng = FleetEngine(cfg, backend="broadcast")
+    rng = np.random.default_rng(7)
+    trace = jnp.asarray((0.9 + 1.8 * rng.random(
+        (MASK_STEPS, MASK_CAPACITY, N_TILES))).astype(np.float32))
+    mask = np.zeros(MASK_CAPACITY, bool)
+    mask[::2] = True                          # 50% occupancy
+    mask = jnp.asarray(mask)
+    st0 = eng.init(MASK_CAPACITY)
+
+    def dense():
+        _, telem = eng.run_block(st0, trace)
+        return telem
+
+    def masked():
+        _, telem = eng.run_block(st0, trace, active=mask)
+        return telem
+
+    # best-of: the masked/dense RATIO is gated (see timed's docstring)
+    _, us_dense = timed(dense, iters=10, best=True)
+    telem, us_masked = timed(masked, iters=10, best=True)
+    assert int(telem.as_dict()["n_packages"]) == MASK_CAPACITY // 2
+    ratio = us_masked / us_dense
+    rate = MASK_STEPS * MASK_CAPACITY / (us_masked / 1e6)
+    row("fleet.masked_occupancy_512", us_masked / MASK_STEPS,
+        f"pkg_steps_per_s={rate:.0f};masked_vs_dense={ratio:.3f}"
+        f"(need<=1.10)")
+    assert ratio <= 1.10, \
+        f"masked 50%-occupancy fleet {ratio:.3f}x of dense (>1.10)"
+
+
 def _streaming_90k(cfg) -> None:
     """Streaming ingest over the Appendix-B-scale 90k-step trace: the sync
     contract (1 host sync per flush window) must hold end-to-end."""
@@ -347,6 +392,7 @@ def run() -> None:
         f"ratio={ratio:.3f}(need<=1.05)")
     assert ratio <= 1.05, f"sharded 1-dev {ratio:.3f}x of vmap (>1.05)"
 
+    _masked_occupancy(cfg)
     _filtration_fast_path()
     _fused_backend(cfg)
     _sharded_scaling("sharded")

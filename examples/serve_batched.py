@@ -2,10 +2,16 @@
 
     PYTHONPATH=src python examples/serve_batched.py
 
-Runs two serving scenarios on a reduced mixtral (MoE + sliding window):
-  (a) naive: admit the full batch every wave;
-  (b) V24: the PDU gate throttles admission when the predicted junction
-      temperature approaches the limit — P99 stays smooth (paper §8.1).
+Every wave loop runs on the fleet engine (a fleet of one package by
+default), so these scenarios exercise the exact stepping path the resident
+control plane serves from (see docs/architecture.md):
+
+  (a) V24: the PDU gate throttles admission when the predicted junction
+      temperature approaches the limit — P99 stays smooth (paper §8.1);
+  (b) long-context decode on an SSM;
+  (c) the same serving loop batched across a 4-package fleet with
+      per-package workload jitter — the per-wave fleet telemetry line is
+      the aggregate a control-plane flush reports.
 """
 from repro.launch import serve
 
@@ -19,3 +25,12 @@ print("\n== long-context decode on an SSM (rwkv6, reduced) ==")
 out2 = serve.main(["--arch", "rwkv6-1.6b", "--reduced", "--batch", "4",
                    "--prompt-len", "64", "--gen", "16", "--waves", "2"])
 print(f"summary: p50 {out2['p50'] * 1e3:.2f} ms  p99 {out2['p99'] * 1e3:.2f} ms")
+
+print("\n== fleet of 4 packages, same serving loop (broadcast backend) ==")
+out3 = serve.main(["--arch", "mixtral-8x7b", "--reduced", "--batch", "8",
+                   "--prompt-len", "48", "--gen", "16", "--waves", "2",
+                   "--fleet", "4", "--fleet-backend", "broadcast"])
+last = out3["fleet"][-1]
+print(f"summary: p50 {out3['p50'] * 1e3:.2f} ms  p99 {out3['p99'] * 1e3:.2f} ms"
+      f"  fleet p99 temp {last['temp_p99_c']:.1f} C"
+      f"  f_mean {last['freq_mean']:.3f}")

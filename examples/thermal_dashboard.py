@@ -1,18 +1,39 @@
 """Reproduce the paper's Fig. 3 fingerprint dashboard as terminal panels.
 
     PYTHONPATH=src python examples/thermal_dashboard.py
+
+The live panels (5 and 7) run on the fleet engine — a fleet of one package
+driven through `FleetEngine.block_traces`, the same whole-chunk path the
+control plane serves from — so the dashboard exercises the serving stack,
+not a separate simulator.
+
+Against a RUNNING control plane (``repro.launch.serve --serve``, see
+docs/serving.md) the dashboard becomes a live operator view:
+
+    PYTHONPATH=src python examples/thermal_dashboard.py \
+        --url http://127.0.0.1:8787
+
+polls GET /telemetry and renders the recorded flush history (fleet p99
+junction temperature, mean frequency, at-risk fraction, alert feed) as the
+same sparkline panels.
 """
+import argparse
+import json
+import urllib.request
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import dataset90k, pdu_gate, thermal, workload
 from repro.core.fingerprint import FINGERPRINT as FP
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet import FleetEngine
 
 
 def spark(values, width=60, lo=None, hi=None):
     blocks = " ▁▂▃▄▅▆▇█"
     v = jnp.asarray(values)
-    idx = jnp.linspace(0, len(v) - 1, width).astype(int)
+    idx = jnp.linspace(0, len(v) - 1, min(width, len(v))).astype(int)
     v = v[idx]
     lo = float(v.min()) if lo is None else lo
     hi = float(v.max()) if hi is None else hi
@@ -20,53 +41,123 @@ def spark(values, width=60, lo=None, hi=None):
     return "".join(blocks[int(x * (len(blocks) - 1))] for x in t)
 
 
-print("═" * 72)
-print(" XRM-SSD V24 Thermal Resistance Fingerprint Dashboard (Fig. 3 repro)")
-print("═" * 72)
+def _fleet_traces(trace, mode: str):
+    """Per-step (temps [T, tiles], freqs [T, tiles], mean freq) for one
+    package through the fleet engine's whole-chunk path."""
+    eng = FleetEngine(SchedulerConfig(n_tiles=trace.shape[1], mode=mode),
+                      donate_state=False)
+    state, temps, freqs = eng.block_traces(eng.init(1),
+                                           jnp.asarray(trace)[:, None, :])
+    return temps[:, 0, :], freqs[:, 0, :], float(freqs.mean())
 
-# Panel 1: ρ–ΔT coupling scatter → regression
-t = dataset90k.generate()
-a, b, r2 = dataset90k.fit_affine(t.rtok, t.dt_junction)
-print(f"\n[1] ΔT = α·R_tok + β:  α={a:.2f} °C/MTPS  β={b:.1f} °C  "
-      f"R²={r2:.4f}  (pub: 63.0, −1256.6, 0.9911)")
 
-# Panel 2: τ = 80 ms exponential rise + look-ahead window
-sr = thermal.step_response(thermal.single_pole(), 400, 100.0)
-print(f"\n[2] step response (τ={FP.tau_ms:.0f} ms; ▄ = V24 20–50 ms window)")
-print("    " + spark(sr, 64))
-print("    " + " " * int(20 / 400 * 64) + "▄" * int(30 / 400 * 64))
+def local_dashboard():
+    print("═" * 72)
+    print(" XRM-SSD V24 Thermal Resistance Fingerprint Dashboard"
+          " (Fig. 3 repro)")
+    print("═" * 72)
 
-# Panel 3: Rth validation
-ss = float(sr[-1]) / 100.0
-print(f"\n[3] Rth = {ss:.3f} °C/W  (pub 0.45, target band 0.42–0.50)")
+    # Panel 1: ρ–ΔT coupling scatter → regression
+    t = dataset90k.generate()
+    a, b, r2 = dataset90k.fit_affine(t.rtok, t.dt_junction)
+    print(f"\n[1] ΔT = α·R_tok + β:  α={a:.2f} °C/MTPS  β={b:.1f} °C  "
+          f"R²={r2:.4f}  (pub: 63.0, −1256.6, 0.9911)")
 
-# Panel 4: Δλ–ΔT spectral stability
-print(f"\n[4] κ_TO = {FP.kappa_to_nm_per_c} nm/°C — "
-      f"Δλ(4.15 °C) = {FP.kappa_to_nm_per_c * 4.15:.3f} nm < ±0.5 nm spec")
+    # Panel 2: τ = 80 ms exponential rise + look-ahead window
+    sr = thermal.step_response(thermal.single_pole(), 400, 100.0)
+    print(f"\n[2] step response (τ={FP.tau_ms:.0f} ms; ▄ = V24 20–50 ms "
+          f"window)")
+    print("    " + spark(sr, 64))
+    print("    " + " " * int(20 / 400 * 64) + "▄" * int(30 / 400 * 64))
 
-# Panel 5: live trace: ρ → hint → temperature
-trace = workload.make_trace(jax.random.PRNGKey(1), 2000, "inference")
-from repro.core import dvfs
-v24 = dvfs.simulate_v24(trace)
-base = dvfs.simulate_reactive(trace)
-print("\n[5] ρv24(t)      " + spark(trace[:, 0], 60, 0.9, 2.7))
-print("    T_v24 (°C)   " + spark(v24.temp[:, 0], 60, 45, 92))
-print("    T_base (°C)  " + spark(base.temp[:, 0], 60, 45, 92))
-print("    f_v24        " + spark(v24.freq[:, 0], 60, 0.5, 1.0))
-print("    f_base       " + spark(base.freq[:, 0], 60, 0.5, 1.0))
-print(f"\n    released compute: "
-      f"+{float(dvfs.released_compute(base, v24)) * 100:.1f} %   "
-      f"peak: {float(v24.temp.max()):.1f} vs {float(base.temp.max()):.1f} °C")
+    # Panel 3: Rth validation
+    ss = float(sr[-1]) / 100.0
+    print(f"\n[3] Rth = {ss:.3f} °C/W  (pub 0.45, target band 0.42–0.50)")
 
-# Panel 6: η
-print(f"\n[6] η: 20 ms → {float(pdu_gate.eta(20.)) * 100:.2f} %   "
-      f"50 ms → {float(pdu_gate.eta(50.)) * 100:.2f} %   "
-      f"(pub 22.12 / 46.47)")
+    # Panel 4: Δλ–ΔT spectral stability
+    print(f"\n[4] κ_TO = {FP.kappa_to_nm_per_c} nm/°C — "
+          f"Δλ(4.15 °C) = {FP.kappa_to_nm_per_c * 4.15:.3f} nm < ±0.5 nm "
+          f"spec")
 
-# Panel 7 (V7.0 seventh panel): dρ/dt ramp hint
-ramp = workload.make_trace(jax.random.PRNGKey(2), 2000, "training")
-drho = jnp.gradient(ramp[:, 0])
-print("\n[7] dρ/dt ramp hint (V7.0 seventh fingerprint panel)")
-print("    ρ     " + spark(ramp[:, 0], 60, 0.9, 2.7))
-print("    dρ/dt " + spark(jnp.abs(drho), 60))
-print("\n" + "═" * 72)
+    # Panel 5: live trace through the FLEET engine: V24 vs the §9
+    # reactive-polling baseline, one package, whole-chunk path
+    trace = workload.make_trace(jax.random.PRNGKey(1), 2000, "inference")
+    t24, f24, perf24 = _fleet_traces(trace, "v24")
+    tb, fb, perfb = _fleet_traces(trace, "reactive_poll")
+    print("\n[5] ρv24(t)      " + spark(trace[:, 0], 60, 0.9, 2.7))
+    print("    T_v24 (°C)   " + spark(t24[:, 0], 60, 45, 92))
+    print("    T_base (°C)  " + spark(tb[:, 0], 60, 45, 92))
+    print("    f_v24        " + spark(f24[:, 0], 60, 0.5, 1.0))
+    print("    f_base       " + spark(fb[:, 0], 60, 0.5, 1.0))
+    print(f"\n    released compute: +{(perf24 / perfb - 1) * 100:.1f} %   "
+          f"peak: {float(t24.max()):.1f} vs {float(tb.max()):.1f} °C")
+
+    # Panel 6: η
+    print(f"\n[6] η: 20 ms → {float(pdu_gate.eta(20.)) * 100:.2f} %   "
+          f"50 ms → {float(pdu_gate.eta(50.)) * 100:.2f} %   "
+          f"(pub 22.12 / 46.47)")
+
+    # Panel 7 (V7.0 seventh panel): dρ/dt ramp hint
+    ramp = workload.make_trace(jax.random.PRNGKey(2), 2000, "training")
+    drho = jnp.gradient(ramp[:, 0])
+    print("\n[7] dρ/dt ramp hint (V7.0 seventh fingerprint panel)")
+    print("    ρ     " + spark(ramp[:, 0], 60, 0.9, 2.7))
+    print("    dρ/dt " + spark(jnp.abs(drho), 60))
+    print("\n" + "═" * 72)
+
+
+def live_dashboard(url: str, last: int):
+    """Operator view of a running control plane: GET /telemetry history."""
+    def get(path):
+        with urllib.request.urlopen(url.rstrip("/") + path, timeout=5) as r:
+            return json.loads(r.read())
+
+    health = get("/healthz")
+    snap = get(f"/telemetry?last={last}")
+    alerts = get("/alerts")["alerts"]
+    recs = [r for r in snap["records"] if r.get("kind") == "flush"]
+    print("═" * 72)
+    print(f" Fleet control plane @ {url} — capacity {health['capacity']}, "
+          f"{health['n_active']} active, {health['flushes']} flushes")
+    print("═" * 72)
+    if not recs:
+        print("\n  (no flushes recorded yet — attach a package and wait "
+              "one flush)")
+        return
+    series = lambda k: [r["telemetry"][k] for r in recs]
+    print(f"\n  flushes {int(recs[0]['flush'])}..{int(recs[-1]['flush'])} "
+          f"({len(recs)} shown)")
+    print("  T_p99 (°C)   " + spark(series("temp_p99_c"), 60))
+    print("  T_max (°C)   " + spark(series("temp_max_c"), 60))
+    print("  f_mean       " + spark(series("freq_mean"), 60, 0.5, 1.0))
+    print("  at-risk      " + spark(series("at_risk_frac"), 60, 0.0, 1.0))
+    print("  released     " + spark(series("released_mtps"), 60))
+    last_rec = recs[-1]
+    for name, st in sorted(last_rec.get("tenants", {}).items()):
+        print(f"  tenant {name}: {int(st['n_lanes'])} pkg, "
+              f"peak {st['temp_peak_c']:.1f}°C, f_min {st['freq_min']:.3f}, "
+              f"drift {st['drift_nm']:.3f} nm")
+    print(f"\n  alerts ({len(alerts)} total):")
+    for ev in alerts[-5:]:
+        print(f"    flush {int(ev['flush'])}: {ev['tenant']} {ev['kind']} "
+              f"{ev['value']:.4g} > {ev['limit']:.4g}")
+    print("\n" + "═" * 72)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--url", default=None,
+                    help="poll a running control plane (e.g. "
+                         "http://127.0.0.1:8787) instead of the local "
+                         "fingerprint panels")
+    ap.add_argument("--last", type=int, default=60,
+                    help="--url mode: flush records of history to render")
+    args = ap.parse_args(argv)
+    if args.url:
+        live_dashboard(args.url, args.last)
+    else:
+        local_dashboard()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (stdlib only) — the CI docs job.
+
+    python scripts/check_links.py README.md docs
+
+Walks the given files/directories for ``*.md``, extracts inline links and
+images ``[text](target)``, and verifies every RELATIVE target resolves to
+an existing file or directory (anchors are stripped; external schemes —
+http/https/mailto — are skipped: CI must not depend on the network).
+Exits nonzero listing each dead link as ``file:line``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) / ![alt](target); stops at the first ')' so
+# fenced code containing parens doesn't confuse it
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        out.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    return out
+
+
+def check(paths: list[str]) -> list[str]:
+    errors = []
+    for md in _md_files(paths):
+        in_fence = False
+        for ln, line in enumerate(md.read_text().splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                target = m.group(1).split("#", 1)[0]
+                if not target or target.startswith(_SKIP):
+                    continue
+                resolved = (md.parent / target).resolve()
+                try:        # site-relative GitHub URLs (e.g. the CI badge's
+                    #         ../../actions/...) escape the repo — not ours
+                    resolved.relative_to(Path.cwd().resolve())
+                except ValueError:
+                    continue
+                if not resolved.exists():
+                    errors.append(f"{md}:{ln}: dead link -> {m.group(1)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    errors = check(paths)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(_md_files(paths))
+    print(f"checked {n} markdown file(s): "
+          f"{'OK' if not errors else f'{len(errors)} dead link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

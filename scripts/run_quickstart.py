@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Run a doc's quickstart VERBATIM — the CI smoke that keeps docs honest.
+
+    python scripts/run_quickstart.py docs/serving.md
+
+Extracts every ```bash fence between ``<!-- quickstart:begin -->`` and
+``<!-- quickstart:end -->`` markers, concatenates them, and executes the
+result with ``bash -euo pipefail`` from the repo root.  The doc text IS
+the test input — if the quickstart drifts from the code, this exits
+nonzero.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+BEGIN, END = "<!-- quickstart:begin -->", "<!-- quickstart:end -->"
+
+
+def extract(md: Path) -> str:
+    lines = md.read_text().splitlines()
+    script, armed, in_fence = [], False, False
+    for line in lines:
+        s = line.strip()
+        if s == BEGIN:
+            armed = True
+        elif s == END:
+            armed = False
+        elif armed and not in_fence and s == "```bash":
+            in_fence = True
+        elif armed and in_fence and s == "```":
+            in_fence = False
+        elif armed and in_fence:
+            script.append(line)
+    if not script:
+        raise SystemExit(f"no {BEGIN} ```bash block in {md}")
+    return "\n".join(script) + "\n"
+
+
+def main(argv: list[str]) -> int:
+    md = Path(argv[0] if argv else "docs/serving.md")
+    script = extract(md)
+    print(f"--- quickstart from {md} ---\n{script}---")
+    proc = subprocess.run(["bash", "-euo", "pipefail", "-c", script],
+                          cwd=md.resolve().parent.parent)
+    return proc.returncode
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -10,6 +10,28 @@ mitigation weights for the data pipeline, and (c) host telemetry.
 One call to `update()` == one training/serving step; the thermal plant is
 advanced by the step's wall-time in closed form (exact ZOH over n ticks:
 state' = aⁿ·state + (1−aⁿ)·G·P).
+
+State contract (what every caller above this layer relies on):
+
+  * `SchedulerState` is an immutable NamedTuple pytree; `update()` is pure
+    and returns a NEW state — **rebind the returned state**, always.  Under
+    `FleetEngine(donate_state=True)` the input state's buffers are donated
+    to XLA, so reusing a pre-call state is a bug; the engine turns it into
+    a readable ValueError instead of a crash (donation is disabled on CPU,
+    where XLA ignores it — code written against the rebind rule runs
+    unchanged either way).
+  * Batching is by LEADING axes: `init(batch_shape=(n,))` broadcasts every
+    per-tile leaf to [n, ...]; scalar leaves (step counter, poll phase)
+    stay shared — they are fleet-wide clocks, not per-package state.  The
+    fleet control plane discriminates per-lane vs shared leaves by exactly
+    this rule (`ndim >= 1 and shape[0] == capacity`).
+  * `state_pspecs(batch_axes)` mirrors the state pytree with
+    `PartitionSpec`s for the same leading axes (per `filtration_impl`, whose
+    two variants carry different filtration leaves) — the sharded backends
+    consume it so states are BORN sharded rather than resharded.
+  * `PackageParams` rows (per-package process variation) batch the same
+    way and ride beside the state; `_eta_f32` keeps the homogeneous and
+    heterogeneous η derivations bitwise identical.
 """
 from __future__ import annotations
 

@@ -1,0 +1,223 @@
+"""Per-tenant alerting — in-graph window statistics + host-side edge latch.
+
+Two halves, split at the single host sync per flush:
+
+  * `tenant_window_stats` runs INSIDE the control plane's jitted flush
+    (`repro.fleet.service`): segment reductions over the lane axis collapse
+    the streamed [T, capacity, tiles] temperature/frequency traces of one
+    flush window into dense `[max_tenants]` per-tenant statistics, and
+    compare them against the registry's traced threshold arrays to produce
+    alarm booleans — all in-graph, so evaluating every tenant's rules costs
+    zero extra host syncs and editing a threshold never recompiles.  Free
+    (inactive) lanes are routed to a DUMP SEGMENT (`tenant_ids == M`, cf.
+    `FleetRegistry.tenant_lane_ids`) that is sliced off before return, so
+    padded capacity-pool lanes cannot trip an alarm.
+
+  * `AlertEngine` runs on the host AFTER the flush record is fetched: a
+    rising-edge latch per (tenant, alarm-kind) turns the per-flush alarm
+    levels into fire-ONCE-per-crossing events (re-armed only when the
+    condition clears), fanned out to pluggable sinks — `LogSink` (stdout /
+    in-memory), `JsonlSink` (append to a JSONL audit file), `WebhookSink`
+    (HTTP POST stub; collects payloads when no URL is given, so tests and
+    offline runs need no network).
+
+Alarm kinds (keys of the alarms dict / `AlertEvent.kind`):
+
+  * ``t_crit``    — window-peak junction temperature over the tenant's
+                    packages crossed the tenant's `t_crit_c` threshold
+                    (the §3.4 guard-band surface, per tenant).
+  * ``at_risk``   — the tenant's straggler fraction (tile-steps under the
+                    fleet straggler threshold) exceeded `at_risk_limit`.
+  * ``cpo_drift`` — worst per-tile junction-temperature excursion in the
+                    window, scaled by the fingerprint's κ→nm slope
+                    (`repro.core.cpo.drift_nm`), exceeded the tenant's
+                    optical drift budget `drift_budget_nm`.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TenantWindowStats", "tenant_window_stats", "AlertEngine",
+           "LogSink", "JsonlSink", "WebhookSink", "ALARM_KINDS"]
+
+ALARM_KINDS = ("t_crit", "at_risk", "cpo_drift")
+
+
+class TenantWindowStats(NamedTuple):
+    """Dense per-tenant reductions for one flush window; every leaf is
+    `[max_tenants]`-shaped (empty slots carry identity values: 0 lanes,
+    -inf peaks, +inf minima)."""
+
+    n_lanes: jnp.ndarray       # int32 — attached packages per tenant
+    temp_peak_c: jnp.ndarray   # max junction temp over (steps, lanes, tiles)
+    freq_min: jnp.ndarray      # worst frequency multiplier in the window
+    freq_mean: jnp.ndarray     # mean frequency over the tenant's tile-steps
+    at_risk_frac: jnp.ndarray  # fraction of tile-steps under straggler thr.
+    events: jnp.ndarray        # T_crit crossing counter delta over the window
+    drift_nm: jnp.ndarray      # worst per-tile CPO drift excursion [nm]
+
+
+def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
+                        events0: jnp.ndarray, events1: jnp.ndarray,
+                        active: jnp.ndarray, tenant_ids: jnp.ndarray,
+                        n_tenants: int, straggler_threshold: float,
+                        kappa_to_nm_per_c: float,
+                        thresholds: dict[str, jnp.ndarray],
+                        ) -> tuple[TenantWindowStats, dict[str, jnp.ndarray]]:
+    """Collapse one flush window into per-tenant stats + alarm levels.
+
+    temps/freqs: [T, capacity, tiles] streamed traces of the window.
+    events0/events1: [capacity] per-lane cumulative event counters before /
+    after the window.  active: [capacity] bool.  tenant_ids: [capacity]
+    int32 slot per lane (free lanes = `n_tenants`, the dump segment).
+    thresholds: the registry's dense ``{"t_crit_c", "at_risk_limit",
+    "drift_budget_nm"}`` arrays, `[n_tenants]` each, +inf on empty slots.
+
+    Everything here is trace-safe and value-dependent only on TRACED
+    operands (mask, ids, thresholds), so membership and threshold edits
+    reuse the compiled flush program.
+    """
+    nseg = n_tenants + 1                       # + dump segment for free lanes
+    ids = jnp.where(active, tenant_ids, n_tenants)
+    seg_sum = lambda x: jax.ops.segment_sum(x, ids, nseg)[:-1]
+    seg_max = lambda x: jax.ops.segment_max(x, ids, nseg)[:-1]
+    seg_min = lambda x: -jax.ops.segment_max(-x, ids, nseg)[:-1]
+
+    tile_steps = jnp.asarray(temps.shape[0] * temps.shape[2], temps.dtype)
+    lane_peak = temps.max(axis=(0, 2))                       # [capacity]
+    lane_fmin = freqs.min(axis=(0, 2))
+    lane_fsum = freqs.sum(axis=(0, 2))
+    lane_risk = (freqs < straggler_threshold).sum(axis=(0, 2)
+                                                  ).astype(freqs.dtype)
+    # CPO drift basis: worst per-TILE temperature excursion in the window
+    # (max − min over steps), then worst tile per lane — ΔT · κ in nm
+    lane_dt = (temps.max(axis=0) - temps.min(axis=0)).max(axis=-1)
+    lane_ev = (events1 - events0).astype(jnp.float32)
+
+    n_lanes = seg_sum(jnp.ones_like(lane_peak)).astype(jnp.int32)
+    denom = jnp.maximum(n_lanes.astype(freqs.dtype), 1) * tile_steps
+    stats = TenantWindowStats(
+        n_lanes=n_lanes,
+        temp_peak_c=seg_max(lane_peak),
+        freq_min=seg_min(lane_fmin),
+        freq_mean=seg_sum(lane_fsum) / denom,
+        at_risk_frac=seg_sum(lane_risk) / denom,
+        events=seg_sum(lane_ev).astype(jnp.int32),
+        drift_nm=seg_max(lane_dt) * kappa_to_nm_per_c,
+    )
+    occupied = n_lanes > 0                     # empty slots can't alarm
+    alarms = {
+        "t_crit": occupied & (stats.temp_peak_c > thresholds["t_crit_c"]),
+        "at_risk": occupied & (stats.at_risk_frac
+                               > thresholds["at_risk_limit"]),
+        "cpo_drift": occupied & (stats.drift_nm
+                                 > thresholds["drift_budget_nm"]),
+    }
+    return stats, alarms
+
+
+# ---------------------------------------------------------------- host side
+class LogSink:
+    """Print one line per alert (and keep them in `.events`)."""
+
+    def __init__(self, stream=None):
+        self.stream = stream
+        self.events: list[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+        out = self.stream or sys.stdout
+        print(f"[alert] flush={event['flush']} tenant={event['tenant']} "
+              f"{event['kind']}: {event['value']:.4g} > "
+              f"{event['limit']:.4g}", file=out)
+
+
+class JsonlSink:
+    """Append each alert as one JSON line — the audit-trail sink."""
+
+    def __init__(self, path):
+        self.path = path
+
+    def emit(self, event: dict) -> None:
+        with open(self.path, "a") as f:
+            f.write(json.dumps(event) + "\n")
+
+
+class WebhookSink:
+    """POST each alert as JSON to `url`; with no URL it only collects
+    payloads (`.sent`) — the offline/test stub.  Delivery is best-effort:
+    a network failure is recorded in `.errors`, never raised into the
+    serving loop."""
+
+    def __init__(self, url: str | None = None, timeout: float = 2.0):
+        self.url = url
+        self.timeout = timeout
+        self.sent: list[dict] = []
+        self.errors: list[str] = []
+
+    def emit(self, event: dict) -> None:
+        self.sent.append(event)
+        if not self.url:
+            return
+        try:
+            from urllib.request import Request, urlopen
+            req = Request(self.url, data=json.dumps(event).encode(),
+                          headers={"Content-Type": "application/json"})
+            urlopen(req, timeout=self.timeout).close()
+        except Exception as e:       # noqa: BLE001 — serving must not die
+            self.errors.append(f"{type(e).__name__}: {e}")
+
+
+class AlertEngine:
+    """Rising-edge latch over per-flush alarm levels: each (tenant, kind)
+    fires exactly once when its alarm goes False→True and cannot fire again
+    until the level clears — a chunked soak whose condition persists across
+    many flush windows (including a shorter tail window) produces ONE
+    event, not one per flush."""
+
+    def __init__(self, sinks=()):
+        self.sinks = list(sinks)
+        self.history: list[dict] = []
+        self._latched: dict[tuple[str, str], bool] = {}
+
+    _VALUE_FIELD = {"t_crit": "temp_peak_c", "at_risk": "at_risk_frac",
+                    "cpo_drift": "drift_nm"}
+    _LIMIT_FIELD = {"t_crit": "t_crit_c", "at_risk": "at_risk_limit",
+                    "cpo_drift": "drift_budget_nm"}
+
+    def process(self, *, flush: int, step: int, slot_names, stats,
+                alarms, thresholds) -> list[dict]:
+        """Evaluate one flush's host-side alarm levels; returns the events
+        that fired.  `stats`/`alarms`/`thresholds` are host values (numpy
+        arrays / dicts as fetched in the flush's device_get)."""
+        fired = []
+        for kind in ALARM_KINDS:
+            flags = alarms[kind]
+            values = stats[self._VALUE_FIELD[kind]]
+            limits = thresholds[self._LIMIT_FIELD[kind]]
+            for slot, name in enumerate(slot_names):
+                if name is None:
+                    continue
+                level = bool(flags[slot])
+                key = (name, kind)
+                if level and not self._latched.get(key, False):
+                    fired.append({
+                        "flush": int(flush), "step": int(step),
+                        "tenant": name, "kind": kind,
+                        "value": float(values[slot]),
+                        "limit": float(limits[slot]),
+                    })
+                self._latched[key] = level
+        for ev in fired:
+            self.history.append(ev)
+            for sink in self.sinks:
+                sink.emit(ev)
+        return fired
+
+    def reset(self) -> None:
+        self._latched.clear()

@@ -100,6 +100,18 @@ class FleetBackend:
         """
         return jax.device_put(jnp.asarray(trace))
 
+    def put_mask(self, mask) -> jnp.ndarray:
+        """Place an [n_packages] active-lane mask on device.
+
+        The mask partitions exactly like the package axis of the state (its
+        pspec is the leading entry of `ThermalScheduler.state_pspecs`'s
+        batch axes): replicated for the single-device backends here, one
+        partition per owning device under the mesh backends.  It is a
+        TRACED argument of the engine's telemetry reductions, so flipping
+        membership bits never recompiles — only a capacity change does.
+        """
+        return jax.device_put(jnp.asarray(mask))
+
     # -- introspection ----------------------------------------------------
     def n_devices(self) -> int:
         return 1

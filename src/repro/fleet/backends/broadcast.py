@@ -3,6 +3,16 @@
 Relies on the core update math tolerating arbitrary leading batch dims
 (the batch-dim refactor): one plain `update` call advances the whole fleet
 in lockstep, with the scalar step/ptr counters shared across packages.
+
+This is the control plane's default layout (`repro.fleet.service`):
+because every per-package op is elementwise over the batch axis, padded
+capacity-pool lanes cost one vector lane each and nothing else — they run
+the same lockstep program (no re-specialisation when membership changes)
+and the engine's masked telemetry keeps them out of every reduction.  The
+mask pspec is the trivial replicated placement (`FleetBackend.put_mask`).
+The shared scalar step/ptr counters are also what makes lane scatter
+cheap: a freshly attached lane only needs its OWN per-package leaves
+reset, the fleet clock keeps running.
 """
 from __future__ import annotations
 

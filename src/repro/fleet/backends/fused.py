@@ -15,6 +15,14 @@ float drift cannot accumulate across a 90k-step soak; both filtration
 representations (`FiltrationStats` fast path and ring-buffer `Filtration`
 oracle) are accepted.  Verified against the pure-JAX engine to ≤1e-5
 (tests/test_fleet_fused.py); off-TPU the kernel runs in interpret mode.
+
+Active-lane masks never enter the kernel: padded capacity-pool lanes ride
+the 128-lane axis like any other package (the kernel already masks its OWN
+grid-padding phantom lanes out of event counting), and the engine applies
+the membership mask in the telemetry reductions over the streamed
+temp/freq traces — so dynamic attach/detach reuses the compiled kernel
+unchanged.  The mask keeps the default replicated placement
+(`FleetBackend.put_mask`).
 """
 from __future__ import annotations
 

@@ -113,6 +113,19 @@ class ShardedBackend(FleetBackend):
             spec = fleet_trace_spec(trace.ndim, package_dim=pdim, axis=None)
         return jax.device_put(trace, jax.sharding.NamedSharding(self.mesh, spec))
 
+    def put_mask(self, mask) -> jnp.ndarray:
+        """An active-lane mask partitions like the state's package axis
+        (the same `FLEET_AXIS` pspec the state leaves carry), so the
+        engine's masked telemetry reductions stay collective-free until
+        the final all-reduce; an indivisible capacity replicates it, like
+        `put_trace`'s fallback."""
+        mask = jnp.asarray(mask)
+        from jax.sharding import PartitionSpec as P
+        axis = (None if mask.shape[0] % len(self.mesh.devices.ravel())
+                else FLEET_AXIS)
+        return jax.device_put(mask,
+                              jax.sharding.NamedSharding(self.mesh, P(axis)))
+
     # -- introspection ----------------------------------------------------
     def n_devices(self) -> int:
         return len(self.mesh.devices.ravel())

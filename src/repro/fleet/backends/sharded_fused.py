@@ -22,7 +22,12 @@ the `HintQueue` double-buffering composes with `NamedSharding` unchanged.
 
 Per-step `update` falls back to the sharded pure-JAX path, and the mesh
 degradation contract (largest compatible mesh + RuntimeWarning) is
-inherited from `ShardedBackend`.  Equivalence to both parents is gated:
+inherited from `ShardedBackend` — as is `put_mask`: an active-lane mask
+partitions over the same `FLEET_AXIS` pspec as the state, stays OUTSIDE
+the shard_mapped kernel (each device's kernel steps its whole partition,
+padded lanes included), and only meets the streamed temp/freq traces in
+the engine's masked telemetry reductions, which XLA all-reduces in-graph
+before the single host sync.  Equivalence to both parents is gated:
 ≤1e-5 vs `fused` and `vmap` over the 90k-step trace on 1/2/4 emulated
 devices (tests/test_fleet_sharded_fused.py, `fleet.equiv90k_sharded_fused`
 bench row).

@@ -4,6 +4,14 @@ Every state leaf (including the step/ptr counters) carries the package axis,
 so each lane advances its own counters; this is the layout closest to "N
 independent schedulers" and the reference the other backends are verified
 against.
+
+Under the control plane's dynamic membership this layout is also the most
+literal: a scattered-in fresh lane restarts its OWN step/ptr counters at
+zero (under broadcast it inherits the fleet clock), so vmap is the backend
+whose mid-flight attach exactly equals "a new scheduler born now".  The
+active-lane mask uses the default replicated placement
+(`FleetBackend.put_mask`); its pspec mirrors the per-package leading axis
+every state leaf carries here.
 """
 from __future__ import annotations
 

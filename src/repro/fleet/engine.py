@@ -31,6 +31,34 @@ amortise dispatch/compile over the fleet (``benchmarks/bench_fleet.py``).
 For serving loops, per-step `as_dict()` costs one host sync per step; use
 `run_chunked` (or the streaming loop in `repro.fleet.ingest`) to reduce
 telemetry over K steps in-graph and sync once per flush interval.
+
+State contract (the rules the control plane in `repro.fleet.service`
+is built on; see also docs/architecture.md):
+
+  * **Rebind the returned state.**  With ``donate_state=True`` (the
+    default off-CPU) every jitted entry point donates its state argument
+    — the buffers you passed in are dead the moment the call dispatches.
+    Always write ``state, ... = eng.step(state, ...)``; reuse of a donated
+    state is caught at the engine boundary with a readable ValueError.
+  * **Lane independence.**  Per-package physics is elementwise over the
+    package axis (only the telemetry reductions cross lanes), so a lane's
+    trajectory depends solely on its own rho sequence since init — the
+    property that lets `repro.fleet.registry` pad fleets to power-of-two
+    capacities and scatter fresh lane states in and out without touching
+    the neighbours.  (One caveat: under ``mode="reactive_poll"`` the
+    polling phase follows the fleet's shared step clock, so a lane
+    attached mid-flight polls in the fleet's phase, not its own.)
+  * **Active masks.**  ``step``/``run``/``run_block``/``run_chunked``
+    accept ``active`` — a [n_packages] bool mask, threaded as a TRACED jit
+    argument — and reduce telemetry over the active lanes only: padded
+    lanes still compute (lockstep execution never re-specialises), but
+    they cannot pollute `freq_min`, `at_risk_frac`, the percentiles or the
+    event counters.  Flipping mask bits therefore never recompiles; only a
+    capacity (shape) change does.
+  * **Tail flushes.**  `run_chunked` (like `ingest.chunk_source`/`stream`)
+    treats a trace length that does not divide ``flush_every`` as legal:
+    the remainder becomes its own SHORTER flush window — ceil(T/K) records
+    total, every step counted, no padding entering the telemetry.
 """
 from __future__ import annotations
 
@@ -183,25 +211,30 @@ class FleetEngine:
         return self.backend_impl.init(n_packages, pkg=pkg,
                                       filtration_fill=filtration_fill)
 
-    def step(self, state: SchedulerState, rho) -> tuple[
+    def step(self, state: SchedulerState, rho, active=None) -> tuple[
             SchedulerState, SchedulerOutput, FleetTelemetry]:
         """Advance the whole fleet one step in a single jitted call.
 
         rho: scalar, [n_packages], or [n_packages, n_tiles] workload density.
+        ``active``: optional [n_packages] bool mask — telemetry reduces over
+        the active lanes only (padded lanes still compute; see the module
+        docstring's mask contract).
         """
         self._guard_donated(state)
-        return self._step(state, self._rho_fleet(state, rho))
+        return self._step(state, self._rho_fleet(state, rho),
+                          self._active(state, active))
 
-    def run(self, state: SchedulerState, rho_trace) -> tuple[
+    def run(self, state: SchedulerState, rho_trace, active=None) -> tuple[
             SchedulerState, FleetTelemetry]:
         """`lax.scan` the fleet over a [T, n_packages, n_tiles] density trace;
         returns final state + stacked per-step telemetry ([T]-leaved)."""
         self._guard_donated(state)
         self._check_trace(rho_trace)
-        return self._run(state, rho_trace)
+        return self._run(state, rho_trace, self._active(state, active))
 
     def run_chunked(self, state: SchedulerState, rho_trace,
-                    flush_every: int) -> tuple[SchedulerState, FleetTelemetry]:
+                    flush_every: int,
+                    active=None) -> tuple[SchedulerState, FleetTelemetry]:
         """Scan a [T, n, tiles] trace in K-step chunks, reducing telemetry
         over each chunk IN-GRAPH: the result carries one record per flush
         interval, so fetching it costs one host sync per flush instead of
@@ -216,6 +249,7 @@ class FleetEngine:
         device-mesh backends receive each package partition pre-sharded."""
         self._guard_donated(state)
         self._check_trace(rho_trace)
+        active = self._active(state, active)
         t = rho_trace.shape[0]
         n_full, rem = divmod(t, flush_every)
         telems = None
@@ -223,11 +257,11 @@ class FleetEngine:
             chunked = rho_trace[:n_full * flush_every].reshape(
                 (n_full, flush_every) + rho_trace.shape[1:])
             state, telems = self._run_chunked(
-                state, self.backend_impl.put_trace(chunked))
+                state, self.backend_impl.put_trace(chunked), active)
         if rem:
             state, tail = self._run_block(
                 state, self.backend_impl.put_trace(
-                    rho_trace[n_full * flush_every:]))
+                    rho_trace[n_full * flush_every:]), active)
             telems = (jax.tree_util.tree_map(lambda b: b[None], tail)
                       if telems is None else
                       jax.tree_util.tree_map(
@@ -235,14 +269,14 @@ class FleetEngine:
                           telems, tail))
         return state, telems
 
-    def run_block(self, state: SchedulerState, rho_trace) -> tuple[
-            SchedulerState, FleetTelemetry]:
+    def run_block(self, state: SchedulerState, rho_trace, active=None
+                  ) -> tuple[SchedulerState, FleetTelemetry]:
         """One jitted call: scan a [K, n, tiles] chunk and return the state
         plus the chunk's SINGLE reduced telemetry record (the streaming
         ingest loop's unit of work — one host sync per block)."""
         self._guard_donated(state)
         self._check_trace(rho_trace)
-        return self._run_block(state, rho_trace)
+        return self._run_block(state, rho_trace, self._active(state, active))
 
     def run_survey(self, state: SchedulerState, rho_trace, burn_in: int = 0,
                    chunk: int = 1024) -> tuple[SchedulerState, "FleetSurvey"]:
@@ -314,6 +348,23 @@ class FleetEngine:
                     "reusing the old reference, or construct the engine "
                     "with donate_state=False")
 
+    def _active(self, state: SchedulerState, active):
+        """Validate/place an optional [n_packages] bool lane mask.
+
+        ``None`` (a dense fleet) keeps the historical telemetry code paths
+        untouched; a mask is placed via the backend (`put_mask`, so sharded
+        backends land each partition on its owning device) and threaded as
+        a TRACED jit argument — mask-bit flips never recompile."""
+        if active is None:
+            return None
+        n = state.freq.shape[0]
+        arr = jnp.asarray(active)
+        if arr.shape != (n,) or arr.dtype != jnp.bool_:
+            raise ValueError(
+                f"active mask must be a [{n}] bool array (one flag per "
+                f"package lane), got shape {arr.shape} dtype {arr.dtype}")
+        return self.backend_impl.put_mask(arr)
+
     def _rho_fleet(self, state: SchedulerState, rho) -> jnp.ndarray:
         n = state.freq.shape[0]
         rho = jnp.asarray(rho, state.freq.dtype)
@@ -321,9 +372,60 @@ class FleetEngine:
             rho = rho[:, None]
         return jnp.broadcast_to(rho, (n, self.cfg.n_tiles))
 
-    def _step_impl(self, state: SchedulerState, rho: jnp.ndarray):
-        prev_events = state.events.sum()
+    @staticmethod
+    def _masked_quantile(sorted_v: jnp.ndarray, cnt, q: float) -> jnp.ndarray:
+        """Linear-interpolated percentile over the first ``cnt`` entries of an
+        ascending-sorted last axis (inactive lanes sort to +inf past them) —
+        numpy's default interpolation, computed with a traced count so mask
+        flips never re-specialise the program."""
+        pos = q / 100.0 * (cnt - 1).astype(sorted_v.dtype)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.ceil(pos).astype(jnp.int32)
+        frac = pos - lo
+        take = lambda i: jnp.take_along_axis(
+            sorted_v, jnp.broadcast_to(i, sorted_v.shape[:-1])[..., None],
+            axis=-1)[..., 0]
+        return take(lo) * (1.0 - frac) + take(hi) * frac
+
+    def _masked_step_telemetry(self, rho, out, prev_events, events, active
+                               ) -> FleetTelemetry:
+        """One step's fleet telemetry reduced over the active lanes only —
+        padded lanes cannot touch the percentiles, `freq_min`,
+        `at_risk_frac` or the event counters."""
+        m = jnp.broadcast_to(active[:, None], out.temp_c.shape)   # [n, tiles]
+        mf = m.reshape(-1)
+        cnt = jnp.maximum(mf.sum(), 1)                 # guard the empty fleet
+        fcnt = cnt.astype(out.temp_c.dtype)
+        temp = out.temp_c.reshape(-1)
+        freq = out.freq.reshape(-1)
+        sorted_t = jnp.sort(jnp.where(mf, temp, jnp.inf))
+        mu = jnp.where(mf, temp, 0.0).sum() / fcnt
+        rtok = rtok_from_rho(rho).reshape(-1)
+        ev_total = jnp.where(active, events, 0).sum()
+        return FleetTelemetry(
+            n_packages=active.sum().astype(jnp.int32),
+            events_total=ev_total,
+            events_step=ev_total - prev_events,
+            temp_p50_c=self._masked_quantile(sorted_t, cnt, 50.0),
+            temp_p99_c=self._masked_quantile(sorted_t, cnt, 99.0),
+            temp_max_c=jnp.where(mf, temp, -jnp.inf).max(),
+            temp_var_c2=(jnp.where(mf, (temp - mu) ** 2, 0.0).sum() / fcnt),
+            freq_mean=jnp.where(mf, freq, 0.0).sum() / fcnt,
+            freq_min=jnp.where(mf, freq, jnp.inf).min(),
+            released_mtps=jnp.where(mf, rtok * freq, 0.0).sum(),
+            throttled_mtps=jnp.where(mf, rtok * (1.0 - freq), 0.0).sum(),
+            at_risk_frac=jnp.where(
+                mf, (freq < self.cfg.straggler_threshold), 0.0).sum() / fcnt,
+        )
+
+    def _step_impl(self, state: SchedulerState, rho: jnp.ndarray,
+                   active=None):
+        prev_events = (state.events.sum() if active is None
+                       else jnp.where(active, state.events, 0).sum())
         state, out = self.backend_impl.update(state, rho)
+        if active is not None:
+            return state, out, self._masked_step_telemetry(
+                rho, out, prev_events, state.events, active)
         rtok = rtok_from_rho(rho)                    # [n_packages, n_tiles]
         telem = FleetTelemetry(
             n_packages=jnp.asarray(state.freq.shape[0], jnp.int32),
@@ -341,9 +443,10 @@ class FleetEngine:
         )
         return state, out, telem
 
-    def _run_impl(self, state: SchedulerState, rho_trace: jnp.ndarray):
+    def _run_impl(self, state: SchedulerState, rho_trace: jnp.ndarray,
+                  active=None):
         def tick(st, rho):
-            st, _, telem = self._step_impl(st, rho)
+            st, _, telem = self._step_impl(st, rho, active)
             return st, telem
         return jax.lax.scan(tick, state, rho_trace)
 
@@ -388,7 +491,8 @@ class FleetEngine:
         return state, (peak, exceed, fsum, comp)
 
     def _reactive_poll_events(self, state0: SchedulerState,
-                              temps: jnp.ndarray) -> jnp.ndarray:
+                              temps: jnp.ndarray,
+                              active=None) -> jnp.ndarray:
         """[T] per-step fresh throttle engagements reconstructed from a
         temperature trace — the reactive_poll event statistic.
 
@@ -410,45 +514,110 @@ class FleetEngine:
             trig = (temp >= fp.t_crit_c) & polled
             cool = (temp <= c.resume_below_c) & polled
             fresh = jnp.any(trig & ~latch, axis=-1)          # [n]
+            if active is not None:
+                fresh = fresh & active
             return (latch | trig) & ~cool, fresh.sum().astype(jnp.int32)
 
         _, ev_step = jax.lax.scan(tick, state0.throttled, (temps, steps))
         return ev_step
 
     def _telemetry_from_traces(self, rho_trace, temps, freqs, prev_events,
-                               state0: SchedulerState) -> FleetTelemetry:
+                               state0: SchedulerState,
+                               active=None) -> FleetTelemetry:
         """[T]-leaved telemetry derived from per-step temperature/frequency
         traces — the telemetry plane of the fused whole-chunk backends.
         Field-for-field identical to stacking `_step_impl`'s records: under
         ``mode="reactive_poll"`` the event plane replays the sensor
         recurrence from ``state0`` (throttle engagements, the §10 baseline
-        statistic); every other mode counts T_crit crossings."""
+        statistic); every other mode counts T_crit crossings.  With an
+        ``active`` lane mask every reduction covers the active lanes only
+        (padded capacity-pool lanes are invisible to the operator)."""
         t, n = temps.shape[0], temps.shape[1]
         flat = lambda x: x.reshape(t, -1)
         if self.cfg.mode == "reactive_poll":
-            ev_step = self._reactive_poll_events(state0, temps)
+            ev_step = self._reactive_poll_events(state0, temps, active)
         else:
             crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)  # [T, n]
+            if active is not None:
+                crossed = crossed & active[None, :]
             ev_step = crossed.sum(axis=-1).astype(jnp.int32)
         rtok = rtok_from_rho(rho_trace)
+        if active is None:
+            return FleetTelemetry(
+                n_packages=jnp.full((t,), n, jnp.int32),
+                events_total=prev_events + jnp.cumsum(ev_step),
+                events_step=ev_step,
+                temp_p50_c=jnp.percentile(flat(temps), 50.0, axis=1),
+                temp_p99_c=jnp.percentile(flat(temps), 99.0, axis=1),
+                temp_max_c=flat(temps).max(axis=1),
+                temp_var_c2=flat(temps).var(axis=1),
+                freq_mean=flat(freqs).mean(axis=1),
+                freq_min=flat(freqs).min(axis=1),
+                released_mtps=flat(rtok * freqs).sum(axis=1),
+                throttled_mtps=flat(rtok * (1.0 - freqs)).sum(axis=1),
+                at_risk_frac=flat(freqs < self.cfg.straggler_threshold
+                                  ).mean(axis=1),
+            )
+        mf = jnp.broadcast_to(active[:, None], temps.shape[1:]).reshape(-1)
+        cnt = jnp.maximum(mf.sum(), 1)
+        fcnt = cnt.astype(temps.dtype)
+        tf, ff = flat(temps), flat(freqs)
+        sorted_t = jnp.sort(jnp.where(mf[None, :], tf, jnp.inf), axis=1)
+        mu = jnp.where(mf, tf, 0.0).sum(axis=1) / fcnt
+        msum = lambda x: jnp.where(mf, x, 0.0).sum(axis=1)
         return FleetTelemetry(
-            n_packages=jnp.full((t,), n, jnp.int32),
+            n_packages=jnp.full((t,), 1, jnp.int32)
+            * active.sum().astype(jnp.int32),
             events_total=prev_events + jnp.cumsum(ev_step),
             events_step=ev_step,
-            temp_p50_c=jnp.percentile(flat(temps), 50.0, axis=1),
-            temp_p99_c=jnp.percentile(flat(temps), 99.0, axis=1),
-            temp_max_c=flat(temps).max(axis=1),
-            temp_var_c2=flat(temps).var(axis=1),
-            freq_mean=flat(freqs).mean(axis=1),
-            freq_min=flat(freqs).min(axis=1),
-            released_mtps=flat(rtok * freqs).sum(axis=1),
-            throttled_mtps=flat(rtok * (1.0 - freqs)).sum(axis=1),
-            at_risk_frac=flat(freqs < self.cfg.straggler_threshold
-                              ).mean(axis=1),
+            temp_p50_c=self._masked_quantile(sorted_t, cnt, 50.0),
+            temp_p99_c=self._masked_quantile(sorted_t, cnt, 99.0),
+            temp_max_c=jnp.where(mf, tf, -jnp.inf).max(axis=1),
+            temp_var_c2=msum((tf - mu[:, None]) ** 2) / fcnt,
+            freq_mean=msum(ff) / fcnt,
+            freq_min=jnp.where(mf, ff, jnp.inf).min(axis=1),
+            released_mtps=msum(flat(rtok * freqs)),
+            throttled_mtps=msum(flat(rtok * (1.0 - freqs))),
+            at_risk_frac=msum(ff < self.cfg.straggler_threshold) / fcnt,
         )
 
-    def _run_block_impl(self, state: SchedulerState, rho_trace: jnp.ndarray):
+    def block_traces(self, state: SchedulerState, rho_trace):
+        """(state', temps [T, n, tiles], freqs [T, n, tiles]) for one chunk —
+        via the backend's fused whole-chunk kernel when it has one, else a
+        scan of `update`.  Trace-safe (NOT jitted here): the control plane
+        (`repro.fleet.service`) composes it with the per-tenant alert
+        reductions inside ITS one jitted flush."""
         if self.backend_impl.run_block is not None:
+            return self.backend_impl.run_block(state, rho_trace)
+
+        def tick(st, rho):
+            st, out = self.backend_impl.update(st, rho)
+            return st, (out.temp_c, out.freq)
+
+        state, (temps, freqs) = jax.lax.scan(tick, state, rho_trace)
+        return state, temps, freqs
+
+    def window_telemetry(self, rho_trace, temps, freqs, prev_events,
+                         state0: SchedulerState,
+                         active=None) -> FleetTelemetry:
+        """Public trace-safe wrapper over the traces→telemetry reduction
+        (see `_telemetry_from_traces`) for callers that already hold the
+        streamed temp/freq traces of a window — returns the [T]-leaved
+        record; `.reduce()` collapses it to one flush record."""
+        return self._telemetry_from_traces(rho_trace, temps, freqs,
+                                           prev_events, state0, active)
+
+    def _run_block_impl(self, state: SchedulerState, rho_trace: jnp.ndarray,
+                        active=None):
+        if active is not None:
+            # masked flush window: one traces pass (kernel or scan) feeds
+            # the active-lane-only reductions
+            prev_events = jnp.where(active, state.events, 0).sum()
+            state0 = state
+            state, temps, freqs = self.block_traces(state, rho_trace)
+            telems = self._telemetry_from_traces(rho_trace, temps, freqs,
+                                                 prev_events, state0, active)
+        elif self.backend_impl.run_block is not None:
             # fused whole-chunk path: one kernel for the T-step block, then
             # the telemetry reductions on its streamed temp/freq traces
             prev_events = state.events.sum()
@@ -461,8 +630,11 @@ class FleetEngine:
             state, telems = self._run_impl(state, rho_trace)
         return state, telems.reduce()
 
-    def _run_chunked_impl(self, state: SchedulerState, chunked: jnp.ndarray):
-        return jax.lax.scan(self._run_block_impl, state, chunked)
+    def _run_chunked_impl(self, state: SchedulerState, chunked: jnp.ndarray,
+                          active=None):
+        return jax.lax.scan(
+            lambda st, ch: self._run_block_impl(st, ch, active),
+            state, chunked)
 
 
 def sequential_step(sched: ThermalScheduler, states: list[SchedulerState],

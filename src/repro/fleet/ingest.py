@@ -18,6 +18,20 @@ each other.  Telemetry is reduced over each K-step chunk in-graph
 (`FleetEngine.run_block`) and fetched with exactly ONE host sync per flush
 interval — `StreamStats.host_syncs` counts them so tests/benches can assert
 the contract (see the 90k-step case in ``benchmarks/bench_fleet.py``).
+
+Ingest contract (what the pieces promise their callers):
+
+  * `chunk_source` never pads: a non-divisible tail is yielded as its own
+    SHORTER chunk, so every step of the trace is executed and counted.
+  * `HintQueue.offer` refuses past capacity (returns False) — back-pressure
+    is the source's problem, never a silent drop.
+  * `stream(..., active=...)` threads a [n_packages] bool lane mask to
+    every `run_block` flush: telemetry covers the active lanes only, while
+    padded capacity-pool lanes keep stepping (the mask is a traced value,
+    so a multi-tenant source can serve a partially occupied fleet with the
+    same compiled program — `repro.fleet.service` is built on this).
+  * `merge_sources` assembles full-capacity chunks from per-tenant lane
+    sources, padding free lanes at a constant idle density.
 """
 from __future__ import annotations
 
@@ -95,11 +109,44 @@ def chunk_source(trace: np.ndarray, flush_every: int) -> Iterator[np.ndarray]:
         yield trace[i:i + flush_every]
 
 
+def merge_sources(sources: dict[int, Iterable[np.ndarray]], capacity: int,
+                  n_tiles: int, pad_rho: float = 1.0
+                  ) -> Iterator[np.ndarray]:
+    """Zip per-lane chunk sources into full-capacity [K, capacity, tiles]
+    chunks — the multi-tenant ingest shape.
+
+    ``sources`` maps lane index → an iterator of [K, tiles] chunks (one
+    tenant feed per attached lane); free lanes idle at ``pad_rho``.  Stops
+    at the SHORTEST source (a tenant hanging up ends the merged stream —
+    re-merge with the survivors to continue) and requires every source to
+    agree on K within each round.
+    """
+    its = {lane: iter(s) for lane, s in sources.items()}
+    if not its:
+        return
+    while True:
+        parts = {}
+        for lane, it in its.items():
+            chunk = next(it, None)
+            if chunk is None:
+                return
+            parts[lane] = np.asarray(chunk, np.float32)
+        ks = {p.shape[0] for p in parts.values()}
+        if len(ks) != 1:
+            raise ValueError(f"per-lane sources disagree on chunk length: "
+                             f"{sorted(ks)}")
+        out = np.full((ks.pop(), capacity, n_tiles), pad_rho, np.float32)
+        for lane, p in parts.items():
+            out[:, lane, :] = p
+        yield out
+
+
 def stream(engine: FleetEngine, state: SchedulerState,
            source: Iterable[np.ndarray], *,
            lookahead_chunks: int = 2,
            on_flush: Callable[[int, dict], None] | None = None,
            keep_telemetry: bool = True,
+           active: np.ndarray | None = None,
            ) -> tuple[SchedulerState, list[dict], StreamStats]:
     """Drive the fleet through a streamed density trace.
 
@@ -107,7 +154,9 @@ def stream(engine: FleetEngine, state: SchedulerState,
     interval; see `chunk_source`).  Returns (final state, one telemetry dict
     per flush, stats).  ``lookahead_chunks`` bounds the hint queue — with the
     default 2 the loop is double-buffered: one chunk in flight on device,
-    one uploaded ahead.
+    one uploaded ahead.  ``active`` (optional [n_packages] bool mask) limits
+    every flush's telemetry to the active lanes — the partially-occupied
+    capacity-pool case (see `FleetEngine`'s mask contract).
     """
     q = HintQueue(lookahead_chunks)
     it = iter(source)
@@ -130,7 +179,8 @@ def stream(engine: FleetEngine, state: SchedulerState,
     flushed: list[dict] = []
     while len(q):
         chunk = q.take()
-        state, telem = engine.run_block(state, chunk)   # async dispatch
+        state, telem = engine.run_block(state, chunk,   # async dispatch
+                                        active=active)
         stats.steps += int(chunk.shape[0])
         pump()              # upload the NEXT chunk(s) while this one computes
         d = telem.as_dict()                             # the ONE host sync

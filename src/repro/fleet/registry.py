@@ -1,0 +1,252 @@
+"""Fleet membership registry — bucketed capacity pools for dynamic fleets.
+
+The control plane (`repro.fleet.service`) must attach and detach packages
+without ever recompiling the engine's jitted step.  JAX retraces on SHAPE
+changes but not on VALUE changes, so the registry quantises fleet capacity
+to powers of two ("buckets"): the engine always steps a `[capacity, tiles]`
+state, membership lives in a traced `[capacity]` bool mask, and the only
+time a new program is compiled is when occupancy crosses a bucket boundary
+— at most O(log max_fleet) distinct programs over the service lifetime, all
+warmed eagerly by `FleetService.warmup`.
+
+The registry is plain host-side bookkeeping (numpy only, no jax): it maps
+package ids → lanes, tracks free lanes, and owns the per-tenant alert
+thresholds as dense `[max_tenants]` arrays (inactive slots parked at +inf /
+NaN-free sentinels) so `repro.fleet.alerts.tenant_window_stats` can consume
+them as traced operands — editing a tenant's t_crit therefore never
+recompiles either.
+
+Capacity transitions:
+
+  * grow  — occupancy exceeds capacity: next bucket is
+    `max(min_capacity, next_pow2(n_active))`; existing lanes keep their
+    indices (state grows in place, old lanes copied to the front).
+  * shrink — occupancy falls to ≤ capacity/4 (hysteresis: one bucket of
+    slack so attach/detach churn at a boundary doesn't thrash): the
+    registry emits a COMPACTION PERMUTATION that gathers the surviving
+    lanes to the front of the smaller state.
+
+Both transition kinds are surfaced as `CapacityPlan` records so the service
+can apply the matching jitted surgery op.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["FleetRegistry", "Tenant", "CapacityPlan", "next_pow2"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ n (and ≥ 1)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class Tenant:
+    """One OEM / operator slot: a named group of packages sharing alert
+    thresholds.  `slot` indexes the dense threshold arrays handed to the
+    in-graph alert reductions."""
+    name: str
+    slot: int
+    t_crit_c: float = float("inf")
+    at_risk_limit: float = float("inf")
+    drift_budget_nm: float = float("inf")
+    packages: set = field(default_factory=set)
+
+
+@dataclass(frozen=True)
+class CapacityPlan:
+    """A capacity transition the service must apply to the engine state.
+
+    kind:
+      "none"   — membership changed but capacity didn't; no surgery.
+      "grow"   — state grows old_capacity → new_capacity; surviving lanes
+                 keep their indices (copy-to-front of a fresh template).
+      "shrink" — state shrinks via `perm`: new_state[i] = old_state[perm[i]]
+                 for i < new_capacity.  `perm` has length new_capacity and
+                 lists the surviving old lanes in their new order.
+    """
+    kind: str
+    old_capacity: int
+    new_capacity: int
+    perm: tuple = ()
+
+
+class FleetRegistry:
+    """Host-side package→lane map with power-of-two capacity pools.
+
+    Pure bookkeeping: never touches jax.  The service reads
+    `active_mask()` / `tenant_lane_ids()` / `threshold_arrays()` each
+    flush and feeds them to the jitted graph as traced operands.
+    """
+
+    def __init__(self, min_capacity: int = 4, max_tenants: int = 8):
+        if min_capacity < 1 or next_pow2(min_capacity) != min_capacity:
+            raise ValueError(f"min_capacity must be a power of two ≥ 1, "
+                             f"got {min_capacity}")
+        self.min_capacity = int(min_capacity)
+        self.max_tenants = int(max_tenants)
+        self.capacity = self.min_capacity
+        self._lane_of: dict[str, int] = {}      # package id -> lane
+        self._tenant_of: dict[str, str] = {}    # package id -> tenant name
+        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self._tenants: dict[str, Tenant] = {}
+
+    # -- tenants -----------------------------------------------------------
+    def tenant(self, name: str) -> Tenant:
+        """Get or create the tenant slot for `name`."""
+        t = self._tenants.get(name)
+        if t is None:
+            used = {t.slot for t in self._tenants.values()}
+            free = [s for s in range(self.max_tenants) if s not in used]
+            if not free:
+                raise ValueError(f"all {self.max_tenants} tenant slots in "
+                                 f"use; detach a tenant first")
+            t = Tenant(name=name, slot=free[0])
+            self._tenants[name] = t
+        return t
+
+    def set_thresholds(self, name: str, *, t_crit_c: float | None = None,
+                       at_risk_limit: float | None = None,
+                       drift_budget_nm: float | None = None) -> Tenant:
+        t = self.tenant(name)
+        if t_crit_c is not None:
+            t.t_crit_c = float(t_crit_c)
+        if at_risk_limit is not None:
+            t.at_risk_limit = float(at_risk_limit)
+        if drift_budget_nm is not None:
+            t.drift_budget_nm = float(drift_budget_nm)
+        return t
+
+    @property
+    def tenants(self) -> dict[str, Tenant]:
+        return dict(self._tenants)
+
+    # -- membership --------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self._lane_of)
+
+    @property
+    def packages(self) -> dict[str, int]:
+        """package id -> lane, a copy."""
+        return dict(self._lane_of)
+
+    def lane(self, package: str) -> int:
+        return self._lane_of[package]
+
+    def attach(self, package: str, tenant: str = "default"
+               ) -> tuple[int, CapacityPlan]:
+        """Attach a package; returns (lane, plan).  Apply the plan's state
+        surgery FIRST, then scatter the fresh lane."""
+        if package in self._lane_of:
+            raise ValueError(f"package {package!r} already attached "
+                             f"(lane {self._lane_of[package]})")
+        self.tenant(tenant)
+        plan = self._plan(self.n_active + 1)
+        self._apply_plan(plan)
+        lane = self._free.pop()
+        self._lane_of[package] = lane
+        self._tenant_of[package] = tenant
+        self._tenants[tenant].packages.add(package)
+        return lane, plan
+
+    def detach(self, package: str) -> tuple[int, CapacityPlan]:
+        """Detach a package; returns (freed lane, plan).  A shrink plan's
+        permutation already accounts for the departed lane."""
+        if package not in self._lane_of:
+            raise ValueError(f"package {package!r} is not attached")
+        lane = self._lane_of.pop(package)
+        tname = self._tenant_of.pop(package)
+        self._tenants[tname].packages.discard(package)
+        self._free.append(lane)
+        plan = self._plan(self.n_active)
+        self._apply_plan(plan)
+        return lane, plan
+
+    # -- capacity ----------------------------------------------------------
+    def _plan(self, n_active: int) -> CapacityPlan:
+        want = max(self.min_capacity, next_pow2(max(n_active, 1)))
+        if want > self.capacity:
+            return CapacityPlan("grow", self.capacity, want)
+        # shrink hysteresis: only when occupancy drops to ≤ capacity/4, and
+        # keep one spare bucket (2·want) so churn at the boundary can't
+        # thrash between programs
+        if n_active <= self.capacity // 4:
+            new = max(self.min_capacity, 2 * next_pow2(max(n_active, 1)))
+            if new < self.capacity:
+                # compaction permutation: surviving lanes to the front, in
+                # ascending old-lane order; pad with (dropped) free lanes
+                survivors = sorted(self._lane_of.values())
+                pad = [l for l in range(self.capacity)
+                       if l not in set(survivors)][: new - len(survivors)]
+                return CapacityPlan("shrink", self.capacity, new,
+                                    tuple(survivors + pad))
+        return CapacityPlan("none", self.capacity, self.capacity)
+
+    def _apply_plan(self, plan: CapacityPlan) -> None:
+        if plan.kind == "grow":
+            self._free = ([l for l in range(plan.new_capacity - 1,
+                                            plan.old_capacity - 1, -1)]
+                          + self._free)
+            self.capacity = plan.new_capacity
+        elif plan.kind == "shrink":
+            remap = {old: new for new, old in enumerate(plan.perm)}
+            self._lane_of = {p: remap[l] for p, l in self._lane_of.items()}
+            used = set(self._lane_of.values())
+            self._free = [l for l in range(plan.new_capacity - 1, -1, -1)
+                          if l not in used]
+            self.capacity = plan.new_capacity
+
+    # -- traced operands ---------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        """[capacity] bool — True on attached lanes."""
+        m = np.zeros(self.capacity, bool)
+        for lane in self._lane_of.values():
+            m[lane] = True
+        return m
+
+    def tenant_lane_ids(self) -> np.ndarray:
+        """[capacity] int32 — tenant slot per lane; free lanes get the dump
+        slot `max_tenants` (segment reductions route them to a discard
+        segment)."""
+        ids = np.full(self.capacity, self.max_tenants, np.int32)
+        for pkg, lane in self._lane_of.items():
+            ids[lane] = self._tenants[self._tenant_of[pkg]].slot
+        return ids
+
+    def threshold_arrays(self) -> dict[str, np.ndarray]:
+        """Dense [max_tenants] float32 threshold arrays, +inf on empty
+        slots — traced operands, so editing them never recompiles."""
+        inf = np.full(self.max_tenants, np.inf, np.float32)
+        t_crit, at_risk, drift = inf.copy(), inf.copy(), inf.copy()
+        for t in self._tenants.values():
+            t_crit[t.slot] = t.t_crit_c
+            at_risk[t.slot] = t.at_risk_limit
+            drift[t.slot] = t.drift_budget_nm
+        return {"t_crit_c": t_crit, "at_risk_limit": at_risk,
+                "drift_budget_nm": drift}
+
+    def slot_names(self) -> list[str | None]:
+        """[max_tenants] tenant name per slot (None = empty)."""
+        names: list[str | None] = [None] * self.max_tenants
+        for t in self._tenants.values():
+            names[t.slot] = t.name
+        return names
+
+    def describe(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "n_active": self.n_active,
+            "packages": {p: {"lane": l, "tenant": self._tenant_of[p]}
+                         for p, l in sorted(self._lane_of.items())},
+            "tenants": {t.name: {"slot": t.slot,
+                                 "t_crit_c": t.t_crit_c,
+                                 "at_risk_limit": t.at_risk_limit,
+                                 "drift_budget_nm": t.drift_budget_nm,
+                                 "packages": sorted(t.packages)}
+                        for t in self._tenants.values()},
+        }

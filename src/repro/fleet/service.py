@@ -1,0 +1,496 @@
+"""Fleet control plane — a resident multi-tenant serving service.
+
+`FleetService` keeps a `FleetEngine` resident and serves a DYNAMIC fleet:
+packages attach and detach at runtime (OEM fleets come and go), every
+tenant gets its own alert thresholds, and an operator can watch and steer
+the whole thing over a plain HTTP/JSON API — with ZERO recompilations of
+the jitted step after warmup.
+
+How the zero-recompile guarantee is put together (the whole design keys
+off what does and does not retrace a `jax.jit` program):
+
+  * **Capacity pools** (`repro.fleet.registry.FleetRegistry`): fleet state
+    is padded to power-of-two capacity buckets, so the engine only ever
+    sees O(log max_fleet) distinct shapes, all compiled during `warmup`.
+  * **Membership is a traced mask**: attach/detach flips bits in a
+    `[capacity]` bool mask (`FleetEngine`'s ``active`` argument) — a VALUE
+    change, never a shape change.  Padded lanes still step (lockstep
+    execution is what keeps one program) but the engine's masked telemetry
+    and the per-tenant segment reductions cannot see them.
+  * **State surgery is jitted too**: scattering a fresh lane in
+    (`_attach_op`, traced lane index), growing to the next bucket
+    (`_grow_op`, copy-to-front of a cached fresh template) and compacting
+    into a smaller bucket (`_shrink_op`, traced gather permutation) are
+    ordinary jitted programs, one per capacity (pair), warmed like the
+    rest.
+  * **Thresholds are traced operands**: per-tenant t_crit / at-risk /
+    CPO-drift budgets live in dense `[max_tenants]` arrays
+    (`FleetRegistry.threshold_arrays`) consumed in-graph by
+    `repro.fleet.alerts.tenant_window_stats` — editing a tenant's
+    threshold over POST /thresholds changes array VALUES only.
+
+Each `tick()` is ONE flush: assemble the next `[K, capacity, tiles]`
+density chunk (per-package synthetic workloads via
+`repro.core.workload.make_trace`, padded lanes idle at ``pad_rho``), run
+one jitted flush program (engine `block_traces` → masked window telemetry
+→ per-tenant stats/alarms), fetch everything in a SINGLE host sync, append
+a replayable record to the `TelemetryLog`, and push alarm edges through
+the `AlertEngine` sinks.  `replay()` re-drives a recorded JSONL stream
+through the existing `HintQueue` ingest path and returns the reproduced
+telemetry.
+
+The HTTP surface (stdlib `http.server`, no new dependencies) is documented
+operator-facing in docs/serving.md:
+
+    GET  /healthz /telemetry /fleet /alerts
+    POST /attach /detach /thresholds /replay /shutdown
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+from repro.core.scheduler import SchedulerConfig, SchedulerState
+from repro.core.telemetry import TelemetryLog
+from repro.core.workload import KINDS, make_trace
+from repro.fleet.alerts import AlertEngine, tenant_window_stats
+from repro.fleet.engine import FleetEngine
+from repro.fleet.ingest import HintQueue
+from repro.fleet.registry import FleetRegistry
+
+__all__ = ["FleetService", "serve_http"]
+
+
+class FleetService:
+    """Resident control plane over one `FleetEngine`.
+
+    All public methods are thread-safe (one re-entrant lock serialises
+    membership surgery, threshold edits and flushes against the HTTP
+    handler threads).  The engine state is owned by the service — callers
+    never touch it directly.
+    """
+
+    def __init__(self, cfg: SchedulerConfig | None = None,
+                 fp: Fingerprint = FINGERPRINT,
+                 backend: str = "broadcast", *,
+                 min_capacity: int = 4, max_tenants: int = 8,
+                 flush_every: int = 50, pad_rho: float = 1.0,
+                 sinks=(), log_capacity: int = 4096, seed: int = 0):
+        self.engine = FleetEngine(cfg, fp, backend=backend)
+        self.cfg, self.fp = self.engine.cfg, fp
+        self.registry = FleetRegistry(min_capacity=min_capacity,
+                                      max_tenants=max_tenants)
+        self.alerts = AlertEngine(sinks=sinks)
+        self.log = TelemetryLog(capacity=log_capacity)
+        self.flush_every = int(flush_every)
+        self.pad_rho = float(pad_rho)
+        self.lock = threading.RLock()
+        self.flushes = 0
+        self.steps = 0            # host mirror of the fleet clock — keeps
+        #                           tick() at exactly one device sync
+        self._seed = seed
+        self._kind_of: dict[str, str] = {}      # package -> workload kind
+        self._pkg_key: dict[str, int] = {}      # package -> key counter base
+        self._next_key = 0
+        self._attached_since_flush: list[int] = []
+        self._templates: dict[int, SchedulerState] = {}
+        self._shutdown = threading.Event()
+        dn = (0,) if self.engine.donate_state else ()
+        self._flush_jit = jax.jit(self._flush_impl, donate_argnums=dn)
+        self._attach_jit = jax.jit(self._attach_op, donate_argnums=dn)
+        self._grow_jit = jax.jit(self._grow_op, donate_argnums=dn)
+        self._shrink_jit = jax.jit(self._shrink_op, donate_argnums=dn)
+        # one persistent jit for workload generation: eager `make_trace`
+        # rebuilds its lax.scan closure every call, which recompiles every
+        # tick — under ONE jit object the (kind, shape) programs cache
+        self._make_trace = jax.jit(make_trace, static_argnums=(1, 2, 3))
+        self.state = self._fresh(self.registry.capacity)
+
+    # ------------------------------------------------------------ templates
+    def _fresh(self, capacity: int) -> SchedulerState:
+        # strip weak types: init's eager-built leaves are weak-typed while
+        # every jit output is strong-typed, and a mixed-provenance state
+        # would retrace the surgery jits (breaking the zero-recompile
+        # contract) even though shapes and dtypes match
+        return jax.tree_util.tree_map(lambda a: a.astype(a.dtype),
+                                      self.engine.init(capacity))
+
+    def _template(self, capacity: int) -> SchedulerState:
+        """Cached fresh state per capacity — the scatter source for
+        attaches and the target skeleton for grows.  Cached so steady-state
+        operation re-runs no eager init ops (the zero-recompile test
+        counts every backend compile after warmup)."""
+        tpl = self._templates.get(capacity)
+        if tpl is None:
+            tpl = self._templates[capacity] = self._fresh(capacity)
+        return tpl
+
+    # -------------------------------------------------------- state surgery
+    # All three ops discriminate per-lane leaves by their leading capacity
+    # axis (in the broadcast layout every ndim≥1 leaf is per-lane; scalars
+    # are the shared fleet clock and ring pointer, which surgery must NOT
+    # reset — an attached lane joins the running fleet's clock).
+    @staticmethod
+    def _attach_op(state, template, lane):
+        cap = state.freq.shape[0]
+
+        def scatter(a, b):
+            if getattr(a, "ndim", 0) >= 1 and a.shape[0] == cap:
+                return a.at[lane].set(b[lane])
+            return a
+        return jax.tree_util.tree_map(scatter, state, template)
+
+    @staticmethod
+    def _grow_op(state, template):
+        old = state.freq.shape[0]
+
+        def grow(a, b):
+            if getattr(a, "ndim", 0) >= 1 and b.shape[0] != a.shape[0]:
+                return b.at[:old].set(a)
+            return a
+        return jax.tree_util.tree_map(grow, state, template)
+
+    @staticmethod
+    def _shrink_op(state, perm):
+        old = state.freq.shape[0]
+
+        def take(a):
+            if getattr(a, "ndim", 0) >= 1 and a.shape[0] == old:
+                return a[perm]
+            return a
+        return jax.tree_util.tree_map(take, state)
+
+    def _apply_plan(self, plan) -> None:
+        if plan.kind == "grow":
+            self.state = self._grow_jit(self.state,
+                                        self._template(plan.new_capacity))
+        elif plan.kind == "shrink":
+            perm = jnp.asarray(np.asarray(plan.perm, np.int32))
+            self.state = self._shrink_jit(self.state, perm)
+
+    # ------------------------------------------------------------ membership
+    def attach(self, package: str, tenant: str = "default",
+               kind: str = "inference") -> dict:
+        """Attach a package: bucket surgery if occupancy crosses a boundary,
+        then scatter a fresh lane state in (jitted, traced lane index)."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown workload kind {kind!r}; "
+                             f"want one of {KINDS}")
+        with self.lock:
+            lane, plan = self.registry.attach(package, tenant)
+            self._apply_plan(plan)
+            self.state = self._attach_jit(
+                self.state, self._template(self.registry.capacity),
+                jnp.asarray(lane, jnp.int32))
+            self._kind_of[package] = kind
+            self._pkg_key[package] = self._next_key
+            self._next_key += 1
+            self._attached_since_flush.append(lane)
+            return {"package": package, "tenant": tenant, "kind": kind,
+                    "lane": lane, "capacity": self.registry.capacity,
+                    "plan": plan.kind}
+
+    def detach(self, package: str) -> dict:
+        with self.lock:
+            lane, plan = self.registry.detach(package)
+            self._apply_plan(plan)
+            self._kind_of.pop(package, None)
+            self._pkg_key.pop(package, None)
+            if plan.kind == "shrink":
+                remap = {old: new for new, old in enumerate(plan.perm)}
+                self._attached_since_flush = [
+                    remap[l] for l in self._attached_since_flush
+                    if l in remap]
+            else:
+                self._attached_since_flush = [
+                    l for l in self._attached_since_flush if l != lane]
+            return {"package": package, "lane": lane,
+                    "capacity": self.registry.capacity, "plan": plan.kind}
+
+    def set_thresholds(self, tenant: str, **kw) -> dict:
+        with self.lock:
+            t = self.registry.set_thresholds(tenant, **kw)
+            return {"tenant": t.name, "t_crit_c": t.t_crit_c,
+                    "at_risk_limit": t.at_risk_limit,
+                    "drift_budget_nm": t.drift_budget_nm}
+
+    # ----------------------------------------------------------------- flush
+    def _flush_impl(self, state, chunk, active, tenant_ids, thresholds):
+        """ONE jitted program per (capacity, chunk-length): advance the
+        window, reduce fleet telemetry and per-tenant stats/alarms — the
+        caller fetches the whole result in a single device_get."""
+        ev0_lane = state.events
+        ev0 = jnp.where(active, state.events, 0).sum()
+        state0 = state
+        state, temps, freqs = self.engine.block_traces(state, chunk)
+        telem = self.engine.window_telemetry(
+            chunk, temps, freqs, ev0, state0, active).reduce()
+        stats, alarms = tenant_window_stats(
+            temps, freqs, ev0_lane, state.events, active, tenant_ids,
+            self.registry.max_tenants, self.cfg.straggler_threshold,
+            self.fp.kappa_to_nm_per_c, thresholds)
+        return state, telem, stats, alarms
+
+    def _chunk(self, n_steps: int) -> np.ndarray:
+        """Assemble the next [n_steps, capacity, tiles] density chunk from
+        each attached package's synthetic workload; free lanes idle at
+        ``pad_rho`` (they step, but the mask keeps them out of telemetry)."""
+        cap, tiles = self.registry.capacity, self.cfg.n_tiles
+        chunk = np.full((n_steps, cap, tiles), self.pad_rho, np.float32)
+        for pkg, lane in self.registry.packages.items():
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self._seed + self._pkg_key[pkg]),
+                self.flushes)
+            chunk[:, lane, :] = np.asarray(self._make_trace(
+                key, n_steps, self._kind_of[pkg], tiles))
+        return chunk
+
+    def tick(self, chunk=None) -> dict | None:
+        """One flush: step the fleet `flush_every` steps (or an explicit
+        [K, capacity, tiles] chunk), sync ONCE, record, and run alerts.
+        Returns the flush record (None when the fleet is empty)."""
+        with self.lock:
+            if self.registry.n_active == 0 and chunk is None:
+                return None
+            if chunk is None:
+                chunk = self._chunk(self.flush_every)
+            chunk = np.asarray(chunk, np.float32)
+            cap = self.registry.capacity
+            if chunk.ndim != 3 or chunk.shape[1:] != (cap, self.cfg.n_tiles):
+                raise ValueError(
+                    f"chunk must be [K, {cap}, {self.cfg.n_tiles}], "
+                    f"got {chunk.shape}")
+            step0 = self.steps
+            active = jnp.asarray(self.registry.active_mask())
+            ids = jnp.asarray(self.registry.tenant_lane_ids())
+            th = {k: jnp.asarray(v)
+                  for k, v in self.registry.threshold_arrays().items()}
+            self.state, telem, stats, alarms = self._flush_jit(
+                self.state, jnp.asarray(chunk), active, ids, th)
+            # the single host sync of the flush
+            telem_h, stats_h, alarms_h = jax.device_get(
+                (telem, stats, alarms))
+            names = self.registry.slot_names()
+            fired = self.alerts.process(
+                flush=self.flushes, step=step0, slot_names=names,
+                stats=stats_h._asdict(), alarms=alarms_h,
+                thresholds=self.registry.threshold_arrays())
+            # coerce numpy leaves to plain python here — TelemetryLog's
+            # _jsonable does not recurse into the nested dicts
+            tdict = {k: (int(v) if k == "n_packages" else float(v))
+                     for k, v in telem_h._asdict().items()}
+            sdict = stats_h._asdict()
+            record = {
+                "kind": "flush", "flush": self.flushes,
+                "capacity": cap,
+                "active": self.registry.active_mask().astype(int).tolist(),
+                "attached": [int(l) for l in self._attached_since_flush],
+                "telemetry": tdict,
+                "tenants": {
+                    names[s]: {k: (int(v[s]) if k in ("n_lanes", "events")
+                                   else float(v[s]))
+                               for k, v in sdict.items()}
+                    for s in range(self.registry.max_tenants)
+                    if names[s] is not None and sdict["n_lanes"][s] > 0},
+                "alerts": fired,
+                "rho": chunk.tolist(),
+            }
+            self.log.record(step0, **record)
+            self._attached_since_flush = []
+            self.flushes += 1
+            self.steps += chunk.shape[0]
+            return record
+
+    # ---------------------------------------------------------------- warmup
+    def warmup(self, max_packages: int) -> int:
+        """Pre-compile every program steady-state operation can need up to
+        ``max_packages`` occupancy: per-capacity flush, attach scatter,
+        grow and shrink surgery, templates, and one workload trace per
+        kind.  After this, attach/detach/tick cycles within the warmed
+        range trigger ZERO XLA compiles (asserted in
+        tests/test_fleet_service.py via `jax.monitoring`)."""
+        from repro.fleet.registry import next_pow2
+        with self.lock:
+            caps = []
+            c = self.registry.min_capacity
+            top = max(self.registry.min_capacity,
+                      next_pow2(max_packages))
+            while c <= top:
+                caps.append(c)
+                c *= 2
+            tiles = self.cfg.n_tiles
+            for kind in KINDS:             # compile the workload generators
+                self._make_trace(
+                    jax.random.fold_in(jax.random.PRNGKey(0), 0),
+                    self.flush_every, kind, tiles)
+            zero_th = {k: jnp.asarray(v) for k, v in
+                       self.registry.threshold_arrays().items()}
+            for cap in caps:
+                tpl = self._template(cap)
+                st = self._fresh(cap)
+                st = self._attach_jit(st, tpl, jnp.asarray(0, jnp.int32))
+                chunk = jnp.full((self.flush_every, cap, tiles),
+                                 self.pad_rho, jnp.float32)
+                active = jnp.asarray(np.ones(cap, bool))
+                ids = jnp.asarray(np.zeros(cap, np.int32))
+                st, *_ = self._flush_jit(st, chunk, active, ids, zero_th)
+            for small, big in zip(caps, caps[1:]):
+                st = self._grow_jit(self._fresh(small), self._template(big))
+                perm = jnp.asarray(np.arange(small, dtype=np.int32))
+                self._shrink_jit(st, perm)
+            return len(caps)
+
+    # ---------------------------------------------------------------- replay
+    def replay(self, path: str, atol: float = 0.0) -> list[dict]:
+        """Re-drive a recorded telemetry stream (`TelemetryLog.dump_jsonl`
+        of flush records) through the HintQueue ingest path against a fresh
+        fleet, and return the reproduced flush records.
+
+        The recording must keep ONE capacity throughout (capacity changes
+        re-bucket lanes; replaying those would need the full surgery
+        history) — a mixed recording raises ValueError.  Fresh attaches
+        are reproduced by scattering template lanes exactly where the
+        recording did, so the replayed telemetry matches the original to
+        float tolerance (gated ≤1e-5 in tests)."""
+        rows = []
+        with open(path) as f:
+            for line in f:
+                row = json.loads(line)
+                if row.get("kind") == "flush":
+                    rows.append(row)
+        if not rows:
+            raise ValueError(f"no flush records in {path}")
+        # TelemetryLog's JSON coercion floats scalar ints — re-int them
+        caps = {int(r["capacity"]) for r in rows}
+        if len(caps) != 1:
+            raise ValueError(
+                f"replay needs a fixed-capacity recording, got capacities "
+                f"{sorted(caps)}; re-record without bucket transitions")
+        cap = caps.pop()
+        eng = self.engine
+        state = self._fresh(cap)
+        tpl = self._template(cap)
+        queue = HintQueue(capacity=2)
+        out = []
+        for row in rows:
+            for lane in row["attached"]:
+                state = self._attach_jit(state, tpl,
+                                         jnp.asarray(int(lane), jnp.int32))
+            active = jnp.asarray(np.asarray(row["active"], bool))
+            queue.offer(np.asarray(row["rho"], np.float32))
+            chunk = queue.take()
+            state, telem = eng.run_block(state, chunk, active=active)
+            out.append({"flush": row["flush"],
+                        "telemetry": telem.as_dict()})
+        return out
+
+    # ----------------------------------------------------------------- intro
+    def snapshot(self, last: int = 1) -> dict:
+        with self.lock:
+            recs = self.log.rows()[-last:]
+            return {"flushes": self.flushes,
+                    "capacity": self.registry.capacity,
+                    "n_active": self.registry.n_active,
+                    "records": [{k: v for k, v in r.items() if k != "rho"}
+                                for r in recs]}
+
+    def shutdown(self) -> None:
+        self._shutdown.set()
+
+    @property
+    def shutting_down(self) -> bool:
+        return self._shutdown.is_set()
+
+
+# ------------------------------------------------------------------- HTTP
+class _Handler(BaseHTTPRequestHandler):
+    """JSON over stdlib http.server; the service reference rides on the
+    server object.  Errors map to 4xx with a JSON body — the serving loop
+    itself can never be crashed from the API."""
+
+    server_version = "FleetService/1.0"
+
+    def log_message(self, fmt, *args):      # silence per-request stderr spam
+        pass
+
+    def _send(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _body(self) -> dict:
+        n = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(n) if n else b""
+        return json.loads(raw) if raw else {}
+
+    def do_GET(self):          # noqa: N802 — http.server API
+        svc: FleetService = self.server.service
+        path, _, query = self.path.partition("?")
+        if path == "/healthz":
+            self._send(200, {"ok": True, "flushes": svc.flushes,
+                             "capacity": svc.registry.capacity,
+                             "n_active": svc.registry.n_active})
+        elif path == "/telemetry":
+            last = 1
+            for part in query.split("&"):
+                if part.startswith("last="):
+                    last = max(1, int(part[5:]))
+            self._send(200, svc.snapshot(last=last))
+        elif path == "/fleet":
+            with svc.lock:
+                self._send(200, svc.registry.describe())
+        elif path == "/alerts":
+            with svc.lock:
+                self._send(200, {"alerts": list(svc.alerts.history)})
+        else:
+            self._send(404, {"error": f"unknown path {path!r}"})
+
+    def do_POST(self):         # noqa: N802 — http.server API
+        svc: FleetService = self.server.service
+        try:
+            body = self._body()
+            if self.path == "/attach":
+                self._send(200, svc.attach(
+                    body["package"], body.get("tenant", "default"),
+                    body.get("kind", "inference")))
+            elif self.path == "/detach":
+                self._send(200, svc.detach(body["package"]))
+            elif self.path == "/thresholds":
+                tenant = body.pop("tenant")
+                allowed = {"t_crit_c", "at_risk_limit", "drift_budget_nm"}
+                bad = set(body) - allowed
+                if bad:
+                    raise ValueError(f"unknown threshold field(s) "
+                                     f"{sorted(bad)}; want {sorted(allowed)}")
+                self._send(200, svc.set_thresholds(tenant, **body))
+            elif self.path == "/replay":
+                self._send(200, {"replayed": svc.replay(body["path"])})
+            elif self.path == "/shutdown":
+                svc.shutdown()
+                self._send(200, {"ok": True})
+            else:
+                self._send(404, {"error": f"unknown path {self.path!r}"})
+        except (KeyError, ValueError, FileNotFoundError) as e:
+            self._send(400, {"error": f"{type(e).__name__}: {e}"})
+
+
+def serve_http(service: FleetService, host: str = "127.0.0.1",
+               port: int = 0) -> tuple[ThreadingHTTPServer, threading.Thread]:
+    """Start the control/telemetry API in a daemon thread; returns the
+    server (``server.server_address[1]`` is the bound port — port 0 gets
+    an ephemeral one, the test path) and its thread.  Call
+    ``server.shutdown()`` to stop."""
+    server = ThreadingHTTPServer((host, port), _Handler)
+    server.service = service
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    return server, thread

@@ -22,8 +22,24 @@ entirely in VMEM:
     telemetry plane reduces them outside, in the same jitted program) plus
     the final ring/thermal state.
 
-The caller (`repro.fleet.backends.fused`) normalises the ring to age-order
-(ptr = 0) before the call and rebuilds the scheduler-state pytree after.
+Caller contract (`repro.fleet.backends.fused` / `sharded_fused`):
+
+  * the ring is normalised to age-order (ptr = 0) before the call and the
+    scheduler-state pytree is rebuilt from the kernel outputs after — the
+    kernel's flat VMEM state never leaks upward, so `update()`-level code
+    (and the control plane's lane surgery) sees one state layout across
+    all five backends;
+  * heterogeneous per-package physics (`het` rows: pole constants, η,
+    t_crit, poll periods drawn per package) enter as [packages]-wide
+    planes broadcast over the sublane axis — resident in VMEM for the
+    whole block, so per-package variation costs no extra HBM traffic;
+  * outputs are fresh buffers: with donation enabled the inputs are
+    consumed, and callers must rebind the returned state (the engine
+    enforces this — see `core/scheduler.py`'s state contract);
+  * a non-divisible trace tail is the CALLER's problem: `run_chunked` /
+    `stream()` hand the tail in as its own shorter chunk (separate flush
+    window), never padded into this kernel's time grid.
+
 Interpret mode is the off-TPU fallback, verified against the pure-JAX
 engine to ≤1e-5 (tests/test_fleet_fused.py).
 """

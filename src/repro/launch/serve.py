@@ -32,6 +32,17 @@ heterogeneous trials (per-trial Rth/τ/η/polling draws in the fleet state)
 paired baseline/V24 through the selected ``--fleet-backend``, reporting the
 peak-temperature distributions, σ tightening and the §3.4 guard-band
 margins derived from them.
+
+``--serve`` starts the RESIDENT control plane (`repro.fleet.service`)
+instead of the wave loop: a `FleetService` with ``--fleet`` packages
+attached, warmed up across its capacity buckets, ticking one flush per
+``--flush-every`` steps while the HTTP operator API (attach/detach/
+thresholds/telemetry — see docs/serving.md) listens on ``--port``.  Runs
+until POST /shutdown (or ``--serve-flushes`` flushes in scripted runs).
+
+The wave loop itself always runs on a `FleetEngine` (n = ``--fleet``,
+minimum 1): one batched jitted step advances every package's scheduler
+between decode waves, and this host serves package 0.
 """
 from __future__ import annotations
 
@@ -45,7 +56,7 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeConfig
 from repro.core.density import rho_v24
-from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+from repro.core.scheduler import SchedulerConfig
 from repro.fleet import (FleetEngine, available_backends, chunk_source,
                          stream)
 from repro.launch import steps as S
@@ -125,6 +136,44 @@ def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
             "flushes": stats.flushes, "pkg_steps_per_s": rate}
 
 
+def _serve_resident(args, sched_cfg: SchedulerConfig):
+    """--serve: the resident multi-tenant control plane (docs/serving.md)."""
+    from repro.fleet.service import FleetService, serve_http
+    svc = FleetService(sched_cfg, backend=args.fleet_backend,
+                       min_capacity=4, flush_every=args.flush_every,
+                       seed=args.seed)
+    n0 = max(args.fleet, 1)
+    buckets = svc.warmup(max_packages=max(2 * n0, 8))
+    print(f"[serve] warmed {buckets} capacity buckets "
+          f"(zero recompiles from here)")
+    for i in range(n0):
+        svc.attach(f"pkg{i}", tenant="default", kind="inference")
+    server, _ = serve_http(svc, host=args.host, port=args.port)
+    host, port = server.server_address[:2]
+    print(f"[serve] control plane on http://{host}:{port} — "
+          f"GET /healthz /telemetry /fleet /alerts, "
+          f"POST /attach /detach /thresholds /replay /shutdown")
+    flushes = 0
+    try:
+        while not svc.shutting_down and (args.serve_flushes == 0
+                                         or flushes < args.serve_flushes):
+            rec = svc.tick()
+            flushes += 1
+            if rec is None:
+                time.sleep(0.05)       # empty fleet — idle until an attach
+                continue
+            d = rec["telemetry"]
+            print(f"[serve] flush {rec['flush']}: n={d['n_packages']} "
+                  f"cap={rec['capacity']} p99 {d['temp_p99_c']:.1f}C "
+                  f"f_mean {d['freq_mean']:.3f} "
+                  f"alerts {len(rec['alerts'])}")
+    finally:
+        server.shutdown()
+    return {"flushes": flushes, "port": port,
+            "capacity": svc.registry.capacity,
+            "n_active": svc.registry.n_active}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
@@ -149,6 +198,19 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
+    ap.add_argument("--serve", action="store_true",
+                    help="resident control plane: FleetService + HTTP "
+                         "operator API instead of the wave loop "
+                         "(docs/serving.md)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--serve bind address")
+    ap.add_argument("--port", type=int, default=8787,
+                    help="--serve port (0 = ephemeral)")
+    ap.add_argument("--flush-every", type=int, default=50,
+                    help="--serve steps per flush window")
+    ap.add_argument("--serve-flushes", type=int, default=0,
+                    help="--serve: stop after N flushes (0 = run until "
+                         "POST /shutdown)")
     ap.add_argument("--montecarlo", type=int, default=0,
                     help="run the §10 process-variation Monte-Carlo with N "
                          "trials through the fleet backend instead of "
@@ -171,6 +233,8 @@ def main(argv=None):
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 
+    if args.serve:                   # resident control plane, no wave loop
+        return _serve_resident(args, sched_cfg)
     if args.stream:                  # control-plane soak, no model serving
         return _stream_soak(args, sched_cfg, float(rho), key)
 
@@ -178,37 +242,34 @@ def main(argv=None):
     prefill_fn = jax.jit(S.make_prefill_step(cfg, max_seq))
     decode_fn = jax.jit(S.make_decode_step(cfg))
 
-    fleet = None
+    # the wave loop always rides the fleet engine (n = 1 is just a fleet of
+    # one): one batched step advances every package; this host serves pkg 0
+    n_pkgs = max(args.fleet, 1)
+    fleet = FleetEngine(sched_cfg, backend=args.fleet_backend,
+                        devices=args.fleet_devices or None)
+    fst = fleet.init(n_pkgs)
     if args.fleet > 1:
-        # one batched step advances every package; this host serves pkg 0
-        fleet = FleetEngine(sched_cfg, backend=args.fleet_backend,
-                            devices=args.fleet_devices or None)
-        fst = fleet.init(args.fleet)
         print(f"[fleet] backend {fleet.backend_impl.describe()} "
               f"({fleet.backend_impl.n_devices()} device(s))")
         # deterministic per-package load jitter around the base density
         jitter = 0.15 * jax.random.normal(jax.random.fold_in(key, 7777),
-                                          (args.fleet,))
+                                          (n_pkgs,))
     else:
-        sched = ThermalScheduler(sched_cfg)
-        sst = sched.init()
+        jitter = jnp.zeros((1,))     # a fleet of one serves the base density
 
     lat, admitted_hist, fleet_telem = [], [], []
     for wave in range(args.waves):
         # --- thermal admission control -----------------------------------
-        if fleet is not None:
-            rho_fleet = jnp.clip(rho + jitter * (1 + wave % 3), 0.9, 2.7)
-            fst, out, telem = fleet.step(fst, rho_fleet)
+        rho_fleet = jnp.clip(rho + jitter * (1 + wave % 3), 0.9, 2.7)
+        fst, out, telem = fleet.step(fst, rho_fleet)
+        freq0 = float(out.freq[0, 0])
+        if args.fleet > 1:
             d = telem.as_dict()
             fleet_telem.append(d)
-            freq0 = float(out.freq[0, 0])
             print(f"[fleet] wave {wave}: n={args.fleet} "
                   f"p50 {d['temp_p50_c']:.1f}C p99 {d['temp_p99_c']:.1f}C "
                   f"events {int(d['events_total'])} "
                   f"released {d['released_mtps']:.1f} MTPS")
-        else:
-            sst, out = sched.update(sst, jnp.full((1,), rho))
-            freq0 = float(out.freq[0])
         admit = max(1, int(args.batch * freq0))
         admitted_hist.append(admit)
 
