@@ -196,8 +196,15 @@ def fleet_mesh(n_devices: int | None = None, axis: str = FLEET_AXIS):
     CLI's ``--fleet-devices 0`` convention); a request larger than the host
     provides degrades to what is available (single-device JAX yields a
     trivial 1-mesh, on which sharded == broadcast).
+
+    Devices are ordered by (process_index, id): in a `jax.distributed`
+    process group this makes each process's mesh positions CONTIGUOUS, so
+    every process owns one contiguous span of package lanes
+    (`repro.distributed.multihost.local_lane_range`) and per-host ingest
+    slabs assemble into global arrays without cross-host movement.  On one
+    process the sort is the identity, so single-host meshes are unchanged.
     """
-    devs = jax.devices()
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
     n = len(devs) if not n_devices else max(1, min(n_devices, len(devs)))
     return jax.sharding.Mesh(np.array(devs[:n]), (axis,))
 

@@ -2,16 +2,20 @@
 
 Layering: `engine` (backend-agnostic stepping + telemetry) over
 `backends` (vmap / broadcast / sharded execution strategies) under
-`ingest` (streaming serving loop with bounded look-ahead ingest), with the
-control plane on top: `registry` (dynamic membership in power-of-two
-capacity pools), `alerts` (in-graph per-tenant stats + edge-latched alert
-sinks) and `service` (the resident multi-tenant serving service with its
-HTTP operator API) — see docs/architecture.md and docs/serving.md.
+`ingest` (streaming serving loop with bounded look-ahead ingest) and
+`distributed_ingest` (the same loop per process of a `jax.distributed`
+multi-host group), with the control plane on top: `registry` (dynamic
+membership in power-of-two capacity pools), `alerts` (in-graph per-tenant
+stats + edge-latched alert sinks) and `service` (the resident multi-tenant
+serving service with its HTTP operator API) — see docs/architecture.md and
+docs/serving.md.
 """
 from repro.fleet.alerts import (AlertEngine, JsonlSink, LogSink,
                                 TenantWindowStats, WebhookSink,
                                 tenant_window_stats)
 from repro.fleet.backends import available_backends, get_backend, register
+from repro.fleet.distributed_ingest import (LaneSpan, distributed_stream,
+                                            local_chunk_source, local_lanes)
 from repro.fleet.engine import FleetEngine, FleetSurvey, FleetTelemetry
 from repro.fleet.ingest import (HintQueue, StreamStats, chunk_source,
                                 merge_sources, stream)
@@ -21,6 +25,8 @@ from repro.fleet.service import FleetService, serve_http
 __all__ = ["FleetEngine", "FleetSurvey", "FleetTelemetry",
            "available_backends", "get_backend", "register", "HintQueue",
            "StreamStats", "chunk_source", "merge_sources", "stream",
+           "LaneSpan", "distributed_stream", "local_chunk_source",
+           "local_lanes",
            "FleetRegistry", "Tenant", "CapacityPlan", "AlertEngine",
            "TenantWindowStats", "tenant_window_stats", "LogSink",
            "JsonlSink", "WebhookSink", "FleetService", "serve_http"]

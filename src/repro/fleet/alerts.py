@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import json
 import sys
+import time
 from typing import NamedTuple
 
 import jax
@@ -150,27 +151,59 @@ class JsonlSink:
 
 class WebhookSink:
     """POST each alert as JSON to `url`; with no URL it only collects
-    payloads (`.sent`) — the offline/test stub.  Delivery is best-effort:
-    a network failure is recorded in `.errors`, never raised into the
-    serving loop."""
+    payloads (`.sent`) — the offline/test stub.
 
-    def __init__(self, url: str | None = None, timeout: float = 2.0):
+    Delivery is best-effort with BOUNDED retries: a failed POST is retried
+    up to ``retries`` more times with exponential backoff (``backoff_s``
+    doubling per attempt, capped at ``max_backoff_s``) and a per-attempt
+    ``timeout``.  Every failed attempt is recorded in `.errors`; an alert
+    exhausting all attempts lands in `.dropped`.  Nothing is ever raised
+    into the serving loop, and the worst-case stall per alert is the
+    bounded Σ(timeout + backoff) — an unreachable endpoint cannot wedge
+    the flush cadence indefinitely.  ``sleep`` is injectable so tests can
+    cover the backoff schedule without real waits.
+    """
+
+    def __init__(self, url: str | None = None, timeout: float = 2.0, *,
+                 retries: int = 3, backoff_s: float = 0.2,
+                 max_backoff_s: float = 5.0, sleep=None):
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self.url = url
         self.timeout = timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        self._sleep = sleep if sleep is not None else time.sleep
         self.sent: list[dict] = []
+        self.delivered: list[dict] = []
+        self.dropped: list[dict] = []
         self.errors: list[str] = []
+
+    def _post(self, event: dict) -> None:
+        from urllib.request import Request, urlopen
+        req = Request(self.url, data=json.dumps(event).encode(),
+                      headers={"Content-Type": "application/json"})
+        urlopen(req, timeout=self.timeout).close()
 
     def emit(self, event: dict) -> None:
         self.sent.append(event)
         if not self.url:
             return
-        try:
-            from urllib.request import Request, urlopen
-            req = Request(self.url, data=json.dumps(event).encode(),
-                          headers={"Content-Type": "application/json"})
-            urlopen(req, timeout=self.timeout).close()
-        except Exception as e:       # noqa: BLE001 — serving must not die
-            self.errors.append(f"{type(e).__name__}: {e}")
+        delay = self.backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                self._post(event)
+                self.delivered.append(event)
+                return
+            except Exception as e:   # noqa: BLE001 — serving must not die
+                self.errors.append(
+                    f"attempt {attempt + 1}/{self.retries + 1}: "
+                    f"{type(e).__name__}: {e}")
+                if attempt < self.retries:
+                    self._sleep(min(delay, self.max_backoff_s))
+                    delay *= 2.0
+        self.dropped.append(event)
 
 
 class AlertEngine:

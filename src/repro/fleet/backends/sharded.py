@@ -15,6 +15,18 @@ bit-identical, see tests/test_fleet_sharded.py).  The fallback is LOUD: a
 `RuntimeWarning` names the requested→actual device counts, and
 `describe()` always carries the actual mesh size, so a soak run can't
 silently collapse onto one device.
+
+Multi-host (`jax.distributed` process group): the mesh spans every global
+device and the SAME backend runs SPMD on every process.  Degradation is
+then forbidden — a shrunken mesh would drop some process's devices from
+the program and deadlock the collectives — so an indivisible fleet size or
+a devices= budget below the global count RAISES instead of warning.
+`put_trace` gains a second input shape: a chunk whose package dim equals
+this process's LOCAL lane span (`multihost.local_lane_range`) is assembled
+into the global array with zero cross-host movement
+(`jax.make_array_from_process_local_data`) — the per-host streaming ingest
+path (`repro.fleet.distributed_ingest`).  Global-shape chunks still work
+(every process must then hold the identical full chunk).
 """
 from __future__ import annotations
 
@@ -22,10 +34,12 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 
 from repro.core.scheduler import (SchedulerOutput, SchedulerState,
                                   ThermalScheduler)
+from repro.distributed import multihost
 from repro.distributed.sharding import (FLEET_AXIS, fleet_mesh,
                                         fleet_trace_spec, to_shardings)
 from repro.fleet.backends.base import FleetBackend, register
@@ -40,6 +54,9 @@ class ShardedBackend(FleetBackend):
         super().__init__(sched)
         self._requested = devices
         self.mesh = fleet_mesh(devices)
+        self.n_global = None     # global fleet size, set at init(); the
+        #                          multi-host put_trace needs it to tell a
+        #                          process-local slab from a global chunk
         self._state_specs = sched.state_pspecs(batch_axes=(FLEET_AXIS,))
         self._out_specs = sched.output_pspecs(batch_axes=(FLEET_AXIS,))
 
@@ -52,8 +69,28 @@ class ShardedBackend(FleetBackend):
         along.  Any downgrade (host has fewer devices than requested, or
         the fleet size is indivisible) warns with the requested→actual
         counts instead of degrading silently.
+
+        In a multi-process group degradation is an ERROR, not a warning:
+        every process must run the identical SPMD program over the full
+        global mesh, and a mesh that excludes any process's devices would
+        deadlock the first collective.
         """
         visible = len(jax.devices())
+        if multihost.is_multiprocess():
+            if self._requested and self._requested != visible:
+                raise ValueError(
+                    f"{self.name} fleet backend: devices={self._requested} "
+                    f"in a {jax.process_count()}-process group — the mesh "
+                    f"must span all {visible} global devices (pass "
+                    f"devices=None/0)")
+            if n_packages % visible:
+                raise ValueError(
+                    f"{self.name} fleet backend: n_packages={n_packages} "
+                    f"must divide the {visible} global devices in "
+                    f"multi-process mode (no silent mesh degradation "
+                    f"across hosts)")
+            self.mesh = fleet_mesh(visible)
+            return
         requested = self._requested or visible
         clamped = len(fleet_mesh(self._requested).devices.ravel())
         budget = clamped
@@ -84,6 +121,7 @@ class ShardedBackend(FleetBackend):
     def init(self, n_packages: int, pkg=None,
              filtration_fill=None) -> SchedulerState:
         self._resolve_mesh(n_packages)
+        self.n_global = n_packages
         return self.sched.init(
             batch_shape=(n_packages,),
             shardings=to_shardings(self.mesh, self._state_specs),
@@ -101,11 +139,21 @@ class ShardedBackend(FleetBackend):
         return fn(state, rho)
 
     # -- placement --------------------------------------------------------
+    def _spans_processes(self) -> bool:
+        return multihost.spans_processes(self.mesh)
+
     def put_trace(self, trace) -> jnp.ndarray:
         """Upload a density chunk with each package partition landing on its
         owning device.  The package axis always sits just before the tile
         axis: [n, t] chunks shard dim 0, [T, n, t] dim 1, pre-chunked
-        [C, K, n, t] traces dim 2."""
+        [C, K, n, t] traces dim 2.
+
+        Under a multi-process mesh the chunk may instead cover only THIS
+        process's lane span — see `_put_trace_multihost`."""
+        if isinstance(trace, jax.Array) and not trace.is_fully_addressable:
+            return trace             # already a global array — placed once
+        if self._spans_processes():
+            return self._put_trace_multihost(np.asarray(trace, np.float32))
         trace = jnp.asarray(trace)
         pdim = max(trace.ndim - 2, 0)
         spec = fleet_trace_spec(trace.ndim, package_dim=pdim)
@@ -113,14 +161,49 @@ class ShardedBackend(FleetBackend):
             spec = fleet_trace_spec(trace.ndim, package_dim=pdim, axis=None)
         return jax.device_put(trace, jax.sharding.NamedSharding(self.mesh, spec))
 
+    def _put_trace_multihost(self, trace: np.ndarray) -> jax.Array:
+        """Two legal chunk shapes on a process-spanning mesh, told apart by
+        the package dim (n_global ≠ n_local whenever >1 process):
+
+          * package dim == n_global — every process holds the identical
+            full chunk (the run()/run_chunked replicated-input path);
+            `device_put` scatters each partition to its owner.
+          * package dim == n_local (this process's `local_lane_range`
+            span) — the per-host streaming ingest path; the global array
+            is ASSEMBLED from the process-local slab with zero cross-host
+            movement.
+        """
+        if self.n_global is None:
+            raise RuntimeError(f"{self.name}: init() must run before "
+                               f"put_trace on a multi-process mesh (the "
+                               f"global fleet size disambiguates local "
+                               f"slabs from global chunks)")
+        pdim = max(trace.ndim - 2, 0)
+        lo, hi = multihost.local_lane_range(self.n_global, self.mesh)
+        spec = fleet_trace_spec(trace.ndim, package_dim=pdim)
+        sh = jax.sharding.NamedSharding(self.mesh, spec)
+        n_in = trace.shape[pdim]
+        if n_in == self.n_global:
+            return jax.device_put(trace, sh)
+        if n_in == hi - lo:
+            gshape = trace.shape[:pdim] + (self.n_global,
+                                           ) + trace.shape[pdim + 1:]
+            return multihost.assemble_local_slab(sh, trace, gshape)
+        raise ValueError(
+            f"{self.name}: chunk package dim {n_in} is neither the global "
+            f"fleet size {self.n_global} nor this process's local span "
+            f"{hi - lo} (lanes [{lo}, {hi}))")
+
     def put_mask(self, mask) -> jnp.ndarray:
         """An active-lane mask partitions like the state's package axis
         (the same `FLEET_AXIS` pspec the state leaves carry), so the
         engine's masked telemetry reductions stay collective-free until
         the final all-reduce; an indivisible capacity replicates it, like
-        `put_trace`'s fallback."""
-        mask = jnp.asarray(mask)
+        `put_trace`'s fallback.  Multi-process: every process passes the
+        identical GLOBAL [capacity] mask (membership is control-plane
+        state, tiny and host-replicated by construction)."""
         from jax.sharding import PartitionSpec as P
+        mask = np.asarray(mask)
         axis = (None if mask.shape[0] % len(self.mesh.devices.ravel())
                 else FLEET_AXIS)
         return jax.device_put(mask,
@@ -131,4 +214,7 @@ class ShardedBackend(FleetBackend):
         return len(self.mesh.devices.ravel())
 
     def describe(self) -> str:
+        if self._spans_processes():
+            return (f"{self.name}[{self.n_devices()}dev/"
+                    f"{jax.process_count()}proc]")
         return f"{self.name}[{self.n_devices()}dev]"

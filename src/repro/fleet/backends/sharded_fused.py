@@ -73,5 +73,7 @@ class ShardedFusedBackend(ShardedBackend):
         return fn(state, rho_trace)
 
     def describe(self) -> str:
-        return (f"{self.name}[{self.n_devices()}dev,"
-                f"blk={self._fused.block_packages}]")
+        # parent renders the mesh (and process span, when distributed);
+        # append the kernel's lane-block size inside the brackets
+        return (super().describe()[:-1]
+                + f",blk={self._fused.block_packages}]")

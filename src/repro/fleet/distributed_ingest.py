@@ -1,0 +1,127 @@
+"""Per-host streaming ingest for multi-host fleets.
+
+One host's H2D bandwidth and one Python feeder cap `repro.fleet.ingest` —
+this module is the scale-out: each process of a `jax.distributed` group
+(bootstrapped by `repro.distributed.multihost.initialize`) runs the SAME
+streaming loop, but its `HintQueue` carries only the [K, n_local, tiles]
+slab of lanes its own devices own.  The pieces compose; nothing inside
+`stream()` changes:
+
+    per-host source ──put_trace──▶ HintQueue ──run_block──▶ telemetry
+    [K, n_local, t]   (local-slab    (per       (global      (all-reduced
+                       assembly,      process)    SPMD         in-graph;
+                       zero x-host                program)     1 sync/flush
+                       movement)                               PER process)
+
+  * `ShardedBackend.put_trace` recognises a local-span chunk and assembles
+    the global array via `jax.make_array_from_process_local_data` — the
+    upload is purely host→local-device, exactly like single-host ingest.
+  * The flush program is SPMD: every process dispatches the identical
+    `run_block`, whose telemetry reductions become cross-host collectives
+    under GSPMD and whose scalar outputs are FULLY REPLICATED — so each
+    process's one `device_get` per flush returns the identical global
+    record (the one-host-sync-per-flush contract, now per process).
+  * Every process must take the same number of chunks with the same K per
+    round — the collectives are dispatched inside each flush, so a process
+    that stops early deadlocks the rest.  `local_chunk_source` derives all
+    hosts' slabs from one global trace and cannot desynchronise; bespoke
+    per-host sources must guarantee this themselves (see the contract note
+    on `distributed_stream`).
+
+Emulation: `multihost.run_process_group` drives N fresh interpreters with
+emulated CPU devices and a local coordinator — the harness behind
+tests/test_fleet_distributed.py and benchmarks/bench_fleet_distributed.py.
+Real deployments start one `repro.launch.serve --distributed --stream`
+per host instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+from repro.core.scheduler import SchedulerState
+from repro.distributed import multihost
+from repro.fleet.engine import FleetEngine
+from repro.fleet.ingest import StreamStats, stream
+
+__all__ = ["LaneSpan", "local_lanes", "local_chunk_source",
+           "distributed_stream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneSpan:
+    """This process's contiguous [lo, hi) span of the global package axis."""
+
+    lo: int
+    hi: int
+
+    @property
+    def n(self) -> int:
+        return self.hi - self.lo
+
+
+def local_lanes(engine: FleetEngine) -> LaneSpan:
+    """The lane span this process's devices own under the engine's mesh.
+
+    Requires an INITIALISED device-mesh backend (sharded/sharded_fused
+    after `engine.init(n)` — the mesh and global fleet size are resolved
+    there); single-process meshes own the full span, so code written
+    against this helper runs unchanged on one host.
+    """
+    be = engine.backend_impl
+    mesh, n_global = getattr(be, "mesh", None), getattr(be, "n_global", None)
+    if mesh is None or n_global is None:
+        raise ValueError(
+            f"distributed streaming needs an initialised sharded/"
+            f"sharded_fused backend (got {be.name!r}, "
+            f"n_global={n_global}) — call engine.init(n) first")
+    lo, hi = multihost.local_lane_range(n_global, mesh)
+    return LaneSpan(lo, hi)
+
+
+def local_chunk_source(source: Iterable[np.ndarray], lanes: LaneSpan
+                       ) -> Iterator[np.ndarray]:
+    """Slice a GLOBAL [K, n_global, tiles] chunk stream down to this
+    process's [K, n_local, tiles] slabs — the bridge from a single logical
+    trace (e.g. `ingest.chunk_source` over a replayed recording, or a
+    deterministic synthetic workload every host can generate) to per-host
+    ingest.  At real fleet scale each host's feeder produces only its own
+    slab to begin with and this helper never materialises."""
+    for chunk in source:
+        yield np.asarray(chunk)[:, lanes.lo:lanes.hi, :]
+
+
+def distributed_stream(engine: FleetEngine, state: SchedulerState,
+                       source: Iterable[np.ndarray], *,
+                       global_chunks: bool = False,
+                       lookahead_chunks: int = 2,
+                       on_flush: Callable[[int, dict], None] | None = None,
+                       keep_telemetry: bool = True,
+                       active: np.ndarray | None = None,
+                       ) -> tuple[SchedulerState, list[dict], StreamStats]:
+    """`ingest.stream` for one process of a multi-host fleet.
+
+    ``source`` yields THIS host's [K, n_local, tiles] slabs (or global
+    [K, n_global, tiles] chunks with ``global_chunks=True``, sliced here
+    via `local_chunk_source`).  Returns (state, flush records, stats) —
+    the records are identical on every process (telemetry is all-reduced
+    in-graph and fetched fully replicated), and ``stats.host_syncs`` counts
+    THIS process's syncs: exactly one per flush.
+
+    Contract: all processes must stream the same flush sequence (same
+    number of chunks, same K per round) — each flush dispatches a global
+    SPMD program, so a desynchronised source deadlocks the group.  The
+    ``active`` mask, like all control-plane state, is the GLOBAL
+    [n_packages] mask, identical on every process.
+    """
+    be = engine.backend_impl
+    if not hasattr(be, "mesh"):
+        raise ValueError(f"distributed_stream needs a device-mesh backend "
+                         f"(sharded/sharded_fused), got {be.name!r}")
+    if global_chunks:
+        source = local_chunk_source(source, local_lanes(engine))
+    return stream(engine, state, source, lookahead_chunks=lookahead_chunks,
+                  on_flush=on_flush, keep_telemetry=keep_telemetry,
+                  active=active)

@@ -59,6 +59,19 @@ is built on; see also docs/architecture.md):
     treats a trace length that does not divide ``flush_every`` as legal:
     the remainder becomes its own SHORTER flush window — ceil(T/K) records
     total, every step counted, no padding entering the telemetry.
+  * **Multi-host.**  Under `jax.distributed` the mesh backends span every
+    process (`repro.distributed.multihost`): state lives sharded across
+    hosts (NOT fully addressable on any one), `put_trace` accepts either a
+    global chunk or this host's lane slab, telemetry reductions all-reduce
+    in-graph, and the fully-replicated `FleetTelemetry` scalars fetch with
+    the usual single `device_get` per flush ON EACH process.  On a
+    process-spanning mesh the flush record is always derived from the
+    block's streamed temp/freq traces, so the package-axis reductions
+    all-reduce ONCE per flush — never inside the step scan, where each
+    one would be a cross-host gloo round trip (~10^2x the step math;
+    see `_run_block_impl`).  Every entry
+    point is then a collective program — all processes must make the same
+    sequence of calls (see `repro.fleet.distributed_ingest`).
 """
 from __future__ import annotations
 
@@ -196,6 +209,13 @@ class FleetEngine:
         self._survey = jax.jit(self._survey_impl, donate_argnums=dns)
         self._survey_block = jax.jit(self._survey_block_impl,
                                      donate_argnums=dns)
+        # survey normalisation for process-spanning meshes: eager ops on
+        # non-fully-addressable arrays are rejected outside jit, so the
+        # final divisions run as one tiny jitted program (counts traced —
+        # no respecialisation across trace lengths)
+        self._survey_finalize = jax.jit(
+            lambda exceed, fsum, counted, total: (exceed / counted,
+                                                  fsum / total))
 
     # ------------------------------------------------------------------ api
     def init(self, n_packages: int, pkg=None,
@@ -227,10 +247,14 @@ class FleetEngine:
     def run(self, state: SchedulerState, rho_trace, active=None) -> tuple[
             SchedulerState, FleetTelemetry]:
         """`lax.scan` the fleet over a [T, n_packages, n_tiles] density trace;
-        returns final state + stacked per-step telemetry ([T]-leaved)."""
+        returns final state + stacked per-step telemetry ([T]-leaved).
+        The trace is placed via the backend's `put_trace`, so device-mesh
+        backends receive each package partition pre-sharded (and
+        multi-process meshes accept a process-local lane slab)."""
         self._guard_donated(state)
         self._check_trace(rho_trace)
-        return self._run(state, rho_trace, self._active(state, active))
+        return self._run(state, self.backend_impl.put_trace(rho_trace),
+                         self._active(state, active))
 
     def run_chunked(self, state: SchedulerState, rho_trace,
                     flush_every: int,
@@ -302,6 +326,17 @@ class FleetEngine:
                jnp.zeros(state.freq.shape),              # exceedance count
                jnp.zeros(state.freq.shape),              # Σ freq (Kahan)
                jnp.zeros(state.freq.shape))              # Kahan compensation
+        if isinstance(state.freq, jax.Array) and \
+                not state.freq.is_fully_addressable:
+            # process-spanning mesh: the accumulators must shard exactly
+            # like the state's package axis (a host-local [n_global, tiles]
+            # array is not even constructible per process at fleet scale)
+            import numpy as np
+            sh = state.freq.sharding
+            acc = tuple(jax.device_put(
+                np.full(state.freq.shape,
+                        -np.inf if i == 0 else 0.0, np.float32), sh)
+                for i in range(4))
         counted = jnp.arange(t) >= burn_in
         put = self.backend_impl.put_trace
         if self.backend_impl.run_block is None:
@@ -312,10 +347,15 @@ class FleetEngine:
                     state, put(rho_trace[i:i + chunk]), counted[i:i + chunk],
                     acc)
         peak, exceed, fsum, _ = acc
+        if isinstance(peak, jax.Array) and not peak.is_fully_addressable:
+            exceed, fsum = self._survey_finalize(
+                exceed, fsum, jnp.float32(t - burn_in), jnp.float32(t))
+        else:
+            exceed, fsum = exceed / (t - burn_in), fsum / t
         return state, FleetSurvey(
             peak_t_c=peak,
-            exceed_frac=exceed / (t - burn_in),
-            freq_mean=fsum / t,
+            exceed_frac=exceed,
+            freq_mean=fsum,
             steps=jnp.asarray(t, jnp.int32),
             counted_steps=jnp.asarray(t - burn_in, jnp.int32))
 
@@ -617,18 +657,33 @@ class FleetEngine:
             state, temps, freqs = self.block_traces(state, rho_trace)
             telems = self._telemetry_from_traces(rho_trace, temps, freqs,
                                                  prev_events, state0, active)
-        elif self.backend_impl.run_block is not None:
-            # fused whole-chunk path: one kernel for the T-step block, then
-            # the telemetry reductions on its streamed temp/freq traces
+        elif (self.backend_impl.run_block is not None
+              or self._spans_processes()):
+            # whole-chunk traces path: advance the block (fused kernel when
+            # the backend has one, else a collective-free scan of update),
+            # then reduce telemetry from the streamed temp/freq traces.
+            # Process-spanning meshes MUST take this path even without a
+            # kernel: the per-step telemetry scan below puts ~a dozen
+            # package-axis reductions inside every scan iteration — free
+            # intra-host, but each one is a cross-HOST gloo round trip on a
+            # multi-process mesh (~10^2-10^3x the step math).  Here the
+            # reductions run ONCE per flush, in-graph, right before the
+            # single host sync.
             prev_events = state.events.sum()
             state0 = state
-            state, temps, freqs = self.backend_impl.run_block(state,
-                                                              rho_trace)
+            state, temps, freqs = self.block_traces(state, rho_trace)
             telems = self._telemetry_from_traces(rho_trace, temps, freqs,
                                                  prev_events, state0)
         else:
             state, telems = self._run_impl(state, rho_trace)
         return state, telems.reduce()
+
+    def _spans_processes(self) -> bool:
+        """True when the backend's mesh spans a multi-process group (the
+        host-side fact is identical on every process, so branching on it
+        keeps the program SPMD)."""
+        spans = getattr(self.backend_impl, "_spans_processes", None)
+        return bool(spans and spans())
 
     def _run_chunked_impl(self, state: SchedulerState, chunked: jnp.ndarray,
                           active=None):

@@ -74,6 +74,8 @@ class HintQueue:
             raise ValueError("HintQueue capacity must be >= 1")
         self.capacity = capacity
         self._q: deque = deque()
+        self._steps: deque = deque()   # per-chunk step counts (None when a
+        #                                chunk carries no leading step axis)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -86,14 +88,27 @@ class HintQueue:
         if self.full:
             return False
         self._q.append(chunk)
+        shape = getattr(chunk, "shape", None)
+        self._steps.append(int(shape[0]) if shape else None)
         return True
 
     def take(self) -> Any:
+        self._steps.popleft()
         return self._q.popleft()
 
     def lookahead_ms(self, flush_every: int, step_ms: float) -> float:
-        """Hint horizon currently buffered, in wall-clock milliseconds."""
-        return len(self._q) * flush_every * step_ms
+        """Hint horizon currently buffered, in wall-clock milliseconds.
+
+        Counts each queued chunk's ACTUAL steps — `chunk_source` yields a
+        non-divisible trace's tail as a SHORTER chunk, and assuming
+        ``flush_every`` steps for it would overstate the buffered horizon
+        (the paper's 20–50 ms hint-window budget is an upper bound the
+        source sizes the queue against, so overstating is the harmful
+        direction).  ``flush_every`` stands in only for chunks that carry
+        no shape (opaque queue payloads, e.g. the replay path's records).
+        """
+        steps = sum(flush_every if s is None else s for s in self._steps)
+        return steps * step_ms
 
 
 def chunk_source(trace: np.ndarray, flush_every: int) -> Iterator[np.ndarray]:

@@ -39,11 +39,17 @@ the `AlertEngine` sinks.  `replay()` re-drives a recorded JSONL stream
 through the existing `HintQueue` ingest path and returns the reproduced
 telemetry.
 
+Workloads are synthesised per attached package by default; a tenant can
+instead POST real density chunks to `/ingest` — they queue in a bounded
+per-tenant `HintQueue` (back-pressure via HTTP 429 when full) and `tick()`
+routes the head chunk onto the tenant's lanes through `merge_sources`,
+while unfed lanes keep their synthetic workloads.
+
 The HTTP surface (stdlib `http.server`, no new dependencies) is documented
 operator-facing in docs/serving.md:
 
     GET  /healthz /telemetry /fleet /alerts
-    POST /attach /detach /thresholds /replay /shutdown
+    POST /attach /detach /thresholds /ingest /replay /shutdown
 """
 from __future__ import annotations
 
@@ -61,7 +67,7 @@ from repro.core.telemetry import TelemetryLog
 from repro.core.workload import KINDS, make_trace
 from repro.fleet.alerts import AlertEngine, tenant_window_stats
 from repro.fleet.engine import FleetEngine
-from repro.fleet.ingest import HintQueue
+from repro.fleet.ingest import HintQueue, merge_sources
 from repro.fleet.registry import FleetRegistry
 
 __all__ = ["FleetService", "serve_http"]
@@ -81,7 +87,8 @@ class FleetService:
                  backend: str = "broadcast", *,
                  min_capacity: int = 4, max_tenants: int = 8,
                  flush_every: int = 50, pad_rho: float = 1.0,
-                 sinks=(), log_capacity: int = 4096, seed: int = 0):
+                 sinks=(), log_capacity: int = 4096, seed: int = 0,
+                 feed_capacity: int = 4):
         self.engine = FleetEngine(cfg, fp, backend=backend)
         self.cfg, self.fp = self.engine.cfg, fp
         self.registry = FleetRegistry(min_capacity=min_capacity,
@@ -90,6 +97,8 @@ class FleetService:
         self.log = TelemetryLog(capacity=log_capacity)
         self.flush_every = int(flush_every)
         self.pad_rho = float(pad_rho)
+        self.feed_capacity = int(feed_capacity)
+        self._feeds: dict[str, HintQueue] = {}  # tenant -> queued chunks
         self.lock = threading.RLock()
         self.flushes = 0
         self.steps = 0            # host mirror of the fleet clock — keeps
@@ -220,6 +229,43 @@ class FleetService:
                     "at_risk_limit": t.at_risk_limit,
                     "drift_budget_nm": t.drift_budget_nm}
 
+    # ---------------------------------------------------------------- ingest
+    def ingest(self, tenant: str, chunk) -> dict:
+        """Queue one POSTed density chunk for ``tenant``'s packages.
+
+        ``chunk`` is [flush_every, n_tiles] (or [flush_every], broadcast
+        over tiles): the density every package of the tenant runs for one
+        upcoming flush window.  Chunks queue in a per-tenant bounded
+        `HintQueue` (capacity ``feed_capacity`` — the service-side hint
+        horizon) and are consumed one per `tick()`, routed through
+        `merge_sources` onto the tenant's lanes; lanes with no queued feed
+        keep their synthetic workloads.  A full queue REFUSES the chunk
+        (``accepted: false`` / HTTP 429) — back-pressure is the poster's
+        signal to slow down, never a silent drop.
+        """
+        with self.lock:
+            if tenant not in self.registry.tenants:
+                raise ValueError(f"unknown tenant {tenant!r}; attach a "
+                                 f"package for it first")
+            arr = np.asarray(chunk, np.float32)
+            if arr.ndim == 1:
+                arr = np.repeat(arr[:, None], self.cfg.n_tiles, axis=1)
+            if arr.shape != (self.flush_every, self.cfg.n_tiles):
+                raise ValueError(
+                    f"chunk must be [{self.flush_every}, "
+                    f"{self.cfg.n_tiles}] (one flush window), got "
+                    f"{tuple(arr.shape)}")
+            if not np.all(np.isfinite(arr)) or arr.min() < 0:
+                raise ValueError("chunk must be finite and non-negative")
+            q = self._feeds.get(tenant)
+            if q is None:
+                q = self._feeds[tenant] = HintQueue(self.feed_capacity)
+            accepted = q.offer(arr)
+            return {"tenant": tenant, "accepted": bool(accepted),
+                    "queued": len(q),
+                    "lookahead_ms": q.lookahead_ms(self.flush_every,
+                                                   self.cfg.step_ms)}
+
     # ----------------------------------------------------------------- flush
     def _flush_impl(self, state, chunk, active, tenant_ids, thresholds):
         """ONE jitted program per (capacity, chunk-length): advance the
@@ -237,19 +283,38 @@ class FleetService:
             self.fp.kappa_to_nm_per_c, thresholds)
         return state, telem, stats, alarms
 
-    def _chunk(self, n_steps: int) -> np.ndarray:
-        """Assemble the next [n_steps, capacity, tiles] density chunk from
-        each attached package's synthetic workload; free lanes idle at
-        ``pad_rho`` (they step, but the mask keeps them out of telemetry)."""
+    def _chunk(self, n_steps: int) -> tuple[np.ndarray, list[str]]:
+        """Assemble the next [n_steps, capacity, tiles] density chunk: each
+        attached package runs its synthetic workload, EXCEPT lanes of a
+        tenant with a queued `ingest` feed — those take the head chunk of
+        the tenant's HintQueue, assembled onto their lanes via
+        `merge_sources`.  Free lanes idle at ``pad_rho`` (they step, but
+        the mask keeps them out of telemetry).  Returns the chunk plus the
+        tenants fed this flush (recorded in the flush record)."""
         cap, tiles = self.registry.capacity, self.cfg.n_tiles
         chunk = np.full((n_steps, cap, tiles), self.pad_rho, np.float32)
+        fed: dict[str, np.ndarray] = {}
+        for tenant, q in self._feeds.items():
+            if len(q) and tenant in self.registry.tenants:
+                fed[tenant] = q.take()
+        fed_lanes: dict[int, object] = {}
+        tenants = self.registry.tenants
+        for tname, rho in fed.items():
+            for pkg in tenants[tname].packages:
+                fed_lanes[self.registry.lane(pkg)] = iter([rho])
+        merged = (next(merge_sources(fed_lanes, cap, tiles,
+                                     pad_rho=self.pad_rho))
+                  if fed_lanes else None)
         for pkg, lane in self.registry.packages.items():
+            if merged is not None and lane in fed_lanes:
+                chunk[:, lane, :] = merged[:, lane, :]
+                continue
             key = jax.random.fold_in(
                 jax.random.PRNGKey(self._seed + self._pkg_key[pkg]),
                 self.flushes)
             chunk[:, lane, :] = np.asarray(self._make_trace(
                 key, n_steps, self._kind_of[pkg], tiles))
-        return chunk
+        return chunk, sorted(fed)
 
     def tick(self, chunk=None) -> dict | None:
         """One flush: step the fleet `flush_every` steps (or an explicit
@@ -258,8 +323,9 @@ class FleetService:
         with self.lock:
             if self.registry.n_active == 0 and chunk is None:
                 return None
+            fed: list[str] = []
             if chunk is None:
-                chunk = self._chunk(self.flush_every)
+                chunk, fed = self._chunk(self.flush_every)
             chunk = np.asarray(chunk, np.float32)
             cap = self.registry.capacity
             if chunk.ndim != 3 or chunk.shape[1:] != (cap, self.cfg.n_tiles):
@@ -299,6 +365,7 @@ class FleetService:
                     for s in range(self.registry.max_tenants)
                     if names[s] is not None and sdict["n_lanes"][s] > 0},
                 "alerts": fired,
+                "ingest_fed": fed,
                 "rho": chunk.tolist(),
             }
             self.log.record(step0, **record)
@@ -472,6 +539,11 @@ class _Handler(BaseHTTPRequestHandler):
                     raise ValueError(f"unknown threshold field(s) "
                                      f"{sorted(bad)}; want {sorted(allowed)}")
                 self._send(200, svc.set_thresholds(tenant, **body))
+            elif self.path == "/ingest":
+                out = svc.ingest(body["tenant"], body["chunk"])
+                # a refused chunk is back-pressure, not an error: 429 tells
+                # the poster to retry after a flush drains the queue
+                self._send(200 if out["accepted"] else 429, out)
             elif self.path == "/replay":
                 self._send(200, {"replayed": svc.replay(body["path"])})
             elif self.path == "/shutdown":

@@ -27,6 +27,14 @@ loop (`repro.fleet.ingest`) — double-buffered host→device uploads, bounded
 look-ahead hint queue, telemetry reduced in-graph over each ``gen``-step
 flush window and fetched with ONE host sync per flush.
 
+``--distributed`` makes a ``--stream`` soak ONE HOST of a
+`jax.distributed` group: launch the same command on every host with
+``--coordinator host0:port --num-processes N --process-id 0..N-1`` and a
+``--fleet`` that is the GLOBAL package count.  Each process feeds only its
+own lane span through its own hint queue
+(`repro.fleet.distributed_ingest`); telemetry is all-reduced in-graph and
+printed by rank 0 (see docs/serving.md "Multi-host streaming").
+
 ``--montecarlo N`` runs the §10 process-variation population instead: N
 heterogeneous trials (per-trial Rth/τ/η/polling draws in the fleet state)
 paired baseline/V24 through the selected ``--fleet-backend``, reporting the
@@ -99,7 +107,16 @@ def _montecarlo(args):
 
 
 def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
-    """--stream: fleet control-plane soak through the streaming ingest loop."""
+    """--stream: fleet control-plane soak through the streaming ingest loop.
+
+    With ``--distributed`` this is ONE PROCESS of a `jax.distributed`
+    group (the caller already ran `multihost.initialize`): the fleet size
+    is GLOBAL, the full density trace is generated deterministically on
+    every host (same seed → same trace) and sliced to this process's lane
+    span, and each process streams only its own slab — telemetry comes
+    back all-reduced and identical on every rank, so only rank 0 prints
+    per-flush lines.
+    """
     n = max(args.fleet, 1)
     eng = FleetEngine(sched_cfg, backend=args.fleet_backend,
                       devices=args.fleet_devices or None)
@@ -111,24 +128,35 @@ def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
     trace = np.clip(swell[:, None, None] + jitter, 0.9, 2.7
                     ).astype(np.float32)                       # [T, n, tiles]
 
+    rank0 = jax.process_index() == 0
+
     def on_flush(i, d):
-        print(f"[stream] flush {i}: p50 {d['temp_p50_c']:.1f}C "
-              f"p99 {d['temp_p99_c']:.1f}C f_mean {d['freq_mean']:.3f} "
-              f"released {d['released_mtps']:.1f} MTPS "
-              f"events {int(d['events_total'])}")
+        if rank0:
+            print(f"[stream] flush {i}: p50 {d['temp_p50_c']:.1f}C "
+                  f"p99 {d['temp_p99_c']:.1f}C f_mean {d['freq_mean']:.3f} "
+                  f"released {d['released_mtps']:.1f} MTPS "
+                  f"events {int(d['events_total'])}")
 
     state = eng.init(n)
     # the mesh is resolved at init: log the ACTUAL device count so a soak
     # degraded by an indivisible fleet size can't masquerade as multi-device
-    print(f"[stream] backend {eng.backend_impl.describe()} "
+    tag = (f"[stream p{jax.process_index()}/{jax.process_count()}]"
+           if args.distributed else "[stream]")
+    print(f"{tag} backend {eng.backend_impl.describe()} "
           f"({eng.backend_impl.n_devices()} device(s)), fleet {n}")
     t0 = time.time()
-    state, flushed, stats = stream(eng, state,
-                                   chunk_source(trace, args.gen),
-                                   on_flush=on_flush)
+    if args.distributed:
+        from repro.fleet import distributed_stream
+        state, flushed, stats = distributed_stream(
+            eng, state, chunk_source(trace, args.gen),
+            global_chunks=True, on_flush=on_flush)
+    else:
+        state, flushed, stats = stream(eng, state,
+                                       chunk_source(trace, args.gen),
+                                       on_flush=on_flush)
     dt = time.time() - t0
     rate = stats.steps * n / max(dt, 1e-9)
-    print(f"[stream] done: {stats.steps} steps x {n} pkgs "
+    print(f"{tag} done: {stats.steps} steps x {n} pkgs "
           f"({eng.backend_impl.describe()}) in {dt*1e3:.0f} ms "
           f"({rate:.0f} pkg-steps/s), {stats.host_syncs} host syncs / "
           f"{stats.flushes} flushes (contract: 1/flush)")
@@ -152,7 +180,7 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
     host, port = server.server_address[:2]
     print(f"[serve] control plane on http://{host}:{port} — "
           f"GET /healthz /telemetry /fleet /alerts, "
-          f"POST /attach /detach /thresholds /replay /shutdown")
+          f"POST /attach /detach /thresholds /ingest /replay /shutdown")
     flushes = 0
     try:
         while not svc.shutting_down and (args.serve_flushes == 0
@@ -198,6 +226,18 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="join a jax.distributed process group: this "
+                         "invocation is ONE host of a multi-host --stream "
+                         "soak (launch one per host with --process-id "
+                         "0..N-1; --fleet is the GLOBAL fleet size)")
+    ap.add_argument("--coordinator", default="127.0.0.1:8476",
+                    help="--distributed coordinator address (host:port of "
+                         "process 0)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="--distributed total process count")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="--distributed this process's rank")
     ap.add_argument("--serve", action="store_true",
                     help="resident control plane: FleetService + HTTP "
                          "operator API instead of the wave loop "
@@ -219,6 +259,21 @@ def main(argv=None):
                     help="steps per Monte-Carlo trial (>= 3000 reproduces "
                          "the paper's §10 distributions)")
     args = ap.parse_args(argv)
+
+    if args.distributed:
+        # bootstrap FIRST — the process group must exist before any jax
+        # computation pins the backend topology
+        if not args.stream:
+            ap.error("--distributed requires --stream (the multi-host "
+                     "path is the streaming fleet soak)")
+        if args.fleet_backend not in ("sharded", "sharded_fused"):
+            ap.error(f"--distributed needs a device-mesh backend "
+                     f"(sharded/sharded_fused), got "
+                     f"--fleet-backend {args.fleet_backend}")
+        from repro.distributed import multihost
+        topo = multihost.initialize(args.coordinator, args.num_processes,
+                                    args.process_id)
+        print(f"[distributed] {topo.describe()}")
 
     if args.montecarlo:
         return _montecarlo(args)

@@ -220,9 +220,148 @@ def test_masked_telemetry_matches_dense_fleet(lanes):
         np.testing.assert_allclose(md[k], v, err_msg=k, **TOL)
 
 
+# ------------------------------------------------------------------- ingest
+def test_ingest_routes_posted_chunk_onto_tenant_lanes():
+    """A POSTed density chunk lands on EXACTLY the posting tenant's lanes
+    for the next flush (via `merge_sources`); the other tenant keeps its
+    synthetic workload, and the feed drains one chunk per tick."""
+    svc = _service()
+    svc.attach("a0", tenant="acme")
+    svc.attach("a1", tenant="acme")
+    svc.attach("z0", tenant="zeta")
+    lanes = {p: svc.registry.lane(p) for p in ("a0", "a1", "z0")}
+
+    posted = np.linspace(0.9, 2.7, W * N_TILES, dtype=np.float32
+                         ).reshape(W, N_TILES)
+    out = svc.ingest("acme", posted)
+    assert out["accepted"] and out["queued"] == 1
+    assert out["lookahead_ms"] == pytest.approx(W * svc.cfg.step_ms)
+
+    rec = svc.tick()
+    assert rec["ingest_fed"] == ["acme"]
+    rho = np.asarray(rec["rho"], np.float32)
+    for pkg in ("a0", "a1"):                  # fed lanes carry the POST
+        np.testing.assert_allclose(rho[:, lanes[pkg], :], posted, **TOL)
+    assert not np.allclose(rho[:, lanes["z0"], :], posted)  # zeta synthetic
+
+    rec2 = svc.tick()                         # queue drained -> synthetic
+    assert rec2["ingest_fed"] == []
+    assert not np.allclose(np.asarray(rec2["rho"])[:, lanes["a0"], :],
+                           posted)
+
+
+def test_ingest_validation_and_backpressure():
+    svc = _service(feed_capacity=2)
+    svc.attach("p0", tenant="acme")
+    with pytest.raises(ValueError, match="unknown tenant"):
+        svc.ingest("ghost", np.ones((W, N_TILES), np.float32))
+    with pytest.raises(ValueError, match="one flush window"):
+        svc.ingest("acme", np.ones((W + 1, N_TILES), np.float32))
+    with pytest.raises(ValueError, match="finite and non-negative"):
+        svc.ingest("acme", np.full((W, N_TILES), -1.0, np.float32))
+
+    # 1-D chunks broadcast over tiles
+    assert svc.ingest("acme", np.ones(W, np.float32))["accepted"]
+    assert svc.ingest("acme", np.ones(W, np.float32))["queued"] == 2
+    refused = svc.ingest("acme", np.ones(W, np.float32))
+    assert refused["accepted"] is False and refused["queued"] == 2
+    svc.tick()                                # drains one chunk
+    assert svc.ingest("acme", np.ones(W, np.float32))["accepted"]
+
+
+# ------------------------------------------------------------ webhook retry
+class _FlakyHandler:
+    """Local HTTP endpoint that fails the first ``fail_n`` POSTs with 500,
+    then accepts — the WebhookSink retry fixture."""
+
+    def __init__(self, fail_n):
+        import http.server
+
+        outer = self
+        outer.hits = 0
+        outer.bodies = []
+
+        class H(http.server.BaseHTTPRequestHandler):
+            def log_message(self, fmt, *args):
+                pass
+
+            def do_POST(self):      # noqa: N802 — http.server API
+                outer.hits += 1
+                n = int(self.headers.get("Content-Length") or 0)
+                body = self.rfile.read(n)
+                if outer.hits <= fail_n:
+                    self.send_error(500, "flaky")
+                    return
+                outer.bodies.append(json.loads(body))
+                self.send_response(200)
+                self.send_header("Content-Length", "0")
+                self.end_headers()
+
+        self.handler = H
+
+
+def test_webhook_sink_retries_flaky_endpoint_to_delivery():
+    """Two 500s then success: the sink retries with backoff and delivers;
+    both failed attempts are recorded, nothing is dropped."""
+    import http.server
+    from repro.fleet.alerts import WebhookSink
+
+    flaky = _FlakyHandler(fail_n=2)
+    server = http.server.ThreadingHTTPServer(("127.0.0.1", 0), flaky.handler)
+    import threading
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    try:
+        url = f"http://127.0.0.1:{server.server_address[1]}/hook"
+        naps = []
+        sink = WebhookSink(url, retries=3, backoff_s=0.01,
+                           sleep=naps.append)
+        ev = {"flush": 1, "tenant": "acme", "kind": "t_crit",
+              "value": 71.0, "limit": 70.0}
+        sink.emit(ev)                          # must not raise
+        assert sink.delivered == [ev] and sink.dropped == []
+        assert flaky.hits == 3 and flaky.bodies == [ev]
+        assert len(sink.errors) == 2 and "HTTPError" in sink.errors[0]
+        assert naps == [0.01, 0.02]            # exponential backoff
+    finally:
+        server.shutdown()
+        t.join(timeout=5)
+
+
+def test_webhook_sink_bounded_retries_then_drop():
+    """An endpoint that never recovers: attempts are BOUNDED (retries+1),
+    the backoff is capped, the event lands in `.dropped`, and the serving
+    loop never sees an exception."""
+    import http.server
+    from repro.fleet.alerts import WebhookSink
+
+    flaky = _FlakyHandler(fail_n=10 ** 9)      # always failing
+    server = http.server.ThreadingHTTPServer(("127.0.0.1", 0), flaky.handler)
+    import threading
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    try:
+        url = f"http://127.0.0.1:{server.server_address[1]}/hook"
+        naps = []
+        sink = WebhookSink(url, retries=3, backoff_s=0.1, max_backoff_s=0.25,
+                           sleep=naps.append)
+        ev = {"flush": 2, "tenant": "zeta", "kind": "at_risk",
+              "value": 0.5, "limit": 0.1}
+        sink.emit(ev)                          # must not raise
+        assert flaky.hits == 4                 # 1 try + 3 bounded retries
+        assert sink.dropped == [ev] and sink.delivered == []
+        assert len(sink.errors) == 4
+        assert naps == [0.1, 0.2, 0.25]        # doubling, capped
+    finally:
+        server.shutdown()
+        t.join(timeout=5)
+    with pytest.raises(ValueError):
+        WebhookSink("http://x", retries=-1)
+
+
 # --------------------------------------------------------------------- HTTP
 def test_http_surface_round_trip(tmp_path):
-    svc = _service(flush_every=8)
+    svc = _service(flush_every=8, feed_capacity=1)
     server, thread = serve_http(svc, port=0)
     port = server.server_address[1]
     base = f"http://127.0.0.1:{port}"
@@ -249,6 +388,21 @@ def test_http_surface_round_trip(tmp_path):
         assert "rho" not in snap["records"][0]     # snapshots stay light
         assert get("/fleet")["tenants"]["acme"]["packages"] == ["p0"]
         assert any(a["kind"] == "t_crit" for a in get("/alerts")["alerts"])
+
+        # per-tenant ingest: accept -> 429 back-pressure when full -> 400
+        # on an unknown tenant; the loop survives all of it
+        chunk = [[1.2] * N_TILES] * 8
+        r = post("/ingest", {"tenant": "acme", "chunk": chunk})
+        assert r["accepted"] is True and r["queued"] == 1
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            post("/ingest", {"tenant": "acme", "chunk": chunk})
+        assert ei.value.code == 429            # feed_capacity=1 is full
+        assert json.loads(ei.value.read())["accepted"] is False
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            post("/ingest", {"tenant": "ghost", "chunk": chunk})
+        assert ei.value.code == 400
+        rec = svc.tick()
+        assert rec["ingest_fed"] == ["acme"]
 
         # errors surface as 400 JSON, never a crashed serving loop
         with pytest.raises(urllib.error.HTTPError) as ei:

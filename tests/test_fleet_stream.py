@@ -30,6 +30,26 @@ def test_hint_queue_bounds():
         HintQueue(0)
 
 
+def test_hint_queue_lookahead_counts_actual_tail_steps():
+    """Regression: `lookahead_ms` assumed every queued chunk carried
+    `flush_every` steps, so a non-divisible trace's SHORTER tail chunk
+    overstated the buffered hint horizon — the harmful direction for the
+    paper's 20–50 ms window budget.  Arrays are counted by their real
+    leading axis; shapeless payloads still fall back to `flush_every`."""
+    q = HintQueue(3)
+    q.offer(np.zeros((5, N, TILES), np.float32))
+    q.offer(np.zeros((5, N, TILES), np.float32))
+    q.offer(np.zeros((3, N, TILES), np.float32))    # the tail chunk
+    assert q.lookahead_ms(flush_every=5, step_ms=10.0) == 130.0  # not 150
+    q.take()
+    assert q.lookahead_ms(flush_every=5, step_ms=10.0) == 80.0
+    q.take(), q.take()
+    assert q.lookahead_ms(flush_every=5, step_ms=10.0) == 0.0
+    # opaque (shapeless) payloads keep the flush_every fallback
+    q.offer("opaque-record")
+    assert q.lookahead_ms(flush_every=5, step_ms=10.0) == 50.0
+
+
 def test_chunk_source_yields_tail():
     """A non-divisible tail is a final SHORTER chunk, never dropped: the
     chunked steps always sum to the trace length (regression — the tail
