@@ -25,7 +25,11 @@ Acceptance bars:
     the emulated mesh size at 128 packages/device;
   * the control plane's masked capacity pools are near-free: run_block at
     50% occupancy (512-lane pool, [capacity] active mask, masked telemetry
-    reductions) stays within 1.10× of the dense same-capacity fleet.
+    reductions) stays within 1.10× of the dense same-capacity fleet;
+  * the PR-8 degraded-mode machinery (staleness counters, sanitised
+    density latch, per-lane mode mask) is near-free on the fault-free hot
+    path: a fault-free `degraded_fallback=True` run_block stays within
+    1.10× of the same fleet with the fallback compiled out.
 
 `benchmarks.run` appends this module's rows to ``BENCH_fleet.json`` at the
 repo root, so the fleet fast path accumulates a perf trajectory across PRs.
@@ -300,6 +304,38 @@ def _masked_occupancy(cfg) -> None:
         f"masked 50%-occupancy fleet {ratio:.3f}x of dense (>1.10)"
 
 
+def _degraded_overhead(cfg) -> None:
+    """PR-8 gate: the degraded-mode fallback machinery — per-step isfinite
+    scan, rho_last latch, staleness counter with hysteresis, per-lane mode
+    select — must cost ≤1.10× on a FAULT-FREE trace (the hot path every
+    healthy fleet pays forever).  Same 512-lane operating point as the
+    mask-overhead gate; faulted-path pricing is not gated (faults are
+    rare), only measured by the chaos soak."""
+    fb_cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24",
+                             degraded_fallback=True, stale_limit_steps=5,
+                             recover_steps=10)
+    rng = np.random.default_rng(8)
+    trace = jnp.asarray((0.9 + 1.8 * rng.random(
+        (MASK_STEPS, MASK_CAPACITY, N_TILES))).astype(np.float32))
+    us = {}
+    for name, c in (("plain", cfg), ("fallback", fb_cfg)):
+        eng = FleetEngine(c, backend="broadcast")
+        st0 = eng.init(MASK_CAPACITY)
+
+        def go(eng=eng, st0=st0):
+            _, telem = eng.run_block(st0, trace)
+            return telem
+        telem, us[name] = timed(go, iters=10, best=True)
+    assert int(telem.as_dict()["degraded_count"]) == 0   # fault-free run
+    ratio = us["fallback"] / us["plain"]
+    rate = MASK_STEPS * MASK_CAPACITY / (us["fallback"] / 1e6)
+    row("fleet.degraded_overhead_512", us["fallback"] / MASK_STEPS,
+        f"pkg_steps_per_s={rate:.0f};fallback_vs_plain={ratio:.3f}"
+        f"(need<=1.10)")
+    assert ratio <= 1.10, \
+        f"fault-free degraded-mode machinery {ratio:.3f}x of plain (>1.10)"
+
+
 def _streaming_90k(cfg) -> None:
     """Streaming ingest over the Appendix-B-scale 90k-step trace: the sync
     contract (1 host sync per flush window) must hold end-to-end."""
@@ -393,6 +429,7 @@ def run() -> None:
     assert ratio <= 1.05, f"sharded 1-dev {ratio:.3f}x of vmap (>1.05)"
 
     _masked_occupancy(cfg)
+    _degraded_overhead(cfg)
     _filtration_fast_path()
     _fused_backend(cfg)
     _sharded_scaling("sharded")

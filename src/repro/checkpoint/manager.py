@@ -40,8 +40,14 @@ class CheckpointManager:
         self._error: BaseException | None = None
 
     # ------------------------------------------------------------- saving --
-    def save(self, step: int, state, blocking: bool = False) -> None:
-        """Snapshot `state` (any pytree) at `step`; write asynchronously."""
+    def save(self, step: int, state, blocking: bool = False,
+             extra: dict | None = None) -> None:
+        """Snapshot `state` (any pytree) at `step`; write asynchronously.
+
+        ``extra``: optional JSON-serialisable dict merged into the
+        manifest (readable back via `manifest(step)["extra"]`) — the hook
+        crash-consistent services use to persist host-side bookkeeping
+        (registry membership, counters) atomically WITH the array state."""
         self.wait()                      # one in-flight save at a time
         leaves, treedef = jax.tree.flatten(state)
         host = [np.asarray(jax.device_get(x)) for x in leaves]
@@ -49,6 +55,8 @@ class CheckpointManager:
                 "shapes": [list(h.shape) for h in host],
                 "dtypes": [str(h.dtype) for h in host],
                 "step": step, "complete": True}
+        if extra is not None:
+            spec["extra"] = json.loads(json.dumps(extra))  # fail fast, copy
 
         def write():
             try:
@@ -110,6 +118,13 @@ class CheckpointManager:
                 except (OSError, ValueError, json.JSONDecodeError):
                     continue
         return sorted(out)
+
+    def manifest(self, step: int) -> dict:
+        """The manifest dict of a complete checkpoint (incl. any ``extra``
+        metadata saved with it)."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
 
     def restore(self, step: int, template, shardings=None):
         """Restore into the structure of `template` (pytree of arrays or

@@ -89,6 +89,14 @@ class SchedulerConfig:
     resume_below_c: float = 66.0   # hysteresis: throttled until T ≤ this
     recover_ms: float = 100.0      # ramp-back time constant
     poll_interval_ms: float = 25.0 # homogeneous polling period
+    # in-graph graceful degradation (v24 only): packages whose hint stream
+    # goes stale (non-finite density entries — a late/dropped/corrupted
+    # chunk) fall back to the reactive_poll safety floor PER PACKAGE, and
+    # recover with hysteresis once fresh hints resume.  The predictive
+    # layer is advisory; reactive control is the floor (§9).
+    degraded_fallback: bool = False
+    stale_limit_steps: int = 5     # consecutive stale steps before fallback
+    recover_steps: int = 10        # consecutive fresh steps before recovery
 
     @property
     def lookahead_ms(self) -> float:
@@ -127,8 +135,16 @@ class SchedulerState(NamedTuple):
     # per-package physics (config.heterogeneous) — None ⇒ homogeneous fleet,
     # every package on the scheduler's shared fingerprint poles
     pkg: "PackageParams | None" = None
-    # reactive_poll hysteresis latch [..., n_tiles] bool — None otherwise
+    # reactive_poll hysteresis latch [..., n_tiles] bool — None unless the
+    # mode is reactive_poll or degraded_fallback is on (the fallback runs
+    # the same latch on degraded lanes)
     throttled: "jnp.ndarray | None" = None
+    # degraded-fallback plane (config.degraded_fallback) — None otherwise.
+    # Per-PACKAGE (not per-tile): one hint stream serves a package, so the
+    # whole package degrades or recovers together.
+    rho_last: "jnp.ndarray | None" = None   # [..., n_tiles] last finite ρ
+    stale: "jnp.ndarray | None" = None      # [...] int32 staleness counter
+    degraded: "jnp.ndarray | None" = None   # [...] bool — on reactive floor
 
 
 class SchedulerOutput(NamedTuple):
@@ -154,6 +170,15 @@ class ThermalScheduler:
         if cfg.mode not in ("v24", "reactive", "reactive_poll", "off"):
             raise ValueError(f"unknown mode {cfg.mode!r} "
                              f"(v24|reactive|reactive_poll|off)")
+        if cfg.degraded_fallback and cfg.mode != "v24":
+            raise ValueError(
+                f"degraded_fallback=True requires mode='v24' (the fallback "
+                f"IS reactive_poll — mode {cfg.mode!r} has no predictive "
+                f"layer to degrade from)")
+        if cfg.degraded_fallback and (cfg.stale_limit_steps < 1
+                                      or cfg.recover_steps < 1):
+            raise ValueError("stale_limit_steps and recover_steps must be "
+                             ">= 1")
         self.cfg = cfg
         self.fp = fp
         base = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
@@ -264,6 +289,7 @@ class ThermalScheduler:
                    else pdu_gate.init_filtration)
 
         def make(pkg_in, fill_in) -> SchedulerState:
+            fb = c.degraded_fallback
             return SchedulerState(
                 thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
                 filtration=init_ft(
@@ -274,7 +300,15 @@ class ThermalScheduler:
                 events=jnp.zeros(batch_shape, jnp.int32),
                 pkg=pkg_in,
                 throttled=(jnp.zeros(batch_shape + (c.n_tiles,), bool)
-                           if c.mode == "reactive_poll" else None),
+                           if c.mode == "reactive_poll" or fb else None),
+                # hold-last-value seed = the filtration seed: if the very
+                # first chunk is already faulted the lane holds the same
+                # benign density the ring was primed with
+                rho_last=(jnp.broadcast_to(
+                    jnp.asarray(fill_in, jnp.float32),
+                    batch_shape + (c.n_tiles,)) if fb else None),
+                stale=(jnp.zeros(batch_shape, jnp.int32) if fb else None),
+                degraded=(jnp.zeros(batch_shape, bool) if fb else None),
             )
 
         if shardings is None:
@@ -314,6 +348,7 @@ class ThermalScheduler:
                                 gain=P(*ba, None, None),
                                 eta=P(*ba, None), gain_sum=P(*ba, None),
                                 poll_ticks=P(*ba, None))
+        fb = self.cfg.degraded_fallback
         return SchedulerState(
             thermal=P(*ba, None, None),
             filtration=ft,
@@ -321,8 +356,11 @@ class ThermalScheduler:
             step=P(),
             events=P(*ba),
             pkg=pkg,
-            throttled=(P(*ba, None) if self.cfg.mode == "reactive_poll"
-                       else None),
+            throttled=(P(*ba, None)
+                       if self.cfg.mode == "reactive_poll" or fb else None),
+            rho_last=(P(*ba, None) if fb else None),
+            stale=(P(*ba) if fb else None),
+            degraded=(P(*ba) if fb else None),
         )
 
     def output_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerOutput:
@@ -350,6 +388,26 @@ class ThermalScheduler:
         scheduled; leading dims (if any) must match the state's batch shape."""
         c, fp = self.cfg, self.fp
         rho = jnp.broadcast_to(jnp.asarray(rho), st.freq.shape)
+
+        degraded = stale = None
+        if c.degraded_fallback:
+            # staleness plane: non-finite density entries mark a package
+            # whose hint stream is late/dropped/corrupted.  Hold the last
+            # finite value (the filtration stays warm, so recovery is
+            # immediate once fresh hints resume) and run the per-package
+            # staleness counter with hysteresis.  Fault-free lanes take the
+            # `where` else-branches everywhere, so a clean run bit-matches
+            # a fallback-disabled run.
+            finite = jnp.isfinite(rho)
+            valid = jnp.all(finite, axis=-1)
+            rho = jnp.where(finite, rho, st.rho_last)
+            stale = jnp.where(
+                valid, jnp.maximum(st.stale - 1, 0),
+                jnp.minimum(st.stale + 1,
+                            c.stale_limit_steps + c.recover_steps))
+            degraded = ((st.degraded & (stale > 0))
+                        | (stale >= c.stale_limit_steps))
+
         ft = pdu_gate.observe(st.filtration, rho)
 
         # instantaneous tile power, computed ONCE: it floors the hint below
@@ -410,11 +468,44 @@ class ThermalScheduler:
             hint = (p_now if self.gamma is None
                     else apply_coupling(self.gamma, p_now))
 
-        p = p_now * freq ** c.power_exponent
-        p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
-        thermal_next = thermal.step(poles, st.thermal, p_eff)
-        temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
-        events = st.events + jnp.any(temp > fp.t_crit_c, axis=-1).astype(jnp.int32)
+        throttled = st.throttled
+        if degraded is None:
+            p = p_now * freq ** c.power_exponent
+            p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
+            thermal_next = thermal.step(poles, st.thermal, p_eff)
+            temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+            events = st.events + jnp.any(temp > fp.t_crit_c,
+                                         axis=-1).astype(jnp.int32)
+        else:
+            # merged plant: degraded packages run reactive_poll semantics —
+            # the plant advances at LAST step's frequency, the sensor polls
+            # the post-step junction, and the throttle latch carries the
+            # hysteresis — healthy packages take the v24 law untouched.
+            # The plant steps ONCE, at the per-lane blended frequency.
+            deg_t = degraded[..., None]
+            f_used = jnp.where(deg_t, st.freq, freq)
+            p = p_now * f_used ** c.power_exponent
+            p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
+            thermal_next = thermal.step(poles, st.thermal, p_eff)
+            temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+
+            poll = self.poll_ticks if st.pkg is None else st.pkg.poll_ticks
+            polled = (st.step % poll) == 0
+            trig = (temp >= fp.t_crit_c) & polled
+            cool = (temp <= c.resume_below_c) & polled
+            throttled = jnp.where(deg_t, (st.throttled | trig) & ~cool,
+                                  False)
+            freq = jnp.where(
+                deg_t,
+                jnp.where(throttled, c.throttle_level,
+                          jnp.minimum(st.freq + self.ramp, 1.0)),
+                freq)
+            # degraded lanes count fresh throttle engagements (the §10
+            # baseline statistic); healthy lanes count T_crit crossings
+            events = st.events + jnp.where(
+                degraded, jnp.any(trig & ~st.throttled, axis=-1),
+                jnp.any(temp > fp.t_crit_c, axis=-1)).astype(jnp.int32)
+            hint = jnp.where(deg_t, p_eff, hint)
 
         at_risk = freq < c.straggler_threshold
         balance = freq / jnp.maximum(freq.sum(axis=-1, keepdims=True), 1e-6)
@@ -424,7 +515,12 @@ class ThermalScheduler:
                               balance=balance)
         return SchedulerState(thermal=thermal_next, filtration=ft, freq=freq,
                               step=st.step + 1, events=events,
-                              pkg=st.pkg, throttled=st.throttled), out
+                              pkg=st.pkg, throttled=throttled,
+                              rho_last=(rho if degraded is not None
+                                        else st.rho_last),
+                              stale=stale if stale is not None else st.stale,
+                              degraded=(degraded if degraded is not None
+                                        else st.degraded)), out
 
     def _update_reactive_poll(self, st: SchedulerState, ft, p_now,
                               poles) -> tuple[SchedulerState, SchedulerOutput]:

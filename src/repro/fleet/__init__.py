@@ -4,7 +4,8 @@ Layering: `engine` (backend-agnostic stepping + telemetry) over
 `backends` (vmap / broadcast / sharded execution strategies) under
 `ingest` (streaming serving loop with bounded look-ahead ingest) and
 `distributed_ingest` (the same loop per process of a `jax.distributed`
-multi-host group), with the control plane on top: `registry` (dynamic
+multi-host group) and `faults` (seeded fault injection at the ingest and
+engine boundaries), with the control plane on top: `registry` (dynamic
 membership in power-of-two capacity pools), `alerts` (in-graph per-tenant
 stats + edge-latched alert sinks) and `service` (the resident multi-tenant
 serving service with its HTTP operator API) — see docs/architecture.md and
@@ -17,6 +18,7 @@ from repro.fleet.backends import available_backends, get_backend, register
 from repro.fleet.distributed_ingest import (LaneSpan, distributed_stream,
                                             local_chunk_source, local_lanes)
 from repro.fleet.engine import FleetEngine, FleetSurvey, FleetTelemetry
+from repro.fleet.faults import FaultPlan, HintOutage, HostStall, SensorFault
 from repro.fleet.ingest import (HintQueue, StreamStats, chunk_source,
                                 merge_sources, stream)
 from repro.fleet.registry import CapacityPlan, FleetRegistry, Tenant
@@ -29,4 +31,5 @@ __all__ = ["FleetEngine", "FleetSurvey", "FleetTelemetry",
            "local_lanes",
            "FleetRegistry", "Tenant", "CapacityPlan", "AlertEngine",
            "TenantWindowStats", "tenant_window_stats", "LogSink",
-           "JsonlSink", "WebhookSink", "FleetService", "serve_http"]
+           "JsonlSink", "WebhookSink", "FleetService", "serve_http",
+           "FaultPlan", "HintOutage", "SensorFault", "HostStall"]

@@ -32,6 +32,14 @@ Alarm kinds (keys of the alarms dict / `AlertEvent.kind`):
                     window, scaled by the fingerprint's κ→nm slope
                     (`repro.core.cpo.drift_nm`), exceeded the tenant's
                     optical drift budget `drift_budget_nm`.
+  * ``degraded``  — lanes of the tenant running the reactive degraded-mode
+                    fallback at the end of the window exceeded the
+                    tenant's `degraded_limit` (default 0: ANY degraded
+                    lane alarms; inf disables).
+
+Each crossing yields exactly one ``"event": "fired"`` record on the rising
+edge and one matching ``"event": "cleared"`` record on the falling edge, so
+sinks/operators can tell a resolved incident from a silent one.
 """
 from __future__ import annotations
 
@@ -46,7 +54,7 @@ import jax.numpy as jnp
 __all__ = ["TenantWindowStats", "tenant_window_stats", "AlertEngine",
            "LogSink", "JsonlSink", "WebhookSink", "ALARM_KINDS"]
 
-ALARM_KINDS = ("t_crit", "at_risk", "cpo_drift")
+ALARM_KINDS = ("t_crit", "at_risk", "cpo_drift", "degraded")
 
 
 class TenantWindowStats(NamedTuple):
@@ -61,6 +69,7 @@ class TenantWindowStats(NamedTuple):
     at_risk_frac: jnp.ndarray  # fraction of tile-steps under straggler thr.
     events: jnp.ndarray        # T_crit crossing counter delta over the window
     drift_nm: jnp.ndarray      # worst per-tile CPO drift excursion [nm]
+    degraded_lanes: jnp.ndarray  # int32 — lanes on the reactive fallback
 
 
 def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
@@ -69,6 +78,7 @@ def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
                         n_tenants: int, straggler_threshold: float,
                         kappa_to_nm_per_c: float,
                         thresholds: dict[str, jnp.ndarray],
+                        degraded: jnp.ndarray | None = None,
                         ) -> tuple[TenantWindowStats, dict[str, jnp.ndarray]]:
     """Collapse one flush window into per-tenant stats + alarm levels.
 
@@ -77,7 +87,10 @@ def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
     after the window.  active: [capacity] bool.  tenant_ids: [capacity]
     int32 slot per lane (free lanes = `n_tenants`, the dump segment).
     thresholds: the registry's dense ``{"t_crit_c", "at_risk_limit",
-    "drift_budget_nm"}`` arrays, `[n_tenants]` each, +inf on empty slots.
+    "drift_budget_nm", "degraded_limit"}`` arrays, `[n_tenants]` each,
+    +inf on empty slots.  degraded: optional [capacity] bool — per-lane
+    degraded-fallback flags at the END of the window (None = fallback off,
+    counted as zero everywhere).
 
     Everything here is trace-safe and value-dependent only on TRACED
     operands (mask, ids, thresholds), so membership and threshold edits
@@ -99,6 +112,8 @@ def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
     # (max − min over steps), then worst tile per lane — ΔT · κ in nm
     lane_dt = (temps.max(axis=0) - temps.min(axis=0)).max(axis=-1)
     lane_ev = (events1 - events0).astype(jnp.float32)
+    lane_deg = (jnp.zeros(lane_peak.shape, jnp.float32) if degraded is None
+                else degraded.astype(jnp.float32))
 
     n_lanes = seg_sum(jnp.ones_like(lane_peak)).astype(jnp.int32)
     denom = jnp.maximum(n_lanes.astype(freqs.dtype), 1) * tile_steps
@@ -110,6 +125,7 @@ def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
         at_risk_frac=seg_sum(lane_risk) / denom,
         events=seg_sum(lane_ev).astype(jnp.int32),
         drift_nm=seg_max(lane_dt) * kappa_to_nm_per_c,
+        degraded_lanes=seg_sum(lane_deg).astype(jnp.int32),
     )
     occupied = n_lanes > 0                     # empty slots can't alarm
     alarms = {
@@ -118,6 +134,8 @@ def tenant_window_stats(temps: jnp.ndarray, freqs: jnp.ndarray,
                                > thresholds["at_risk_limit"]),
         "cpo_drift": occupied & (stats.drift_nm
                                  > thresholds["drift_budget_nm"]),
+        "degraded": occupied & (stats.degraded_lanes.astype(jnp.float32)
+                                > thresholds["degraded_limit"]),
     }
     return stats, alarms
 
@@ -133,8 +151,11 @@ class LogSink:
     def emit(self, event: dict) -> None:
         self.events.append(event)
         out = self.stream or sys.stdout
-        print(f"[alert] flush={event['flush']} tenant={event['tenant']} "
-              f"{event['kind']}: {event['value']:.4g} > "
+        rel = ">" if event.get("event", "fired") == "fired" else "<="
+        tag = ("alert" if event.get("event", "fired") == "fired"
+               else "alert cleared")
+        print(f"[{tag}] flush={event['flush']} tenant={event['tenant']} "
+              f"{event['kind']}: {event['value']:.4g} {rel} "
               f"{event['limit']:.4g}", file=out)
 
 
@@ -207,11 +228,14 @@ class WebhookSink:
 
 
 class AlertEngine:
-    """Rising-edge latch over per-flush alarm levels: each (tenant, kind)
-    fires exactly once when its alarm goes False→True and cannot fire again
-    until the level clears — a chunked soak whose condition persists across
-    many flush windows (including a shorter tail window) produces ONE
-    event, not one per flush."""
+    """Edge latch over per-flush alarm levels: each (tenant, kind) emits one
+    ``"event": "fired"`` record when its alarm goes False→True and cannot
+    fire again until the level clears — a chunked soak whose condition
+    persists across many flush windows (including a shorter tail window)
+    produces ONE event, not one per flush.  The falling edge emits one
+    matching ``"event": "cleared"`` record, so every incident is a
+    fired/cleared pair and a resolved alarm is distinguishable from one
+    that is still firing."""
 
     def __init__(self, sinks=()):
         self.sinks = list(sinks)
@@ -219,16 +243,18 @@ class AlertEngine:
         self._latched: dict[tuple[str, str], bool] = {}
 
     _VALUE_FIELD = {"t_crit": "temp_peak_c", "at_risk": "at_risk_frac",
-                    "cpo_drift": "drift_nm"}
+                    "cpo_drift": "drift_nm", "degraded": "degraded_lanes"}
     _LIMIT_FIELD = {"t_crit": "t_crit_c", "at_risk": "at_risk_limit",
-                    "cpo_drift": "drift_budget_nm"}
+                    "cpo_drift": "drift_budget_nm",
+                    "degraded": "degraded_limit"}
 
     def process(self, *, flush: int, step: int, slot_names, stats,
                 alarms, thresholds) -> list[dict]:
         """Evaluate one flush's host-side alarm levels; returns the events
-        that fired.  `stats`/`alarms`/`thresholds` are host values (numpy
-        arrays / dicts as fetched in the flush's device_get)."""
-        fired = []
+        emitted (rising-edge ``fired`` and falling-edge ``cleared``).
+        `stats`/`alarms`/`thresholds` are host values (numpy arrays /
+        dicts as fetched in the flush's device_get)."""
+        emitted = []
         for kind in ALARM_KINDS:
             flags = alarms[kind]
             values = stats[self._VALUE_FIELD[kind]]
@@ -238,19 +264,21 @@ class AlertEngine:
                     continue
                 level = bool(flags[slot])
                 key = (name, kind)
-                if level and not self._latched.get(key, False):
-                    fired.append({
+                prev = self._latched.get(key, False)
+                if level != prev:
+                    emitted.append({
                         "flush": int(flush), "step": int(step),
                         "tenant": name, "kind": kind,
+                        "event": "fired" if level else "cleared",
                         "value": float(values[slot]),
                         "limit": float(limits[slot]),
                     })
                 self._latched[key] = level
-        for ev in fired:
+        for ev in emitted:
             self.history.append(ev)
             for sink in self.sinks:
                 sink.emit(ev)
-        return fired
+        return emitted
 
     def reset(self) -> None:
         self._latched.clear()

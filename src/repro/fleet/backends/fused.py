@@ -79,6 +79,10 @@ class FusedBackend(FleetBackend):
             resume_below_c=float(c.resume_below_c),
             ramp=float(sched.ramp),
             poll_ticks=int(sched.poll_ticks),
+            # degraded fallback: per-package mode rows ride in VMEM
+            fallback=bool(c.degraded_fallback),
+            stale_limit=int(c.stale_limit_steps),
+            recover=int(c.recover_steps),
         )
 
     # -- state ------------------------------------------------------------
@@ -129,10 +133,14 @@ class FusedBackend(FleetBackend):
         het = None if state.pkg is None else self._het_rows(state.pkg)
         thr0 = (None if state.throttled is None
                 else state.throttled.astype(jnp.float32).T)
+        fb0 = (None if state.degraded is None
+               else (state.rho_last.astype(jnp.float32).T,
+                     state.stale.astype(jnp.float32),
+                     state.degraded.astype(jnp.float32)))
 
         # tiles-on-sublanes, packages-on-lanes layout
         tnl = lambda x: jnp.moveaxis(x, -1, -2)            # [.., n, t]->[.., t, n]
-        temps, freqs, buf, th, ev, thr = fleet_step(
+        temps, freqs, buf, th, ev, thr, fb = fleet_step(
             tnl(rho_trace),
             jnp.transpose(buf0, (1, 2, 0)),                # [W, tiles, n]
             jnp.transpose(state.thermal, (2, 1, 0)),       # [poles, tiles, n]
@@ -144,6 +152,7 @@ class FusedBackend(FleetBackend):
             het=het,
             thr0=thr0,
             step0=state.step,
+            fb0=fb0,
             block_packages=self.block_packages,
             time_chunk=self.time_chunk,
             interpret=self.interpret,
@@ -164,6 +173,9 @@ class FusedBackend(FleetBackend):
             events=ev[0].astype(state.events.dtype),
             pkg=state.pkg,
             throttled=None if thr is None else (thr.T > 0.5),
+            rho_last=None if fb is None else fb[0].T,
+            stale=None if fb is None else fb[1].astype(jnp.int32),
+            degraded=None if fb is None else (fb[2] > 0.5),
         )
         return state, tnl(temps), tnl(freqs)
 

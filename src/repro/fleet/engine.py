@@ -102,12 +102,16 @@ class FleetTelemetry(NamedTuple):
     released_mtps: jnp.ndarray   # Σ R_tok(ρ)·f — compute actually released
     throttled_mtps: jnp.ndarray  # Σ R_tok(ρ)·(1−f) — compute held back
     at_risk_frac: jnp.ndarray    # fraction of tiles under straggler threshold
+    # active lanes running the reactive fallback (degraded_fallback mode;
+    # 0 whenever the fallback is off) — window reduce keeps the peak
+    degraded_count: jnp.ndarray = jnp.zeros((), jnp.int32)  # int32
 
     def as_dict(self) -> dict[str, float]:
         """Host-side scalar dict — ONE device sync for the whole record
         (a single `jax.device_get` of the pytree), not one per field."""
         host = jax.device_get(self)._asdict()
         host["n_packages"] = int(host["n_packages"])
+        host["degraded_count"] = int(host["degraded_count"])
         return {k: (v if isinstance(v, int) else float(v))
                 for k, v in host.items()}
 
@@ -136,6 +140,7 @@ class FleetTelemetry(NamedTuple):
             released_mtps=self.released_mtps.mean(),
             throttled_mtps=self.throttled_mtps.mean(),
             at_risk_frac=self.at_risk_frac.mean(),
+            degraded_count=self.degraded_count.max(),   # window peak
         )
 
 
@@ -177,7 +182,8 @@ class FleetEngine:
                  fp: Fingerprint = FINGERPRINT,
                  backend: str | FleetBackend = "broadcast",
                  devices: int | None = None,
-                 donate_state: bool | None = None):
+                 donate_state: bool | None = None,
+                 debug_nan: bool = False):
         # construct-per-instance: a shared default-argument instance would
         # alias every default-constructed engine onto ONE config object
         self.cfg = cfg = SchedulerConfig() if cfg is None else cfg
@@ -198,6 +204,12 @@ class FleetEngine:
         if donate_state is None:
             donate_state = jax.default_backend() != "cpu"
         self.donate_state = donate_state
+        # debug-mode NaN/Inf guard (tests/chaos): every public entry point
+        # host-checks the returned state + telemetry and raises with the
+        # offending lane indices instead of letting NaNs propagate silently
+        # into BENCH_*.json or the alert reductions.  Off by default — it
+        # forces a host sync per call.
+        self.debug_nan = debug_nan
         dn = (0,) if donate_state else ()
         self._step = jax.jit(self._step_impl, donate_argnums=dn)
         self._run = jax.jit(self._run_impl, donate_argnums=dn)
@@ -241,8 +253,10 @@ class FleetEngine:
         docstring's mask contract).
         """
         self._guard_donated(state)
-        return self._step(state, self._rho_fleet(state, rho),
-                          self._active(state, active))
+        state, out, telem = self._step(state, self._rho_fleet(state, rho),
+                                       self._active(state, active))
+        self._debug_check_finite(state, telem)
+        return state, out, telem
 
     def run(self, state: SchedulerState, rho_trace, active=None) -> tuple[
             SchedulerState, FleetTelemetry]:
@@ -291,6 +305,7 @@ class FleetEngine:
                       jax.tree_util.tree_map(
                           lambda a, b: jnp.concatenate([a, b[None]]),
                           telems, tail))
+        self._debug_check_finite(state, telems)
         return state, telems
 
     def run_block(self, state: SchedulerState, rho_trace, active=None
@@ -300,7 +315,10 @@ class FleetEngine:
         ingest loop's unit of work — one host sync per block)."""
         self._guard_donated(state)
         self._check_trace(rho_trace)
-        return self._run_block(state, rho_trace, self._active(state, active))
+        state, telem = self._run_block(state, rho_trace,
+                                       self._active(state, active))
+        self._debug_check_finite(state, telem)
+        return state, telem
 
     def run_survey(self, state: SchedulerState, rho_trace, burn_in: int = 0,
                    chunk: int = 1024) -> tuple[SchedulerState, "FleetSurvey"]:
@@ -388,6 +406,36 @@ class FleetEngine:
                     "reusing the old reference, or construct the engine "
                     "with donate_state=False")
 
+    def _debug_check_finite(self, state: SchedulerState, telem) -> None:
+        """``debug_nan`` guard: host-check the returned state + telemetry
+        for NaN/Inf and raise with the offending lane indices.
+
+        Degraded-fallback fleets sanitise faulty sensor words in-graph, so
+        with the fallback on this should NEVER fire — a trip means a fault
+        escaped the in-band containment.  Skipped on process-spanning
+        meshes (the state is not fully addressable on any one host)."""
+        if not self.debug_nan or telem is None:
+            return
+        import numpy as np
+        for name in ("freq", "thermal"):
+            arr = getattr(state, name)
+            if isinstance(arr, jax.Array) and not arr.is_fully_addressable:
+                break
+            a = np.asarray(jax.device_get(arr))
+            if not np.isfinite(a).all():
+                lanes = np.unique(np.argwhere(~np.isfinite(a))[:, :1])
+                raise ValueError(
+                    f"debug_nan: non-finite state.{name} on lane(s) "
+                    f"{lanes.tolist()} — a sensor fault escaped in-band "
+                    f"containment (is degraded_fallback on?)")
+        host = jax.device_get(telem)._asdict()
+        bad = [k for k, v in host.items()
+               if not np.isfinite(np.asarray(v)).all()]
+        if bad:
+            raise ValueError(
+                f"debug_nan: non-finite telemetry field(s) {bad} — "
+                f"NaN/Inf would have propagated into flush records")
+
     def _active(self, state: SchedulerState, active):
         """Validate/place an optional [n_packages] bool lane mask.
 
@@ -427,8 +475,16 @@ class FleetEngine:
             axis=-1)[..., 0]
         return take(lo) * (1.0 - frac) + take(hi) * frac
 
-    def _masked_step_telemetry(self, rho, out, prev_events, events, active
-                               ) -> FleetTelemetry:
+    def _degraded_count(self, state: SchedulerState, active=None):
+        """Active lanes currently on the reactive fallback (int32 scalar;
+        0 whenever degraded_fallback is off)."""
+        if state.degraded is None:
+            return jnp.zeros((), jnp.int32)
+        deg = state.degraded if active is None else (state.degraded & active)
+        return deg.sum().astype(jnp.int32)
+
+    def _masked_step_telemetry(self, rho, out, prev_events, events, active,
+                               degraded_count) -> FleetTelemetry:
         """One step's fleet telemetry reduced over the active lanes only —
         padded lanes cannot touch the percentiles, `freq_min`,
         `at_risk_frac` or the event counters."""
@@ -440,9 +496,11 @@ class FleetEngine:
         freq = out.freq.reshape(-1)
         sorted_t = jnp.sort(jnp.where(mf, temp, jnp.inf))
         mu = jnp.where(mf, temp, 0.0).sum() / fcnt
-        rtok = rtok_from_rho(rho).reshape(-1)
+        rtok = jnp.broadcast_to(rtok_from_rho(rho),
+                                out.temp_c.shape).reshape(-1)
         ev_total = jnp.where(active, events, 0).sum()
         return FleetTelemetry(
+            degraded_count=degraded_count,
             n_packages=active.sum().astype(jnp.int32),
             events_total=ev_total,
             events_step=ev_total - prev_events,
@@ -463,11 +521,18 @@ class FleetEngine:
         prev_events = (state.events.sum() if active is None
                        else jnp.where(active, state.events, 0).sum())
         state, out = self.backend_impl.update(state, rho)
+        if self.cfg.degraded_fallback:
+            # telemetry must reduce over the SANITISED density the controller
+            # actually acted on (post-update rho_last == this step's
+            # hold-last-value fill), never raw NaN/Inf sensor words
+            rho = state.rho_last
         if active is not None:
             return state, out, self._masked_step_telemetry(
-                rho, out, prev_events, state.events, active)
+                rho, out, prev_events, state.events, active,
+                self._degraded_count(state, active))
         rtok = rtok_from_rho(rho)                    # [n_packages, n_tiles]
         telem = FleetTelemetry(
+            degraded_count=self._degraded_count(state),
             n_packages=jnp.asarray(state.freq.shape[0], jnp.int32),
             events_total=state.events.sum(),
             events_step=state.events.sum() - prev_events,
@@ -561,6 +626,56 @@ class FleetEngine:
         _, ev_step = jax.lax.scan(tick, state0.throttled, (temps, steps))
         return ev_step
 
+    def _fallback_replay(self, state0: SchedulerState, rho_trace, temps,
+                         active=None):
+        """Replay the degraded-fallback recurrence of
+        `ThermalScheduler.update` over a chunk's raw density trace and
+        streamed temps: ([T] event counts, [T] degraded-lane counts,
+        [T, n, tiles] sanitised rho).
+
+        Mirrors the staleness counter / hysteresis latch / per-mode event
+        plane the kernel advances in VMEM, starting from the pre-block
+        state, so trace-derived telemetry counts the SAME events (fresh
+        throttle engagements on degraded lanes, T_crit crossings on healthy
+        ones) and the downstream MTPS reductions never see a non-finite
+        density word."""
+        c, fp = self.cfg, self.fp
+        poll = (self.sched.poll_ticks if state0.pkg is None
+                else state0.pkg.poll_ticks)
+        t = temps.shape[0]
+        steps = state0.step + jnp.arange(t)
+        lim, rec = c.stale_limit_steps, c.recover_steps
+
+        def tick(carry, x):
+            rho_last, stale, deg, thr = carry
+            rho, temp, k = x
+            finite = jnp.isfinite(rho)
+            valid = jnp.all(finite, axis=-1)
+            rho_safe = jnp.where(finite, rho, rho_last)
+            stale_n = jnp.where(valid, jnp.maximum(stale - 1, 0),
+                                jnp.minimum(stale + 1, lim + rec))
+            deg_n = (deg & (stale_n > 0)) | (stale_n >= lim)
+            polled = (k % poll) == 0
+            trig = (temp >= fp.t_crit_c) & polled
+            cool = (temp <= c.resume_below_c) & polled
+            deg_t = deg_n[..., None]
+            thr_n = jnp.where(deg_t, (thr | trig) & ~cool, False)
+            ev = jnp.where(deg_n, jnp.any(trig & ~thr, axis=-1),
+                           jnp.any(temp > fp.t_crit_c, axis=-1))
+            deg_vis = deg_n
+            if active is not None:
+                ev = ev & active
+                deg_vis = deg_n & active
+            return (rho_safe, stale_n, deg_n, thr_n), (
+                ev.sum().astype(jnp.int32),
+                deg_vis.sum().astype(jnp.int32), rho_safe)
+
+        carry0 = (state0.rho_last, state0.stale, state0.degraded,
+                  state0.throttled)
+        _, (ev_step, deg_count, rho_safe) = jax.lax.scan(
+            tick, carry0, (rho_trace, temps, steps))
+        return ev_step, deg_count, rho_safe
+
     def _telemetry_from_traces(self, rho_trace, temps, freqs, prev_events,
                                state0: SchedulerState,
                                active=None) -> FleetTelemetry:
@@ -574,8 +689,15 @@ class FleetEngine:
         (padded capacity-pool lanes are invisible to the operator)."""
         t, n = temps.shape[0], temps.shape[1]
         flat = lambda x: x.reshape(t, -1)
+        deg_count = jnp.zeros((t,), jnp.int32)
         if self.cfg.mode == "reactive_poll":
             ev_step = self._reactive_poll_events(state0, temps, active)
+        elif self.cfg.degraded_fallback:
+            # one recurrence pass yields the mixed-mode event plane, the
+            # degraded-lane counts AND the sanitised density the MTPS
+            # reductions below must see instead of raw NaN/Inf words
+            ev_step, deg_count, rho_trace = self._fallback_replay(
+                state0, rho_trace, temps, active)
         else:
             crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)  # [T, n]
             if active is not None:
@@ -584,6 +706,7 @@ class FleetEngine:
         rtok = rtok_from_rho(rho_trace)
         if active is None:
             return FleetTelemetry(
+                degraded_count=deg_count,
                 n_packages=jnp.full((t,), n, jnp.int32),
                 events_total=prev_events + jnp.cumsum(ev_step),
                 events_step=ev_step,
@@ -606,6 +729,7 @@ class FleetEngine:
         mu = jnp.where(mf, tf, 0.0).sum(axis=1) / fcnt
         msum = lambda x: jnp.where(mf, x, 0.0).sum(axis=1)
         return FleetTelemetry(
+            degraded_count=deg_count,
             n_packages=jnp.full((t,), 1, jnp.int32)
             * active.sum().astype(jnp.int32),
             events_total=prev_events + jnp.cumsum(ev_step),

@@ -54,6 +54,7 @@ class Tenant:
     t_crit_c: float = float("inf")
     at_risk_limit: float = float("inf")
     drift_budget_nm: float = float("inf")
+    degraded_limit: float = float("inf")   # max lanes on reactive fallback
     packages: set = field(default_factory=set)
 
 
@@ -111,7 +112,8 @@ class FleetRegistry:
 
     def set_thresholds(self, name: str, *, t_crit_c: float | None = None,
                        at_risk_limit: float | None = None,
-                       drift_budget_nm: float | None = None) -> Tenant:
+                       drift_budget_nm: float | None = None,
+                       degraded_limit: float | None = None) -> Tenant:
         t = self.tenant(name)
         if t_crit_c is not None:
             t.t_crit_c = float(t_crit_c)
@@ -119,6 +121,8 @@ class FleetRegistry:
             t.at_risk_limit = float(at_risk_limit)
         if drift_budget_nm is not None:
             t.drift_budget_nm = float(drift_budget_nm)
+        if degraded_limit is not None:
+            t.degraded_limit = float(degraded_limit)
         return t
 
     @property
@@ -222,13 +226,15 @@ class FleetRegistry:
         """Dense [max_tenants] float32 threshold arrays, +inf on empty
         slots — traced operands, so editing them never recompiles."""
         inf = np.full(self.max_tenants, np.inf, np.float32)
-        t_crit, at_risk, drift = inf.copy(), inf.copy(), inf.copy()
+        t_crit, at_risk, drift, deg = (inf.copy(), inf.copy(), inf.copy(),
+                                       inf.copy())
         for t in self._tenants.values():
             t_crit[t.slot] = t.t_crit_c
             at_risk[t.slot] = t.at_risk_limit
             drift[t.slot] = t.drift_budget_nm
+            deg[t.slot] = t.degraded_limit
         return {"t_crit_c": t_crit, "at_risk_limit": at_risk,
-                "drift_budget_nm": drift}
+                "drift_budget_nm": drift, "degraded_limit": deg}
 
     def slot_names(self) -> list[str | None]:
         """[max_tenants] tenant name per slot (None = empty)."""
@@ -247,6 +253,7 @@ class FleetRegistry:
                                  "t_crit_c": t.t_crit_c,
                                  "at_risk_limit": t.at_risk_limit,
                                  "drift_budget_nm": t.drift_budget_nm,
+                                 "degraded_limit": t.degraded_limit,
                                  "packages": sorted(t.packages)}
                         for t in self._tenants.values()},
         }

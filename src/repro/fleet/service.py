@@ -36,8 +36,19 @@ one jitted flush program (engine `block_traces` → masked window telemetry
 → per-tenant stats/alarms), fetch everything in a SINGLE host sync, append
 a replayable record to the `TelemetryLog`, and push alarm edges through
 the `AlertEngine` sinks.  `replay()` re-drives a recorded JSONL stream
-through the existing `HintQueue` ingest path and returns the reproduced
-telemetry.
+through the existing `HintQueue` ingest path — including any recorded
+capacity transitions, via each flush record's surgery-op journal — and
+returns the reproduced telemetry.
+
+Robustness (docs/serving.md "Fault tolerance & recovery"):
+``snapshot_dir=...`` + ``snapshot_every=N`` takes crash-consistent async
+snapshots (engine state through `repro.checkpoint.CheckpointManager`,
+host bookkeeping in the manifest) and journals every membership/threshold
+op to ``journal.jsonl``; `FleetService.restore()` resumes a killed
+service ≤1e-5-equivalent to an uninterrupted run.  ``heartbeat_timeout_s``
+arms a stalled-flush watchdog surfaced at GET /healthz, and a fleet run
+with `SchedulerConfig(degraded_fallback=True)` reports degraded-lane
+counts per flush plus a per-tenant ``degraded`` alert kind.
 
 Workloads are synthesised per attached package by default; a tenant can
 instead POST real density chunks to `/ingest` — they queue in a bounded
@@ -53,7 +64,9 @@ operator-facing in docs/serving.md:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
@@ -88,9 +101,13 @@ class FleetService:
                  min_capacity: int = 4, max_tenants: int = 8,
                  flush_every: int = 50, pad_rho: float = 1.0,
                  sinks=(), log_capacity: int = 4096, seed: int = 0,
-                 feed_capacity: int = 4):
-        self.engine = FleetEngine(cfg, fp, backend=backend)
+                 feed_capacity: int = 4,
+                 snapshot_dir: str | None = None, snapshot_every: int = 0,
+                 heartbeat_timeout_s: float = 0.0, debug_nan: bool = False):
+        self.engine = FleetEngine(cfg, fp, backend=backend,
+                                  debug_nan=debug_nan)
         self.cfg, self.fp = self.engine.cfg, fp
+        self.backend_name = backend
         self.registry = FleetRegistry(min_capacity=min_capacity,
                                       max_tenants=max_tenants)
         self.alerts = AlertEngine(sinks=sinks)
@@ -108,8 +125,30 @@ class FleetService:
         self._pkg_key: dict[str, int] = {}      # package -> key counter base
         self._next_key = 0
         self._attached_since_flush: list[int] = []
+        self._surgery_since_flush: list[dict] = []   # ordered per-flush ops
         self._templates: dict[int, SchedulerState] = {}
         self._shutdown = threading.Event()
+        # crash-consistent recovery: periodic async snapshots of the whole
+        # service (engine state + registry/counters in the manifest) plus a
+        # JSONL journal of every membership/threshold op since boot —
+        # `FleetService.restore()` replays journal entries past the snapshot
+        # to resume ≤1e-5-equivalent to an uninterrupted run
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        self._ckpt = None
+        self._journal_seq = 0
+        self._restoring = False    # suppresses journaling during replay
+        self._warmed_max = 0
+        self.last_degraded = 0     # degraded-lane count of the last flush
+        if snapshot_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+            self._ckpt = CheckpointManager(snapshot_dir)
+            self._journal_path = os.path.join(snapshot_dir, "journal.jsonl")
+        # stalled-flush watchdog (GET /healthz surfaces `stalled`); 0 = off
+        self.heartbeat = None
+        if heartbeat_timeout_s > 0:
+            from repro.distributed.fault_tolerance import Heartbeat
+            self.heartbeat = Heartbeat(timeout_s=heartbeat_timeout_s)
         dn = (0,) if self.engine.donate_state else ()
         self._flush_jit = jax.jit(self._flush_impl, donate_argnums=dn)
         self._attach_jit = jax.jit(self._attach_op, donate_argnums=dn)
@@ -179,9 +218,32 @@ class FleetService:
         if plan.kind == "grow":
             self.state = self._grow_jit(self.state,
                                         self._template(plan.new_capacity))
+            self._surgery_since_flush.append(
+                {"op": "grow", "old": plan.old_capacity,
+                 "new": plan.new_capacity})
         elif plan.kind == "shrink":
             perm = jnp.asarray(np.asarray(plan.perm, np.int32))
             self.state = self._shrink_jit(self.state, perm)
+            self._surgery_since_flush.append(
+                {"op": "shrink", "old": plan.old_capacity,
+                 "new": plan.new_capacity,
+                 "perm": [int(p) for p in plan.perm]})
+
+    # ----------------------------------------------------------- journaling
+    def _journal(self, entry: dict) -> None:
+        """Append one membership/threshold op to the surgery journal —
+        crash-consistent bookkeeping between snapshots.  Entries carry a
+        monotonic ``seq`` and the flush count they happened AFTER, so
+        `restore()` can re-drive exactly the post-snapshot suffix at the
+        right points of the re-synthesised flush stream."""
+        if self._ckpt is None or self._restoring:
+            return
+        entry = {"seq": self._journal_seq, "flush": self.flushes, **entry}
+        self._journal_seq += 1
+        with open(self._journal_path, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
 
     # ------------------------------------------------------------ membership
     def attach(self, package: str, tenant: str = "default",
@@ -201,6 +263,9 @@ class FleetService:
             self._pkg_key[package] = self._next_key
             self._next_key += 1
             self._attached_since_flush.append(lane)
+            self._surgery_since_flush.append({"op": "attach", "lane": lane})
+            self._journal({"op": "attach", "package": package,
+                           "tenant": tenant, "workload": kind})
             return {"package": package, "tenant": tenant, "kind": kind,
                     "lane": lane, "capacity": self.registry.capacity,
                     "plan": plan.kind}
@@ -219,15 +284,20 @@ class FleetService:
             else:
                 self._attached_since_flush = [
                     l for l in self._attached_since_flush if l != lane]
+            self._journal({"op": "detach", "package": package})
             return {"package": package, "lane": lane,
                     "capacity": self.registry.capacity, "plan": plan.kind}
 
     def set_thresholds(self, tenant: str, **kw) -> dict:
         with self.lock:
             t = self.registry.set_thresholds(tenant, **kw)
+            self._journal({"op": "thresholds", "tenant": tenant,
+                           "kw": {k: float(v) for k, v in kw.items()
+                                  if v is not None}})
             return {"tenant": t.name, "t_crit_c": t.t_crit_c,
                     "at_risk_limit": t.at_risk_limit,
-                    "drift_budget_nm": t.drift_budget_nm}
+                    "drift_budget_nm": t.drift_budget_nm,
+                    "degraded_limit": t.degraded_limit}
 
     # ---------------------------------------------------------------- ingest
     def ingest(self, tenant: str, chunk) -> dict:
@@ -280,7 +350,8 @@ class FleetService:
         stats, alarms = tenant_window_stats(
             temps, freqs, ev0_lane, state.events, active, tenant_ids,
             self.registry.max_tenants, self.cfg.straggler_threshold,
-            self.fp.kappa_to_nm_per_c, thresholds)
+            self.fp.kappa_to_nm_per_c, thresholds,
+            degraded=state.degraded)
         return state, telem, stats, alarms
 
     def _chunk(self, n_steps: int) -> tuple[np.ndarray, list[str]]:
@@ -349,7 +420,8 @@ class FleetService:
                 thresholds=self.registry.threshold_arrays())
             # coerce numpy leaves to plain python here — TelemetryLog's
             # _jsonable does not recurse into the nested dicts
-            tdict = {k: (int(v) if k == "n_packages" else float(v))
+            tdict = {k: (int(v) if k in ("n_packages", "degraded_count")
+                         else float(v))
                      for k, v in telem_h._asdict().items()}
             sdict = stats_h._asdict()
             record = {
@@ -357,9 +429,11 @@ class FleetService:
                 "capacity": cap,
                 "active": self.registry.active_mask().astype(int).tolist(),
                 "attached": [int(l) for l in self._attached_since_flush],
+                "surgery": list(self._surgery_since_flush),
                 "telemetry": tdict,
                 "tenants": {
-                    names[s]: {k: (int(v[s]) if k in ("n_lanes", "events")
+                    names[s]: {k: (int(v[s]) if k in ("n_lanes", "events",
+                                                      "degraded_lanes")
                                    else float(v[s]))
                                for k, v in sdict.items()}
                     for s in range(self.registry.max_tenants)
@@ -370,8 +444,16 @@ class FleetService:
             }
             self.log.record(step0, **record)
             self._attached_since_flush = []
+            self._surgery_since_flush = []
             self.flushes += 1
             self.steps += chunk.shape[0]
+            self.last_degraded = tdict.get("degraded_count", 0)
+            if self.heartbeat is not None:
+                self.heartbeat.beat()
+            if (self._ckpt is not None and self.snapshot_every
+                    and not self._restoring
+                    and self.flushes % self.snapshot_every == 0):
+                self.save_snapshot(blocking=False)
             return record
 
     # ---------------------------------------------------------------- warmup
@@ -384,6 +466,7 @@ class FleetService:
         tests/test_fleet_service.py via `jax.monitoring`)."""
         from repro.fleet.registry import next_pow2
         with self.lock:
+            self._warmed_max = max(self._warmed_max, int(max_packages))
             caps = []
             c = self.registry.min_capacity
             top = max(self.registry.min_capacity,
@@ -413,18 +496,170 @@ class FleetService:
                 self._shrink_jit(st, perm)
             return len(caps)
 
+    # ------------------------------------------------------------- snapshots
+    def save_snapshot(self, blocking: bool = False) -> int:
+        """Snapshot the WHOLE service: the engine state pytree through
+        `CheckpointManager` (atomic rename, async by default) with every
+        piece of host-side bookkeeping — registry membership, tenant
+        thresholds, workload assignments, flush/step counters, alert
+        latches, the journal cursor — in the manifest's ``extra`` dict.
+        Returns the snapshot's step id."""
+        if self._ckpt is None:
+            raise ValueError("snapshots need FleetService(snapshot_dir=...)")
+        with self.lock:
+            r = self.registry
+            meta = {
+                "cfg": dataclasses.asdict(self.cfg),
+                "backend": self.backend_name,
+                "service": {"min_capacity": r.min_capacity,
+                            "max_tenants": r.max_tenants,
+                            "flush_every": self.flush_every,
+                            "pad_rho": self.pad_rho,
+                            "seed": self._seed,
+                            "feed_capacity": self.feed_capacity,
+                            "snapshot_every": self.snapshot_every},
+                "registry": {
+                    "capacity": r.capacity,
+                    "lane_of": dict(r._lane_of),
+                    "tenant_of": dict(r._tenant_of),
+                    "free": list(r._free),     # pop ORDER matters: lane
+                    #          assignment must resume deterministically
+                    "tenants": {t.name: {
+                        "slot": t.slot, "t_crit_c": t.t_crit_c,
+                        "at_risk_limit": t.at_risk_limit,
+                        "drift_budget_nm": t.drift_budget_nm,
+                        "degraded_limit": t.degraded_limit,
+                        "packages": sorted(t.packages)}
+                        for t in r._tenants.values()},
+                },
+                "kind_of": dict(self._kind_of),
+                "pkg_key": dict(self._pkg_key),
+                "next_key": self._next_key,
+                "flushes": self.flushes, "steps": self.steps,
+                "journal_seq": self._journal_seq,
+                "latched": [[name, kind] for (name, kind), v
+                            in self.alerts._latched.items() if v],
+                "warmed_max": self._warmed_max,
+            }
+            self._ckpt.save(self.steps, self.state, blocking=blocking,
+                            extra=meta)
+            return self.steps
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, *, sinks=(),
+                debug_nan: bool = False, heartbeat_timeout_s: float = 0.0,
+                fp: Fingerprint = FINGERPRINT) -> "FleetService":
+        """Resume a killed service from its newest snapshot + journal.
+
+        Rebuilds the service from the manifest's metadata (config, backend,
+        registry membership, counters, alert latches), restores the engine
+        state pytree, re-warms the compiled-program cache to the snapshot's
+        warmup horizon, then re-drives every journaled membership/threshold
+        op recorded AFTER the snapshot — interleaved with re-synthesised
+        flushes at the journal's flush cursors, which the deterministic
+        per-package workload keys make bit-identical to the lost originals.
+        The resumed stream is ≤1e-5-equivalent to an uninterrupted run
+        (gated in tests/test_fleet_service_recovery.py).  Tenant-POSTed
+        `/ingest` chunks that were queued but unflushed at the crash are
+        NOT recovered — hints are advisory; the affected lanes replay their
+        synthetic workloads instead."""
+        from repro.checkpoint.manager import CheckpointManager
+        ckpt = CheckpointManager(snapshot_dir)
+        steps = ckpt.steps()
+        if not steps:
+            raise FileNotFoundError(
+                f"no complete snapshot under {snapshot_dir!r}")
+        step = steps[-1]
+        meta = ckpt.manifest(step).get("extra")
+        if meta is None:
+            raise ValueError(
+                f"snapshot step {step} carries no service metadata "
+                f"(was it written by FleetService.save_snapshot?)")
+        svc = cls(SchedulerConfig(**meta["cfg"]), fp,
+                  backend=meta["backend"], sinks=sinks,
+                  snapshot_dir=snapshot_dir, debug_nan=debug_nan,
+                  heartbeat_timeout_s=heartbeat_timeout_s,
+                  **meta["service"])
+        from repro.fleet.registry import Tenant
+        r, reg = svc.registry, meta["registry"]
+        r.capacity = int(reg["capacity"])
+        r._lane_of = {p: int(l) for p, l in reg["lane_of"].items()}
+        r._tenant_of = dict(reg["tenant_of"])
+        r._free = [int(l) for l in reg["free"]]
+        r._tenants = {
+            name: Tenant(name=name, slot=int(t["slot"]),
+                         t_crit_c=float(t["t_crit_c"]),
+                         at_risk_limit=float(t["at_risk_limit"]),
+                         drift_budget_nm=float(t["drift_budget_nm"]),
+                         degraded_limit=float(t.get("degraded_limit",
+                                                    float("inf"))),
+                         packages=set(t["packages"]))
+            for name, t in reg["tenants"].items()}
+        svc._kind_of = dict(meta["kind_of"])
+        svc._pkg_key = {p: int(k) for p, k in meta["pkg_key"].items()}
+        svc._next_key = int(meta["next_key"])
+        svc.flushes = int(meta["flushes"])
+        svc.steps = int(meta["steps"])
+        svc._journal_seq = int(meta["journal_seq"])
+        svc._warmed_max = int(meta.get("warmed_max", 0))
+        for name, kind in meta.get("latched", []):
+            svc.alerts._latched[(name, kind)] = True
+        svc.state = ckpt.restore(step, template=svc._fresh(r.capacity))
+        if svc._warmed_max:        # compile cache back before any stepping
+            svc.warmup(svc._warmed_max)
+        svc._replay_journal()
+        return svc
+
+    def _replay_journal(self) -> None:
+        """Apply journal entries with ``seq >= journal_seq``: tick to each
+        entry's flush cursor (deterministic chunk synthesis regenerates the
+        lost windows exactly), then re-apply the op.  Journaling and
+        snapshots are suppressed for the duration — the entries are already
+        on disk."""
+        path = getattr(self, "_journal_path", None)
+        if path is None or not os.path.exists(path):
+            return
+        entries = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    e = json.loads(line)
+                    if e["seq"] >= self._journal_seq:
+                        entries.append(e)
+        if not entries:
+            return
+        self._restoring = True
+        try:
+            for e in sorted(entries, key=lambda x: x["seq"]):
+                while self.flushes < e["flush"]:
+                    self.tick()
+                if e["op"] == "attach":
+                    self.attach(e["package"], e["tenant"], e["workload"])
+                elif e["op"] == "detach":
+                    self.detach(e["package"])
+                elif e["op"] == "thresholds":
+                    self.set_thresholds(e["tenant"], **e["kw"])
+                else:
+                    raise ValueError(f"unknown journal op {e['op']!r}")
+                self._journal_seq = e["seq"] + 1
+        finally:
+            self._restoring = False
+
     # ---------------------------------------------------------------- replay
     def replay(self, path: str, atol: float = 0.0) -> list[dict]:
         """Re-drive a recorded telemetry stream (`TelemetryLog.dump_jsonl`
         of flush records) through the HintQueue ingest path against a fresh
         fleet, and return the reproduced flush records.
 
-        The recording must keep ONE capacity throughout (capacity changes
-        re-bucket lanes; replaying those would need the full surgery
-        history) — a mixed recording raises ValueError.  Fresh attaches
-        are reproduced by scattering template lanes exactly where the
-        recording did, so the replayed telemetry matches the original to
-        float tolerance (gated ≤1e-5 in tests)."""
+        Capacity transitions replay too: each flush record carries the
+        ORDERED surgery ops applied since the previous flush (attach
+        scatters, grow/shrink bucket transitions), and replay re-drives
+        them through the same jitted surgery programs before re-running
+        the window — so grow/shrink scenarios reproduce to float tolerance
+        (gated ≤1e-5 in tests).  Legacy recordings without a ``surgery``
+        key fall back to their ``attached`` lane lists and must keep ONE
+        capacity throughout (a mixed legacy recording raises ValueError)."""
         rows = []
         with open(path) as f:
             for line in f:
@@ -434,21 +669,48 @@ class FleetService:
         if not rows:
             raise ValueError(f"no flush records in {path}")
         # TelemetryLog's JSON coercion floats scalar ints — re-int them
-        caps = {int(r["capacity"]) for r in rows}
-        if len(caps) != 1:
-            raise ValueError(
-                f"replay needs a fixed-capacity recording, got capacities "
-                f"{sorted(caps)}; re-record without bucket transitions")
-        cap = caps.pop()
+        legacy = any("surgery" not in r for r in rows)
+        if legacy:
+            caps = {int(r["capacity"]) for r in rows}
+            if len(caps) != 1:
+                raise ValueError(
+                    f"replaying a legacy (no surgery journal) recording "
+                    f"needs a fixed capacity, got capacities "
+                    f"{sorted(caps)}; re-record with the current service")
+            cap0 = caps.pop()
+        else:
+            # boot capacity: what the state held BEFORE the first recorded
+            # capacity transition (= first row's capacity when none occur)
+            cap0 = int(rows[0]["capacity"])
+            for row in rows:
+                trans = [o for o in row["surgery"]
+                         if o["op"] in ("grow", "shrink")]
+                if trans:
+                    cap0 = int(trans[0]["old"])
+                    break
         eng = self.engine
-        state = self._fresh(cap)
-        tpl = self._template(cap)
+        state = self._fresh(cap0)
         queue = HintQueue(capacity=2)
         out = []
         for row in rows:
-            for lane in row["attached"]:
-                state = self._attach_jit(state, tpl,
-                                         jnp.asarray(int(lane), jnp.int32))
+            if "surgery" in row:
+                for op in row["surgery"]:
+                    if op["op"] == "grow":
+                        state = self._grow_jit(
+                            state, self._template(int(op["new"])))
+                    elif op["op"] == "shrink":
+                        state = self._shrink_jit(
+                            state, jnp.asarray(
+                                np.asarray(op["perm"], np.int32)))
+                    else:      # attach scatter at the CURRENT capacity
+                        state = self._attach_jit(
+                            state, self._template(state.freq.shape[0]),
+                            jnp.asarray(int(op["lane"]), jnp.int32))
+            else:
+                tpl = self._template(cap0)
+                for lane in row["attached"]:
+                    state = self._attach_jit(
+                        state, tpl, jnp.asarray(int(lane), jnp.int32))
             active = jnp.asarray(np.asarray(row["active"], bool))
             queue.offer(np.asarray(row["rho"], np.float32))
             chunk = queue.take()
@@ -503,9 +765,13 @@ class _Handler(BaseHTTPRequestHandler):
         svc: FleetService = self.server.service
         path, _, query = self.path.partition("?")
         if path == "/healthz":
-            self._send(200, {"ok": True, "flushes": svc.flushes,
+            stalled = (svc.heartbeat.stalled if svc.heartbeat is not None
+                       else False)
+            self._send(200, {"ok": not stalled, "flushes": svc.flushes,
                              "capacity": svc.registry.capacity,
-                             "n_active": svc.registry.n_active})
+                             "n_active": svc.registry.n_active,
+                             "stalled": stalled,
+                             "degraded_count": int(svc.last_degraded)})
         elif path == "/telemetry":
             last = 1
             for part in query.split("&"):
@@ -533,7 +799,8 @@ class _Handler(BaseHTTPRequestHandler):
                 self._send(200, svc.detach(body["package"]))
             elif self.path == "/thresholds":
                 tenant = body.pop("tenant")
-                allowed = {"t_crit_c", "at_risk_limit", "drift_budget_nm"}
+                allowed = {"t_crit_c", "at_risk_limit", "drift_budget_nm",
+                           "degraded_limit"}
                 bad = set(body) - allowed
                 if bad:
                     raise ValueError(f"unknown threshold field(s) "

@@ -91,6 +91,12 @@ class FleetStepParams:
     resume_below_c: float = 66.0
     ramp: float = 0.045    # per-step frequency ramp-back
     poll_ticks: int = 25   # homogeneous sensor polling period [steps]
+    # degraded fallback (mode == "v24" + SchedulerConfig.degraded_fallback):
+    # packages with stale hints run the reactive_poll law in-kernel; the
+    # per-package staleness/mode rows ride in VMEM beside the het rows
+    fallback: bool = False
+    stale_limit: int = 5   # consecutive stale steps before fallback
+    recover: int = 10      # hysteresis: fresh steps before recovery
 
 
 def _pad_axis(x, n, axis, value=0.0):
@@ -103,9 +109,9 @@ def _pad_axis(x, n, axis, value=0.0):
 
 
 def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
-            ev0_ref, het_ref, thr0_ref, step0_ref, temp_ref, freqs_ref,
-            buf_ref, th_ref, ev_ref, thr_ref,
-            ring_scr, th_scr, stat_scr, f_scr, e_scr, thr_scr, *,
+            ev0_ref, het_ref, thr0_ref, step0_ref, fb0_ref, temp_ref,
+            freqs_ref, buf_ref, th_ref, ev_ref, thr_ref, fb_ref,
+            ring_scr, th_scr, stat_scr, f_scr, e_scr, thr_scr, fb_scr, *,
             ck: int, tp: int, n_tiles: int, het: bool, p: FleetStepParams):
     c = pl.program_id(1)
     w, q, np_ = p.window, p.recent, p.n_poles
@@ -121,6 +127,7 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
         f_scr[...] = freq0_ref[...]
         e_scr[...] = ev0_ref[...]
         thr_scr[...] = thr0_ref[...]
+        fb_scr[...] = fb0_ref[...]
 
     gamma = gamma_ref[...]                                   # [tp, tp]
     if p.use_gamma:
@@ -150,6 +157,31 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
         step = c * ck + i
         ptr = step % w                   # caller rolled the ring to ptr0 = 0
         rho = rho_ref[i]                                     # [tp, blk]
+
+        if p.fallback:
+            # staleness plane (mirrors the pure path in core/scheduler.py):
+            # non-finite density entries mark a stale hint stream — hold
+            # the last finite value so the filtration stays warm, count
+            # staleness per PACKAGE lane, latch the degraded flag with
+            # hysteresis.  Padded tile rows and padded lanes carry the
+            # benign finite fill, so the min-over-tiles validity test can
+            # never degrade a phantom.  f32 counters are exact at these
+            # magnitudes (abs(x) < inf is False for both NaN and ±inf).
+            finite = jnp.abs(rho) < jnp.inf                  # [tp, blk]
+            rho = jnp.where(finite, rho, fb_scr[0:tp, :])
+            valid = jnp.min(jnp.where(finite, 1.0, 0.0), axis=0,
+                            keepdims=True)                   # [1, blk]
+            stale = fb_scr[tp:tp + 1, :]
+            stale_n = jnp.where(
+                valid > 0.5, jnp.maximum(stale - 1.0, 0.0),
+                jnp.minimum(stale + 1.0, float(p.stale_limit + p.recover)))
+            deg = jnp.maximum(
+                jnp.where((fb_scr[tp + 1:tp + 2, :] > 0.5)
+                          & (stale_n > 0.5), 1.0, 0.0),
+                jnp.where(stale_n >= float(p.stale_limit), 1.0, 0.0))
+            fb_scr[0:tp, :] = rho
+            fb_scr[tp:tp + 1, :] = stale_n
+            fb_scr[tp + 1:tp + 2, :] = deg
 
         # -- incremental filtration: O(1) evict-reads + FMAs ---------------
         x_old = ring_scr[pl.ds(ptr * tp, tp), :]
@@ -273,6 +305,39 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
             freq = jnp.ones_like(f_prev)
 
         # -- plant + events -----------------------------------------------
+        if p.fallback and p.mode == "v24":
+            # merged plant: degraded lanes run reactive_poll semantics
+            # (plant at LAST step's frequency, polled sensor, throttle
+            # hysteresis in thr_scr), healthy lanes take the v24 law — the
+            # plant steps ONCE at the per-lane blended frequency.  With
+            # deg all-zero every `where` takes the v24 branch bitwise.
+            deg_b = deg > 0.5                                # [1, blk]
+            temp = plant(jnp.where(deg_b, f_prev, freq))
+            step_g = step0_ref[0, 0].astype(jnp.int32) + step
+            polled = (step_g % poll_l) == 0
+            trig = (temp >= p.t_crit_c) & polled
+            cool = (temp <= p.resume_below_c) & polled
+            thr = thr_scr[...] > 0.5
+            thr_n = jnp.where(deg_b, (thr | trig) & ~cool, False)
+            freq = jnp.where(
+                deg_b,
+                jnp.where(thr_n, p.throttle_level,
+                          jnp.minimum(f_prev + p.ramp, 1.0)),
+                freq)
+            fresh = jnp.max(
+                jnp.where(real, (trig & ~thr).astype(jnp.float32), 0.0),
+                axis=0, keepdims=True)
+            crossed = jnp.max(
+                jnp.where(real, (temp > p.t_crit_c).astype(jnp.float32),
+                          0.0),
+                axis=0, keepdims=True)
+            e_scr[...] = e_scr[...] + jnp.where(deg_b, fresh, crossed)
+            thr_scr[...] = thr_n.astype(jnp.float32)
+            f_scr[...] = freq
+            temp_ref[pl.ds(i, 1)] = temp[None]
+            freqs_ref[pl.ds(i, 1)] = freq[None]
+            return 0
+
         temp = plant(freq)
         # event = any REAL tile over t_crit: mask the padded phantom tile
         # rows so they can never inflate a package's counter (they sit at a
@@ -295,6 +360,7 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
     th_ref[...] = th_scr[...]
     ev_ref[...] = e_scr[...]
     thr_ref[...] = thr_scr[...]
+    fb_ref[...] = fb_scr[...]
 
 
 def _divisor_chunk(t: int, target: int) -> int:
@@ -308,7 +374,7 @@ def _divisor_chunk(t: int, target: int) -> int:
 
 def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
                params: FleetStepParams, *, het=None, thr0=None, step0=0,
-               block_packages: int = LANE,
+               fb0=None, block_packages: int = LANE,
                time_chunk: int = 256, interpret: bool | None = None):
     """Fused K-step fleet advance.
 
@@ -327,12 +393,22 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
       step0:  global scheduler step at chunk entry (traced or python int) —
               keeps the reactive_poll sensor cadence continuous across
               chunk boundaries
+      fb0:    optional degraded-fallback plane (required iff
+              ``params.fallback``): a (rho_last [n_tiles, n], stale [n],
+              degraded [n]) triple of f32-coercible arrays — resident in
+              VMEM as `n_tiles + 2` mode rows beside the het rows
 
     Returns (temps [T, n_tiles, n], freqs [T, n_tiles, n],
              buf [W, n_tiles, n] (ring, ptr = T mod W),
              th [n_poles, n_tiles, n], ev [1, n],
-             thr [n_tiles, n] f32 latch, or None when ``thr0`` is None).
+             thr [n_tiles, n] f32 latch, or None when ``thr0`` is None,
+             fb (rho_last, stale, degraded) f32 triple, or None when
+             ``fb0`` is None).
     """
+    if params.fallback and (fb0 is None or thr0 is None):
+        raise ValueError("FleetStepParams.fallback requires the fb0 "
+                         "(rho_last, stale, degraded) plane and the thr0 "
+                         "latch")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     t, n_tiles, n = rho.shape
@@ -387,6 +463,21 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
     else:
         thr_p = jnp.zeros((1, n_pad), f32)
         t_rows = 1
+    # degraded-fallback plane: rho_last padded with the same benign finite
+    # fill as rho (phantom tiles/lanes must stay "fresh" forever), stale
+    # and degraded rows padded with 0
+    has_fb = fb0 is not None
+    if has_fb:
+        rl0, stl0, dg0 = fb0
+        fb_p = jnp.concatenate([
+            prep(jnp.asarray(rl0, f32), 0, params.rho_hi / 1.5 / 3.0),
+            _pad_axis(jnp.asarray(stl0, f32)[None, :], n_pad, 1, 0.0),
+            _pad_axis(jnp.asarray(dg0, f32)[None, :], n_pad, 1, 0.0),
+        ], axis=0)
+        fb_rows = tp + 2
+    else:
+        fb_p = jnp.zeros((1, n_pad), f32)
+        fb_rows = 1
     # global-step offset: f32 is exact for the 90k-scale step counts
     step0_p = jnp.broadcast_to(jnp.asarray(step0, f32), (1, 1))
 
@@ -397,7 +488,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
 
     state_spec = lambda r: pl.BlockSpec((r, blk), lambda b, c: (0, b))
     trace_spec = pl.BlockSpec((ck, tp, blk), lambda b, c: (c, 0, b))
-    temps, freqs, buf, th, ev, thr = pl.pallas_call(
+    temps, freqs, buf, th, ev, thr, fb = pl.pallas_call(
         functools.partial(_kernel, ck=ck, tp=tp, n_tiles=n_tiles,
                           het=has_het, p=params),
         grid=grid,
@@ -412,6 +503,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             state_spec(h_rows),                                # het
             state_spec(t_rows),                                # thr0
             pl.BlockSpec((1, 1), lambda b, c: (0, 0)),         # step0
+            state_spec(fb_rows),                               # fb0
         ],
         out_specs=[
             trace_spec,                                        # temps
@@ -420,6 +512,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             state_spec(np_ * tp),                              # th
             state_spec(1),                                     # ev
             state_spec(t_rows),                                # thr
+            state_spec(fb_rows),                               # fb
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t, tp, n_pad), f32),
@@ -428,6 +521,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             jax.ShapeDtypeStruct((np_ * tp, n_pad), f32),
             jax.ShapeDtypeStruct((1, n_pad), f32),
             jax.ShapeDtypeStruct((t_rows, n_pad), f32),
+            jax.ShapeDtypeStruct((fb_rows, n_pad), f32),
         ],
         scratch_shapes=[
             pltpu.VMEM((w * tp, blk), f32),                    # ring
@@ -436,12 +530,16 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             pltpu.VMEM((tp, blk), f32),                        # freq
             pltpu.VMEM((1, blk), f32),                         # events
             pltpu.VMEM((t_rows, blk), f32),                    # thr latch
+            pltpu.VMEM((fb_rows, blk), f32),                   # fb plane
         ],
         interpret=interpret,
-    )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p, het_p, thr_p, step0_p)
+    )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p, het_p, thr_p, step0_p,
+      fb_p)
 
     return (temps[:, :n_tiles, :n], freqs[:, :n_tiles, :n],
             buf.reshape(w, tp, n_pad)[:, :n_tiles, :n],
             th.reshape(np_, tp, n_pad)[:, :n_tiles, :n],
             ev[:, :n],
-            thr[:n_tiles, :n] if has_thr else None)
+            thr[:n_tiles, :n] if has_thr else None,
+            ((fb[0:tp, :][:n_tiles, :n], fb[tp, :n], fb[tp + 1, :n])
+             if has_fb else None))

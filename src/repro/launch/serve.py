@@ -165,17 +165,27 @@ def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
 
 
 def _serve_resident(args, sched_cfg: SchedulerConfig):
-    """--serve: the resident multi-tenant control plane (docs/serving.md)."""
+    """--serve: the resident multi-tenant control plane (docs/serving.md).
+
+    With ``--snapshot-dir`` the service journals every membership op and
+    snapshots every ``--snapshot-every`` flushes; a SIGTERM (preemption)
+    takes one final BLOCKING snapshot before exiting, so
+    `FleetService.restore()` resumes the stream losslessly."""
+    from repro.distributed.fault_tolerance import PreemptionGuard
     from repro.fleet.service import FleetService, serve_http
     svc = FleetService(sched_cfg, backend=args.fleet_backend,
                        min_capacity=4, flush_every=args.flush_every,
-                       seed=args.seed)
+                       seed=args.seed,
+                       snapshot_dir=args.snapshot_dir or None,
+                       snapshot_every=args.snapshot_every,
+                       heartbeat_timeout_s=args.heartbeat_timeout)
     n0 = max(args.fleet, 1)
     buckets = svc.warmup(max_packages=max(2 * n0, 8))
     print(f"[serve] warmed {buckets} capacity buckets "
           f"(zero recompiles from here)")
     for i in range(n0):
         svc.attach(f"pkg{i}", tenant="default", kind="inference")
+    guard = PreemptionGuard()
     server, _ = serve_http(svc, host=args.host, port=args.port)
     host, port = server.server_address[:2]
     print(f"[serve] control plane on http://{host}:{port} — "
@@ -183,8 +193,9 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
           f"POST /attach /detach /thresholds /ingest /replay /shutdown")
     flushes = 0
     try:
-        while not svc.shutting_down and (args.serve_flushes == 0
-                                         or flushes < args.serve_flushes):
+        while (not svc.shutting_down and not guard.should_exit
+               and (args.serve_flushes == 0
+                    or flushes < args.serve_flushes)):
             rec = svc.tick()
             flushes += 1
             if rec is None:
@@ -196,10 +207,185 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
                   f"f_mean {d['freq_mean']:.3f} "
                   f"alerts {len(rec['alerts'])}")
     finally:
+        if guard.should_exit and svc.snapshot_dir is not None:
+            step = svc.save_snapshot(blocking=True)
+            print(f"[serve] preempted: final snapshot at step {step} "
+                  f"-> {svc.snapshot_dir}")
+        guard.restore()
         server.shutdown()
     return {"flushes": flushes, "port": port,
             "capacity": svc.registry.capacity,
-            "n_active": svc.registry.n_active}
+            "n_active": svc.registry.n_active,
+            "preempted": guard.should_exit}
+
+
+def _chaos_soak(args):
+    """--chaos: the fault-injection soak (docs/serving.md, CI `chaos` job).
+
+    Four phases, each gated — any failure exits nonzero:
+      1. fleet-wide hint starvation: every lane falls back to reactive
+         polling in-graph, then recovers with hysteresis;
+      2. per-lane sensor faults (dropout + NaN/Inf corruption): contained
+         in-band on all five backends, unaffected lanes bit-match a
+         fault-free run, telemetry equivalent across backends;
+      3. the service surface: `degraded` alert fires on the rising edge and
+         clears on the falling edge, /healthz-visible degraded counts;
+      4. mid-run SIGTERM → final snapshot → `FleetService.restore()`
+         resumes ≤1e-5-equivalent to an uninterrupted oracle with zero
+         XLA recompiles after restore's warmup.
+    """
+    import os
+    import signal
+    import tempfile
+
+    from repro.distributed.fault_tolerance import PreemptionGuard
+    from repro.fleet import FaultPlan, FleetEngine, available_backends
+    from repro.fleet.faults import HintOutage, SensorFault
+    from repro.fleet.service import FleetService
+
+    failures: list[str] = []
+
+    def check(ok, msg):
+        print(f"[chaos] {'ok  ' if ok else 'FAIL'} {msg}")
+        if not ok:
+            failures.append(msg)
+
+    cfg = SchedulerConfig(n_tiles=2, mode="v24", filtration_window=16,
+                          degraded_fallback=True, stale_limit_steps=4,
+                          recover_steps=8)
+    n, T, K = 8, 384, 64
+    rng = np.random.default_rng(args.seed)
+    trace = rng.uniform(0.9, 2.7, (T, n, cfg.n_tiles)).astype(np.float32)
+
+    # -- phase 1: hint starvation — engage + hysteresis recovery ----------
+    starve = FaultPlan(seed=args.seed, hint_outages=(HintOutage(96, 24),))
+    eng = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    st = eng.init(n)
+    st, tel = eng.run_chunked(st, jnp.asarray(starve.apply(trace, 0)), K)
+    dc = np.asarray(tel.degraded_count)            # [F] window peaks
+    check(int(dc[96 // K]) == n,
+          f"starvation flush degrades all {n} lanes (peaks {dc.tolist()})")
+    check(int(dc[-1]) == 0, "fleet recovered by the final flush")
+    check(int(np.asarray(st.degraded).sum()) == 0, "no lane left degraded")
+
+    # -- phase 2: sensor faults — containment on all five backends --------
+    plan = FaultPlan(seed=args.seed,
+                     sensor_faults=(SensorFault(2, "dropout", 120, 48),
+                                    SensorFault(5, "corrupt", 180, 32)))
+    faulted = plan.apply(trace, 0)
+    ok_lanes = [i for i in range(n) if i not in plan.faulted_lanes()]
+    exact = ("events_total", "events_step", "degraded_count", "n_packages")
+    knife = ("freq_min", "at_risk_frac")
+    ref = None
+    for be in available_backends():
+        e1 = FleetEngine(cfg, backend=be, debug_nan=True)
+        s1 = e1.init(n)
+        s1, t1 = e1.run_chunked(s1, jnp.asarray(faulted), K)
+        e0 = FleetEngine(cfg, backend=be)
+        s0 = e0.init(n)
+        s0, _ = e0.run_chunked(s0, jnp.asarray(trace), K)
+        bit = all(np.array_equal(np.asarray(getattr(s1, f))[ok_lanes],
+                                 np.asarray(getattr(s0, f))[ok_lanes])
+                  for f in ("freq", "thermal", "events", "rho_last"))
+        check(bit, f"{be}: unaffected lanes bit-match the fault-free run")
+        d1 = {k: np.asarray(v)
+              for k, v in jax.device_get(t1)._asdict().items()}
+        check(int(d1["degraded_count"].max()) >= 1
+              and int(d1["degraded_count"][-1]) == 0,
+              f"{be}: faulted lanes degrade and recover "
+              f"(peaks {d1['degraded_count'].tolist()})")
+        if ref is None:
+            ref = d1
+            continue
+        for k, v in d1.items():
+            if k in exact:
+                same = np.array_equal(ref[k], v)
+            elif k in knife:
+                same = np.allclose(ref[k], v, rtol=1e-3, atol=1e-3)
+            else:
+                same = np.allclose(ref[k], v, rtol=1e-4, atol=5e-5)
+            check(same, f"{be}: telemetry[{k}] matches broadcast")
+
+    # -- phase 3: degraded alert rises and clears at the service ----------
+    svc = FleetService(cfg, flush_every=50, seed=args.seed, debug_nan=True)
+    for i in range(4):
+        svc.attach(f"pkg{i}", tenant="acme")
+    svc.set_thresholds("acme", degraded_limit=0)
+    cap = svc.registry.capacity
+    chunk = rng.uniform(0.9, 2.7, (50, cap, cfg.n_tiles)).astype(np.float32)
+    bad_chunk = chunk.copy()
+    bad_chunk[25:, 0, :] = np.nan       # lane 0 dark through the flush edge
+    svc.tick(chunk=chunk)
+    rec_bad = svc.tick(chunk=bad_chunk)
+    rec_ok = svc.tick(chunk=chunk)      # sensor back — recover + clear
+    rec_clean = svc.tick(chunk=chunk)   # fully recovered window
+    fired = [a for a in rec_bad["alerts"] if a["kind"] == "degraded"]
+    cleared = [a for a in rec_ok["alerts"] if a["kind"] == "degraded"]
+    check(len(fired) == 1 and fired[0]["event"] == "fired",
+          f"degraded alert fired once ({fired})")
+    check(len(cleared) == 1 and cleared[0]["event"] == "cleared",
+          f"degraded alert cleared once ({cleared})")
+    check(not [a for a in rec_clean["alerts"] if a["kind"] == "degraded"],
+          "no duplicate degraded events once steady")
+    check(rec_bad["telemetry"]["degraded_count"] >= 1
+          and rec_clean["telemetry"]["degraded_count"] == 0,
+          "flush records carry the degraded counts")
+
+    # -- phase 4: SIGTERM mid-run → snapshot → restore → equivalence ------
+    def drive(svc, until, grow_at):
+        while svc.flushes < until:
+            if svc.flushes == grow_at:       # capacity transition mid-run
+                for i in range(4, 9):
+                    svc.attach(f"pkg{i}", tenant="acme")
+            svc.tick()
+        return svc.log.rows()[-1]["telemetry"]
+
+    f_total, f_kill, f_grow = 16, 10, 6
+    oracle = FleetService(cfg, flush_every=50, seed=args.seed)
+    for i in range(4):
+        oracle.attach(f"pkg{i}", tenant="acme")
+    final_oracle = drive(oracle, f_total, f_grow)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        victim = FleetService(cfg, flush_every=50, seed=args.seed,
+                              snapshot_dir=tmp, snapshot_every=4)
+        victim.warmup(16)
+        for i in range(4):
+            victim.attach(f"pkg{i}", tenant="acme")
+        guard = PreemptionGuard()
+        drive(victim, f_kill, f_grow)
+        os.kill(os.getpid(), signal.SIGTERM)     # preemption notice
+        time.sleep(0)                            # let the handler run
+        check(guard.should_exit, "SIGTERM reached the PreemptionGuard")
+        victim.save_snapshot(blocking=True)      # the --serve exit path
+        guard.restore()
+        del victim
+
+        restored = FleetService.restore(tmp, debug_nan=True)
+        check(restored.flushes == f_kill and restored.registry.n_active == 9,
+              f"restored at flush {restored.flushes} with "
+              f"{restored.registry.n_active} packages")
+        compiles: list[str] = []
+        jax.monitoring.register_event_duration_secs_listener(
+            lambda name, *a, **kw: compiles.append(name)
+            if "compile" in name else None)
+        final_restored = drive(restored, f_total, f_grow)
+        comp = [c for c in compiles if "backend_compile" in c]
+        check(not comp, f"zero recompiles after restore ({len(comp)} seen)")
+        worst = max(abs(final_restored[k] - final_oracle[k])
+                    / max(abs(final_oracle[k]), 1e-9)
+                    for k in final_oracle)
+        check(worst <= 1e-5,
+              f"restore ≤1e-5-equivalent to uninterrupted "
+              f"(worst rel diff {worst:.2e})")
+
+    if failures:
+        print(f"[chaos] {len(failures)} failure(s):")
+        for f in failures:
+            print(f"[chaos]   - {f}")
+        raise SystemExit(1)
+    print("[chaos] all gates passed")
+    return {"chaos": "ok"}
 
 
 def main(argv=None):
@@ -251,6 +437,22 @@ def main(argv=None):
     ap.add_argument("--serve-flushes", type=int, default=0,
                     help="--serve: stop after N flushes (0 = run until "
                          "POST /shutdown)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="--serve: journal + snapshot directory; enables "
+                         "crash-consistent recovery via "
+                         "FleetService.restore()")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="--serve: async snapshot every N flushes "
+                         "(needs --snapshot-dir)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0,
+                    help="--serve: mark /healthz stalled when no flush "
+                         "lands for this many seconds (0 = off)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection soak: starvation fallback + "
+                         "recovery, sensor-fault containment on every "
+                         "backend, degraded alert edges, SIGTERM -> "
+                         "snapshot -> restore equivalence; exits nonzero "
+                         "on any gate failure (CI `chaos` job)")
     ap.add_argument("--montecarlo", type=int, default=0,
                     help="run the §10 process-variation Monte-Carlo with N "
                          "trials through the fleet backend instead of "
@@ -275,6 +477,8 @@ def main(argv=None):
                                     args.process_id)
         print(f"[distributed] {topo.describe()}")
 
+    if args.chaos:
+        return _chaos_soak(args)
     if args.montecarlo:
         return _montecarlo(args)
 

@@ -268,14 +268,15 @@ def test_donated_state_reuse_raises_readably():
 
 
 def test_as_dict_single_fetch_types():
-    """`as_dict` returns python scalars with n_packages an int."""
+    """`as_dict` returns python scalars — counters ints, the rest floats."""
     eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES))
     st = eng.init(4)
     _, _, telem = eng.step(st, 1.5)
     d = telem.as_dict()
     assert isinstance(d["n_packages"], int) and d["n_packages"] == 4
+    assert isinstance(d["degraded_count"], int) and d["degraded_count"] == 0
     assert all(isinstance(v, float) for k, v in d.items()
-               if k != "n_packages")
+               if k not in ("n_packages", "degraded_count"))
 
 
 def test_scheduler_state_pspecs_congruent():

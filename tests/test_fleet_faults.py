@@ -1,0 +1,179 @@
+"""Fault-injection harness + in-graph degraded-mode fallback.
+
+Covers the PR 8 robustness contract at test granularity (the CI `chaos`
+job runs the full soak via `repro.launch.serve --chaos`):
+
+  * `FaultPlan` determinism — application is chunking-invariant, inputs
+    are never mutated, every sensor-fault kind has its documented effect;
+  * the fallback engages on non-finite density and recovers with
+    hysteresis on EVERY backend, and unaffected lanes bit-match a
+    fault-free run (fault containment);
+  * finite fault kinds (stuck/noise) are deliberately undetectable — the
+    staleness counter must NOT trip on them;
+  * the `debug_nan` guard names the offending lane when a fault escapes
+    (fallback off), and stays silent when containment works.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet import (FaultPlan, FleetEngine, HintOutage, HostStall,
+                         SensorFault, available_backends)
+
+N_TILES = 2
+W = 16
+
+
+def _cfg(**kw):
+    base = dict(n_tiles=N_TILES, mode="v24", filtration_window=W,
+                degraded_fallback=True, stale_limit_steps=4,
+                recover_steps=8)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _trace(t, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.9, 2.7, (t, n, N_TILES)).astype(np.float32)
+
+
+# ------------------------------------------------------------ plan mechanics
+def test_apply_is_chunking_invariant():
+    """Seeded kinds (corrupt, noise) fast-forward their RNG by the chunk's
+    offset into the fault span, so ANY chunking reproduces the same words."""
+    trace = _trace(96, 4)
+    plan = FaultPlan(seed=3, hint_outages=(HintOutage(10, 7),),
+                     sensor_faults=(SensorFault(1, "corrupt", 20, 30),
+                                    SensorFault(2, "noise", 40, 30, 0.3),
+                                    SensorFault(3, "dropout", 5, 50),
+                                    SensorFault(0, "stuck", 60, 20, 1.7)))
+    whole = plan.apply(trace, 0)
+    for k in (96, 32, 17, 1):              # incl. a non-divisible chunking
+        parts = [plan.apply(trace[i:i + k], i)
+                 for i in range(0, 96, k)]
+        np.testing.assert_array_equal(np.concatenate(parts), whole,
+                                      err_msg=f"chunking K={k}")
+    # and the streaming wrapper tracks the same global cursor
+    streamed = np.concatenate(list(plan.chunk_source(trace, 17)))
+    np.testing.assert_array_equal(streamed, whole)
+
+
+def test_apply_never_mutates_input_and_kind_semantics():
+    trace = _trace(32, 4)
+    pristine = trace.copy()
+    plan = FaultPlan(sensor_faults=(SensorFault(0, "dropout", 4, 8),
+                                    SensorFault(1, "stuck", 4, 8, 1.25),
+                                    SensorFault(2, "corrupt", 4, 8),
+                                    SensorFault(3, "noise", 4, 8, 0.2)))
+    out = plan.apply(trace, 0)
+    np.testing.assert_array_equal(trace, pristine)     # input untouched
+    sl = out[4:12]
+    assert np.isnan(sl[:, 0, :]).all(), "dropout = all-NaN words"
+    assert (sl[:, 1, :] == 1.25).all(), "stuck = frozen constant"
+    corrupt = sl[:, 2, :]
+    assert (~np.isfinite(corrupt)).all() and np.isnan(corrupt).any() \
+        and np.isinf(corrupt).any(), "corrupt = NaN/Inf mix"
+    noise = sl[:, 3, :]
+    assert np.isfinite(noise).all() and (noise >= 0).all(), \
+        "noise stays finite (undetectable by design)"
+    assert not np.array_equal(noise, pristine[4:12, 3, :])
+    # untouched steps/lanes are bit-identical
+    np.testing.assert_array_equal(out[12:], pristine[12:])
+
+
+def test_fault_validation_and_generate():
+    with pytest.raises(ValueError, match="unknown sensor-fault kind"):
+        SensorFault(0, "flaky", 0, 4)
+    plan = FaultPlan.generate(seed=7, n_packages=8, n_steps=400)
+    assert len(plan.hint_outages) == 1 and len(plan.sensor_faults) == 2
+    for f in plan.sensor_faults:
+        assert 0 <= f.lane < 8
+        # spans land early enough to engage AND recover before the end
+        assert f.start + f.steps < 400
+    assert plan.faulted_lanes() <= set(range(8))
+    assert "2 sensor fault(s)" in plan.describe()
+
+
+def test_host_stall_sleeps_at_flush_boundary():
+    plan = FaultPlan(host_stalls=(HostStall(1, 0.05),))
+    t0 = time.monotonic()
+    chunks = list(plan.chunk_source(_trace(32, 2), 16))
+    assert time.monotonic() - t0 >= 0.05
+    assert len(chunks) == 2
+
+
+# --------------------------------------------------- fallback + containment
+@pytest.mark.parametrize("backend", available_backends())
+def test_fallback_contains_faults_on_every_backend(backend):
+    """Dropout + corruption on two lanes: those lanes degrade in-graph and
+    recover; every OTHER lane bit-matches a fault-free run; telemetry
+    carries the degraded counts; `debug_nan` stays silent (containment)."""
+    cfg = _cfg()
+    n, t, k = 4, 192, 64
+    trace = _trace(t, n, seed=11)
+    plan = FaultPlan(seed=2,
+                     sensor_faults=(SensorFault(1, "dropout", 40, 30),
+                                    SensorFault(3, "corrupt", 90, 20)))
+    eng = FleetEngine(cfg, backend=backend, debug_nan=True)
+    s1, t1 = eng.run_chunked(eng.init(n), jnp.asarray(plan.apply(trace, 0)),
+                             k)
+    clean = FleetEngine(cfg, backend=backend)
+    s0, _ = clean.run_chunked(clean.init(n), jnp.asarray(trace), k)
+    ok = sorted(set(range(n)) - plan.faulted_lanes())
+    for f in ("freq", "thermal", "events", "rho_last", "stale", "degraded"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s1, f))[ok], np.asarray(getattr(s0, f))[ok],
+            err_msg=f"containment breach: state.{f} on healthy lanes")
+    dc = np.asarray(t1.degraded_count)
+    assert dc.max() >= 1, "faulted lanes never engaged the fallback"
+    assert dc[-1] == 0, "fleet did not recover by the final flush"
+    assert not np.asarray(s1.degraded).any()
+
+
+def test_finite_faults_are_undetectable_by_design():
+    """Stuck/noise sensors stay finite: the staleness counter must not
+    trip — the fallback only catches what is detectable in-band."""
+    cfg = _cfg()
+    trace = _trace(128, 4)
+    plan = FaultPlan(sensor_faults=(SensorFault(0, "stuck", 20, 40, 1.5),
+                                    SensorFault(2, "noise", 20, 40, 0.2)))
+    eng = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    _, tel = eng.run_chunked(eng.init(4), jnp.asarray(plan.apply(trace, 0)),
+                             32)
+    assert int(np.asarray(tel.degraded_count).max()) == 0
+
+
+def test_starvation_degrades_whole_fleet_then_recovers():
+    cfg = _cfg()
+    n = 4
+    trace = _trace(192, n)
+    plan = FaultPlan(hint_outages=(HintOutage(64, 20),))
+    eng = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    st, tel = eng.run_chunked(eng.init(n), jnp.asarray(plan.apply(trace, 0)),
+                              32)
+    dc = np.asarray(tel.degraded_count)
+    assert dc[64 // 32] == n, f"outage flush must degrade all lanes: {dc}"
+    assert dc[-1] == 0 and not np.asarray(st.degraded).any()
+
+
+# -------------------------------------------------------- debug_nan guard
+def test_debug_nan_guard_names_offending_lane():
+    """Fallback OFF: an injected NaN reaches the thermal state and the
+    guard raises naming the faulted lane instead of silently polluting
+    telemetry."""
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24", filtration_window=W)
+    trace = _trace(32, 4)
+    plan = FaultPlan(sensor_faults=(SensorFault(2, "dropout", 8, 24),))
+    eng = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    with pytest.raises(ValueError, match=r"lane\(s\) \[2\]"):
+        eng.run_block(eng.init(4), jnp.asarray(plan.apply(trace, 0)))
+
+
+def test_debug_nan_guard_silent_on_clean_run():
+    cfg = _cfg()
+    eng = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    st, tel = eng.run_block(eng.init(4), jnp.asarray(_trace(32, 4)))
+    assert int(np.asarray(tel.degraded_count)) == 0

@@ -133,26 +133,31 @@ def test_zero_recompiles_after_warmup():
 
 # ------------------------------------------------------------------- alerts
 def test_alert_fires_once_per_crossing_with_tail_flush():
-    """Edge-latched alerts: hot→hot→cool→hot(tail) fires exactly at the two
-    rising edges, the second one on a NON-DIVISIBLE tail chunk."""
+    """Edge-latched alerts: hot→hot→cool→hot(tail) yields exactly one
+    ``fired`` record per rising edge and one ``cleared`` record on the
+    falling edge — never duplicates on either side of the latch."""
     svc = _service()
     svc.attach("p0", tenant="acme")
     svc.set_thresholds("acme", t_crit_c=70.0)
     cap = svc.registry.capacity
-    fired = []
+    events = []
     # two cool flushes: the FIRST cool window still peaks above t_crit (its
     # opening steps carry the previous flush's heat — window-peak
     # semantics), the second is genuinely below and clears the latch
     for k, fill in ((2 * W, 2.7), (2 * W, 2.7), (2 * W, 0.9), (2 * W, 0.9),
                     (W + 4, 2.7)):
         rec = svc.tick(_chunk(k, cap, fill=fill))
-        fired.append([a for a in rec["alerts"] if a["kind"] == "t_crit"])
-    assert len(fired[0]) == 1, "first hot flush must fire"
-    assert fired[1] == [], "still-hot flush must NOT re-fire"
-    assert fired[2] == [] and fired[3] == [], "cool flushes clear silently"
-    assert len(fired[4]) == 1, "tail-chunk re-crossing must fire again"
-    ev = fired[0][0]
+        events.append([a for a in rec["alerts"] if a["kind"] == "t_crit"])
+    kinds = [[a["event"] for a in evs] for evs in events]
+    assert kinds[0] == ["fired"], "first hot flush must fire"
+    assert kinds[1] == [], "still-hot flush must NOT re-fire"
+    assert kinds[2] == [], "window-peak still hot: latch must hold"
+    assert kinds[3] == ["cleared"], "genuinely-cool flush must clear"
+    assert kinds[4] == ["fired"], "tail-chunk re-crossing must fire again"
+    ev = events[0][0]
     assert ev["tenant"] == "acme" and ev["value"] > ev["limit"] == 70.0
+    cl = events[3][0]
+    assert cl["tenant"] == "acme" and cl["value"] <= cl["limit"] == 70.0
 
 
 def test_alerts_scoped_to_tenant():
@@ -186,17 +191,29 @@ def test_replay_reproduces_recorded_telemetry(tmp_path):
                                        err_msg=k, **TOL)
 
 
-def test_replay_rejects_mixed_capacity(tmp_path):
+def test_replay_across_capacity_transitions(tmp_path):
+    """Replay follows the recorded surgery ops (grow, shrink, attach) so a
+    stream spanning bucket changes reproduces its telemetry bit-for-bit."""
     svc = _service()
     svc.attach("p0")
-    svc.tick()
+    recs = [svc.tick()]
     for i in range(1, 6):
-        svc.attach(f"p{i}")                  # 4 -> 8 bucket change
-    svc.tick()
+        svc.attach(f"p{i}")                  # 4 -> 8 grow
+    recs.append(svc.tick())
+    for i in range(5):
+        svc.detach(f"p{i}")                  # 8 -> 4 shrink + compaction
+    recs.append(svc.tick())
+    recs.append(svc.tick())
     path = tmp_path / "mixed.jsonl"
     svc.log.dump_jsonl(str(path))
-    with pytest.raises(ValueError, match="fixed-capacity"):
-        svc.replay(str(path))
+    replayed = svc.replay(str(path))
+    assert len(replayed) == len(recs)
+    # the scenario must actually span bucket transitions to prove the point
+    assert [r["capacity"] for r in recs] == [4, 8, 4, 4]
+    for orig, rep in zip(recs, replayed):
+        for k, v in orig["telemetry"].items():
+            np.testing.assert_allclose(rep["telemetry"][k], v,
+                                       err_msg=k, **TOL)
 
 
 # ------------------------------------------------- masked telemetry parity

@@ -1,0 +1,138 @@
+"""Crash-consistent recovery: SIGKILL a serving process mid-stream, restore
+from its snapshot directory, and resume to ≤1e-5 equivalence with an
+uninterrupted oracle — across a capacity transition, with zero XLA
+recompiles after the restore-time warmup (the PR 8 Recovery gate).
+
+The victim runs in a REAL subprocess and dies by SIGKILL (no atexit, no
+final snapshot): recovery must come from the last periodic async snapshot
+plus the membership journal alone.  The service synthesises its workload
+chunks deterministically from (seed, package key, flush index), so the
+resumed stream is bit-compatible with the oracle's regardless of where
+between snapshots the kill lands.
+"""
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet.service import FleetService
+
+N_TILES = 2
+FLUSH_EVERY = 300
+TOTAL_FLUSHES = 300          # 300 x 300 = 90k steps end to end
+GROW_AT = 100                # attach 2 more packages: capacity 4 -> 8
+KILL_AFTER = 150
+SEED = 5
+
+# module-level compile counter (listeners cannot be unregistered)
+_COMPILES: list = []
+_COUNTING = [False]
+
+
+def _on_event(event, duration, **kw):
+    if _COUNTING[0] and "backend_compile" in event:
+        _COMPILES.append(event)
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_event)
+
+
+def _cfg():
+    return SchedulerConfig(n_tiles=N_TILES, mode="v24",
+                           filtration_window=16, degraded_fallback=True,
+                           stale_limit_steps=4, recover_steps=8)
+
+
+def _drive(svc, until):
+    """The scripted serving schedule every party follows: 4 packages from
+    flush 0, two more attached at GROW_AT (4 -> 8 bucket transition)."""
+    while svc.flushes < until:
+        if svc.flushes == GROW_AT and "pkg4" not in svc.registry.packages:
+            svc.attach("pkg4", tenant="acme")
+            svc.attach("pkg5", tenant="acme")
+        svc.tick()
+
+
+_CHILD = f"""
+import sys
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet.service import FleetService
+
+cfg = SchedulerConfig(n_tiles={N_TILES}, mode="v24", filtration_window=16,
+                      degraded_fallback=True, stale_limit_steps=4,
+                      recover_steps=8)
+svc = FleetService(cfg, flush_every={FLUSH_EVERY}, seed={SEED},
+                   snapshot_dir=sys.argv[1], snapshot_every=10)
+svc.warmup(8)
+for i in range(4):
+    svc.attach(f"pkg{{i}}", tenant="acme")
+while svc.flushes < {TOTAL_FLUSHES}:
+    if svc.flushes == {GROW_AT}:
+        svc.attach("pkg4", tenant="acme")
+        svc.attach("pkg5", tenant="acme")
+    svc.tick()
+    print(f"flush {{svc.flushes}}", flush=True)
+"""
+
+
+def test_sigkill_recovery_matches_uninterrupted_oracle(tmp_path):
+    snap = tmp_path / "snaps"
+    driver = tmp_path / "driver.py"
+    driver.write_text(_CHILD)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    # -- victim: a real process, killed without warning -------------------
+    proc = subprocess.Popen([sys.executable, str(driver), str(snap)],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        for line in proc.stdout:
+            if int(line.split()[1]) >= KILL_AFTER:
+                proc.send_signal(signal.SIGKILL)
+                break
+        else:
+            raise AssertionError(f"victim exited early "
+                                 f"(rc={proc.wait()})")
+    finally:
+        proc.kill()
+        proc.wait()
+
+    # -- oracle: the same schedule, never interrupted ---------------------
+    oracle = FleetService(_cfg(), flush_every=FLUSH_EVERY, seed=SEED)
+    for i in range(4):
+        oracle.attach(f"pkg{i}", tenant="acme")
+    _drive(oracle, TOTAL_FLUSHES)
+
+    # -- restore + resume -------------------------------------------------
+    svc = FleetService.restore(str(snap))
+    assert 10 <= svc.flushes <= KILL_AFTER + 10, svc.flushes
+    assert svc.flushes > GROW_AT, "kill must land after the transition"
+    assert svc.registry.n_active == 6 and svc.registry.capacity == 8
+    _COMPILES.clear()
+    _COUNTING[0] = True
+    try:
+        _drive(svc, TOTAL_FLUSHES)
+    finally:
+        _COUNTING[0] = False
+    assert _COMPILES == [], (f"{len(_COMPILES)} compiles after restore "
+                             f"warmup: {_COMPILES}")
+
+    # -- equivalence: flush bookkeeping, final telemetry, raw state -------
+    assert svc.flushes == oracle.flushes == TOTAL_FLUSHES
+    assert svc.steps == oracle.steps == TOTAL_FLUSHES * FLUSH_EVERY
+    t_svc = svc.log.rows()[-1]["telemetry"]
+    t_ora = oracle.log.rows()[-1]["telemetry"]
+    for k, v in t_ora.items():
+        np.testing.assert_allclose(t_svc[k], v, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"telemetry[{k}]")
+    for f in ("freq", "thermal", "events", "rho_last", "stale", "degraded"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(svc.state, f), np.float32),
+            np.asarray(getattr(oracle.state, f), np.float32),
+            rtol=1e-5, atol=1e-5, err_msg=f"state.{f}")
