@@ -29,7 +29,13 @@ Acceptance bars:
   * the PR-8 degraded-mode machinery (staleness counters, sanitised
     density latch, per-lane mode mask) is near-free on the fault-free hot
     path: a fault-free `degraded_fallback=True` run_block stays within
-    1.10× of the same fleet with the fallback compiled out.
+    1.10× of the same fleet with the fallback compiled out;
+  * the plant fidelity ladder (`run_plants`, surfaced as
+    ``benchmarks.bench_plant``): the default pole bank served THROUGH the
+    plant interface stays within 1.05× of scanning `core.thermal` directly
+    (the refactor must be free), MTPS is reported per rung
+    (pole / rom / grid), and the fitted ROM's peak ΔT tracks the RC grid
+    within `repro.core.plant.ROM_PEAK_TOL`.
 
 `benchmarks.run` appends this module's rows to ``BENCH_fleet.json`` at the
 repo root, so the fleet fast path accumulates a perf trajectory across PRs.
@@ -379,6 +385,110 @@ def _streaming_90k(cfg) -> None:
     row("fleet.stream_90k", dt / stats.steps * 1e6,
         f"pkg_steps_per_s={rate:.0f};host_syncs={stats.host_syncs};"
         f"flushes={stats.flushes};syncs_per_flush={stats.syncs_per_flush:.1f}")
+
+
+PLANT_STEPS = 64
+PLANT_PACKAGES = 256
+IFACE_STEPS = 2_048
+ROM_PEAK_STEPS = 9_000
+
+
+def run_plants() -> None:
+    """Fidelity-ladder rows (surfaced as ``benchmarks.bench_plant`` so the
+    smoke can run them without the full fleet sweep; NOT called from
+    `run()` — the two modules share this file but never duplicate rows).
+
+      * ``fleet.plant_{pole,rom,grid}_256`` — run_block MTPS per rung on
+        the broadcast backend: what one fidelity upgrade costs at serving
+        time;
+      * ``fleet.plant_iface_overhead`` — GATED ≤1.05×: scanning the pole
+        bank THROUGH the plant interface vs calling `core.thermal`
+        directly (the pre-refactor form).  Both jit to the same XLA
+        program — the gate proves the indirection stays free;
+      * ``fleet.plant_rom_fidelity`` — GATED: the fitted ROM's peak ΔT
+        over a varied-load trace within `ROM_PEAK_TOL` of the grid it was
+        fit from (the 90k-step version of this gate is
+        tests/test_plant.py::test_rom_tracks_grid_peak_90k).
+    """
+    from repro.core import thermal
+    from repro.core.density import power_from_rho
+    from repro.core.plant import ROM_PEAK_TOL, make_plant
+
+    # --- MTPS per rung ----------------------------------------------------
+    n, steps = PLANT_PACKAGES, PLANT_STEPS
+    trace = jax.block_until_ready(0.9 + 1.8 * jax.random.uniform(
+        jax.random.PRNGKey(3), (steps, n, N_TILES)))
+    pkg_steps = n * steps
+    for plant in ("pole", "rom", "grid"):
+        cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24", plant=plant)
+        eng = FleetEngine(cfg, backend="broadcast", donate_state=False)
+        state = eng.init(n)
+
+        def go(eng=eng, state=state):
+            _, telem = eng.run_block(state, trace)
+            return telem
+        telem, us = timed(go, iters=10, best=True)
+        row(f"fleet.plant_{plant}_{n}", us / steps,
+            f"pkg_steps_per_s={pkg_steps / (us / 1e6):.0f};"
+            f"released_mtps={telem.as_dict()['released_mtps']:.0f};"
+            f"plant={eng.sched.plant.describe()}")
+
+    # --- interface overhead: pole via interface vs direct thermal.* ------
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24")
+    plant_obj = make_plant(cfg)
+    poles = plant_obj.poles
+    power = jax.block_until_ready(power_from_rho(
+        0.9 + 1.8 * jax.random.uniform(jax.random.PRNGKey(4),
+                                       (IFACE_STEPS, n, N_TILES))))
+    st0 = jax.block_until_ready(plant_obj.init_state((n,)))
+
+    @jax.jit
+    def via_iface(st, pw):
+        def tick(s, p):
+            s = plant_obj.step(s, p)
+            return s, plant_obj.delta_t(s)
+        return jax.lax.scan(tick, st, pw)
+
+    @jax.jit
+    def direct(st, pw):
+        def tick(s, p):
+            s = thermal.step(poles, s, p)
+            return s, thermal.delta_t(s)
+        return jax.lax.scan(tick, st, pw)
+
+    _, us_iface = timed(lambda: via_iface(st0, power)[1], iters=10,
+                        best=True)
+    _, us_direct = timed(lambda: direct(st0, power)[1], iters=10, best=True)
+    ratio = us_iface / us_direct
+    row("fleet.plant_iface_overhead", us_iface / IFACE_STEPS,
+        f"iface_vs_direct={ratio:.3f}(need<=1.05);"
+        f"pkg_steps_per_s={n * IFACE_STEPS / (us_iface / 1e6):.0f}")
+    assert ratio <= 1.05, \
+        f"plant interface {ratio:.3f}x of the direct pole path (>1.05)"
+
+    # --- ROM honesty: peak ΔT vs the grid it was fit from ----------------
+    cfg = SchedulerConfig(n_tiles=N_TILES, mode="v24", plant="grid")
+    power = power_from_rho(0.9 + 1.8 * jax.random.uniform(
+        jax.random.PRNGKey(5), (ROM_PEAK_STEPS, N_TILES)))
+    peaks = {}
+    for name in ("grid", "rom"):
+        p = make_plant(SchedulerConfig(n_tiles=N_TILES, mode="v24",
+                                       plant=name))
+
+        def tick(c, pw, p=p):
+            s, pk = c
+            s = p.step(s, pw)
+            return (s, jnp.maximum(pk, p.delta_t(s).max())), None
+        (_, pk), _ = jax.jit(
+            lambda c, tr, tick=tick: jax.lax.scan(tick, c, tr))(
+            (p.init_state(()), jnp.float32(0.0)), power)
+        peaks[name] = float(pk)
+    rel = abs(peaks["rom"] - peaks["grid"]) / peaks["grid"]
+    row("fleet.plant_rom_fidelity", 0.0,
+        f"rom_vs_grid_peak={rel:.4f}(need<={ROM_PEAK_TOL});"
+        f"peak_grid_c={peaks['grid']:.2f};peak_rom_c={peaks['rom']:.2f}")
+    assert rel <= ROM_PEAK_TOL, \
+        f"ROM peak ΔT {rel:.4f} off the grid (> {ROM_PEAK_TOL})"
 
 
 def run() -> None:

@@ -1,0 +1,21 @@
+"""Thermal-plant fidelity ladder rows (ISSUE-9).
+
+Thin surface over `benchmarks.bench_fleet.run_plants` so the ladder can
+run standalone (CI bench smoke: ``--only plant``) without dragging the
+full fleet sweep along; the rows share bench_fleet's operating points and
+land in the same ``BENCH_fleet.json`` trajectory.  Gated bars:
+
+  * ``fleet.plant_iface_overhead`` — pole bank through the plant
+    interface ≤1.05× the direct `core.thermal` scan;
+  * ``fleet.plant_rom_fidelity`` — fitted ROM peak ΔT within
+    `repro.core.plant.ROM_PEAK_TOL` of the RC grid.
+"""
+from benchmarks.bench_fleet import run_plants
+
+
+def run() -> None:
+    run_plants()
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,7 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 TRAJECTORIES = {
     "bench_fleet": os.path.join(_ROOT, "BENCH_fleet.json"),
     "bench_fleet_distributed": os.path.join(_ROOT, "BENCH_fleet.json"),
+    "bench_plant": os.path.join(_ROOT, "BENCH_fleet.json"),
     "bench_montecarlo": os.path.join(_ROOT, "BENCH_montecarlo.json"),
 }
 
@@ -46,6 +47,7 @@ MODULES = [
     "bench_roofline",        # deliverable g snapshot + §Perf deltas
     "bench_stragglers",      # beyond-paper: thermal straggler mitigation
     "bench_fleet",           # fleet-scale batched scheduler engine
+    "bench_plant",           # thermal-plant fidelity ladder (pole/grid/rom)
     "bench_fleet_distributed",  # multi-host (emulated process-group) fleets
 ]
 

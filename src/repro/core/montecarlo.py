@@ -109,8 +109,15 @@ def _pack(n_trials: int) -> int:
 
 
 def _scheduler_cfg(cfg: dvfs.DVFSConfig, lanes: int, mode: str,
-                   filtration_impl: str) -> SchedulerConfig:
-    """Map the DVFS simulator's knobs onto an equivalent fleet scheduler."""
+                   filtration_impl: str,
+                   plant: str = "pole") -> SchedulerConfig:
+    """Map the DVFS simulator's knobs onto an equivalent fleet scheduler.
+
+    Per-trial Rth/τ/poll draws ride `PackageParams`, which requires the
+    pole-bank plant; higher-fidelity rungs (grid / rom) run the fleet
+    HOMOGENEOUS — trial diversity then comes from the workload draws alone
+    (documented restriction, see `run`).
+    """
     return SchedulerConfig(
         n_tiles=lanes, mode=mode, two_pole=False, use_coupling=False,
         step_ms=cfg.dt_ms,
@@ -119,7 +126,8 @@ def _scheduler_cfg(cfg: dvfs.DVFSConfig, lanes: int, mode: str,
         filtration_impl=filtration_impl,
         t_safe_margin_c=cfg.t_safe_margin_c,
         power_exponent=cfg.power_exponent,
-        heterogeneous=True,
+        heterogeneous=plant == "pole",
+        plant=plant,
         throttle_level=cfg.throttle_level,
         resume_below_c=cfg.resume_below_c,
         recover_ms=cfg.recover_ms,
@@ -144,7 +152,8 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
         cfg: dvfs.DVFSConfig | None = None,
         fp: Fingerprint = FINGERPRINT, *,
         backend: str = "broadcast", devices: int | None = None,
-        filtration_impl: str = "incremental") -> MCResult:
+        filtration_impl: str = "incremental",
+        plant: str = "pole") -> MCResult:
     """Run the paired (baseline, V24) Monte-Carlo experiment at fleet scale.
 
     One trial = one lane of a heterogeneous `FleetEngine` fleet (per-trial
@@ -156,6 +165,15 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
     the O(1) serving default) or the ring oracle.  Statistically identical
     to `run_reference` — gated ≤1e-5 on the aggregate §10 statistics by
     `benchmarks/bench_montecarlo.py`.
+
+    ``plant`` picks the thermal-plant fidelity rung (`repro.core.plant`):
+    the default pole bank carries the full §10.1 per-trial Rth/τ/poll
+    heterogeneity; under ``"grid"`` / ``"rom"`` those draws have no
+    per-package override (the fleet runs the fitted/spatial physics
+    HOMOGENEOUSLY) so trial diversity comes from the workload draws alone —
+    compare the two stats dicts to see how much of the §3.4 guard-band
+    reduction survives the higher-fidelity plant
+    (`repro.core.guardband.from_montecarlo`).
     """
     from repro.fleet import FleetEngine   # late import: engine ← core cycle
 
@@ -177,11 +195,14 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
                               tau.reshape(lane_shape), cfg.dt_ms)
 
     def survey(mode: str):
-        eng = _engine(_scheduler_cfg(cfg, lanes, mode, filtration_impl),
+        eng = _engine(_scheduler_cfg(cfg, lanes, mode, filtration_impl,
+                                     plant),
                       fp, backend, devices)
-        pkg = eng.sched.package_params(
-            banks, poll_ticks=poll.reshape(lane_shape),
-            batch_shape=(n_pkg,))
+        pkg = None
+        if plant == "pole":
+            pkg = eng.sched.package_params(
+                banks, poll_ticks=poll.reshape(lane_shape),
+                batch_shape=(n_pkg,))
         # the oracle seeds each trial's ring with its opening density
         state = eng.init(n_pkg, pkg=pkg, filtration_fill=fleet_trace[0])
         _, sv = eng.run_survey(state, fleet_trace, burn_in=burn_in)

@@ -1,0 +1,395 @@
+"""Thermal-plant fidelity ladder — one plant interface, three rungs (MFIT-style).
+
+The paper's V24/V7.0 firmware (§4.2, §5.2) is derived against a lumped
+two-pole IIR plant, but its guard-band claims (§3.4, §10) are only as
+credible as the plant behind them.  MFIT and 3D-ICE 4.0 (PAPERS.md) frame
+the fix as a *ladder* of fidelities — spatial RC-grids for ground truth,
+reduced-order models fit from them for speed.  This module is that ladder
+behind ONE interface, registered like the fleet backends
+(`repro.fleet.backends`):
+
+  * ``pole`` — `PoleBankPlant`: the paper's pole bank (`core/thermal.py`),
+    bit-matching the pre-refactor scheduler — the regression oracle.
+  * ``grid`` — `GridPlant`: an explicit-Euler RC grid over floorplan cells,
+    per tile a gy×gx patch with a reduced-conductance "bridge shadow" band
+    (the §5.2 EMIB lateral pole, recovered from geometry instead of being
+    postulated); tile temperatures are cell-region MEANS.  The non-uniform
+    vertical conductance is what makes the tile-mean dynamics genuinely
+    multi-exponential — a uniform grid's region mean collapses exactly to
+    the lumped pole (heat is conserved by the Laplacian), so a uniform grid
+    would be fidelity theatre.
+  * ``rom`` — `FittedROMPlant`: a reduced-order pole bank least-squares-fit
+    from `GridPlant` step responses (`fit`), closing the ladder: grid
+    fidelity at pole-bank cost, and — being a pole bank — it rides the
+    fused Pallas kernel's heterogeneous-row fast path unchanged.
+
+Interface contract (consumed by `ThermalScheduler` and, through it, every
+fleet backend):
+
+  * ``init_state(batch_shape)`` → state with TWO trailing (non-batch) dims,
+    so `state_pspec` and the control plane's per-lane leaf discrimination
+    work identically for every rung;
+  * ``step(state, power_w, poles=None)`` — one dt tick; ``poles`` is the
+    heterogeneous per-package override (pole-family plants only);
+  * ``delta_t(state)`` → [..., n_tiles] tile temperatures;
+  * ``eta`` / ``gain_sum`` — the f32 control constants the v24 budget law
+    consumes (derived from the plant's OWN slow mode / DC gain);
+  * ``fit(...)`` — build a reduced-order plant from a higher-fidelity one
+    (implemented by `FittedROMPlant`).
+
+All plant constants are NUMPY-backed f32 (like `core/thermal.py`): they
+flow through jnp expressions as constants and stay concrete under a jit
+trace, so swapping plants can never introduce a recompile-per-step.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+
+# ROM-vs-grid agreement: peak-ΔT relative tolerance over the 90k-step trace
+# (gated in tests/test_plant.py and benchmarks/bench_fleet.py; documented in
+# docs/architecture.md — keep the three in sync through this constant).
+ROM_PEAK_TOL = 0.02
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_plant(cls):
+    """Class decorator: register a ThermalPlant under ``cls.name``."""
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_plants() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def plant_class(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown plant {name!r} "
+                         f"(available: {', '.join(available_plants())})")
+
+
+def make_plant(cfg, fp: Fingerprint = FINGERPRINT) -> "ThermalPlant":
+    """Build the plant named by ``cfg.plant`` from a SchedulerConfig."""
+    return plant_class(cfg.plant)(cfg, fp)
+
+
+def _eta_f32(decay_slow, ahead: float):
+    """η = 1 − a_slow^ahead in f32, via NUMPY.
+
+    One derivation shared by every plant's control constant and the
+    per-package `PackageParams.eta` draws: identical inputs give bitwise
+    identical η on every path, and the computation stays concrete even when
+    a scheduler is constructed inside a jit trace (jnp would stage it).
+    """
+    a = np.asarray(decay_slow, np.float32)
+    return np.float32(1.0) - a ** np.float32(ahead)
+
+
+class ThermalPlant:
+    """Base class: one rung of the fidelity ladder (see module docstring)."""
+
+    name: str = ""
+    # "pole" ⇒ the state is a pole bank the fused Pallas kernel can advance
+    # in VMEM; anything else falls back to the backends' pure-JAX scan path.
+    family: str = ""
+    # pole-family plants expose their bank for the kernel / hetero draws
+    poles: "thermal.PoleParams | None" = None
+
+    def __init__(self, cfg, fp: Fingerprint):
+        self.cfg, self.fp = cfg, fp
+        self.n_tiles = cfg.n_tiles
+        self.eta: float = 0.0          # preposition fraction for v24
+        self.gain_sum = None           # ΣG (scalar or [n_tiles] f32)
+
+    def init_state(self, batch_shape: tuple[int, ...] = ()) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def step(self, state, power_w, poles=None):
+        raise NotImplementedError
+
+    def delta_t(self, state):
+        raise NotImplementedError
+
+    def state_pspec(self, batch_axes: tuple):
+        """PartitionSpec for the thermal leaf: batch axes lead, the two
+        trailing (model-internal) dims stay unpartitioned — identical for
+        every rung because `init_state` always emits two trailing dims."""
+        from jax.sharding import PartitionSpec as P
+        return P(*batch_axes, None, None)
+
+    @classmethod
+    def fit(cls, source: "ThermalPlant", **kw):
+        raise NotImplementedError(
+            f"{cls.__name__} is not a fitted plant (see FittedROMPlant)")
+
+    def describe(self) -> str:
+        return self.name
+
+
+@register_plant
+class PoleBankPlant(ThermalPlant):
+    """The paper's pole bank (§4.2/§5.2) behind the plant interface.
+
+    Delegates to `core.thermal` with an identically-constructed bank, so the
+    refactored scheduler is op-for-op the pre-refactor path — this class is
+    the regression oracle the whole ladder is gated against.
+    """
+
+    name = "pole"
+    family = "pole"
+
+    def __init__(self, cfg, fp: Fingerprint):
+        super().__init__(cfg, fp)
+        self.poles = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
+                      else thermal.single_pole(fp, cfg.step_ms))
+        self.eta = float(_eta_f32(self.poles.decay[-1],
+                                  cfg.lookahead_ms / cfg.step_ms))
+        # numpy f32 — the same value (same ops) the pre-refactor scheduler
+        # computed inline as `self.poles.gain.sum()` each update
+        self.gain_sum = self.poles.gain.sum()
+
+    def init_state(self, batch_shape: tuple[int, ...] = ()) -> jnp.ndarray:
+        return thermal.init_state(self.poles, self.n_tiles, batch_shape)
+
+    def step(self, state, power_w, poles=None):
+        return thermal.step(self.poles if poles is None else poles,
+                            state, power_w)
+
+    def delta_t(self, state):
+        return thermal.delta_t(state)
+
+    def describe(self) -> str:
+        return f"pole[n_poles={self.poles.decay.shape[0]}]"
+
+
+@register_plant
+class GridPlant(ThermalPlant):
+    """Spatial RC grid: per tile a gy×gx cell patch, explicit Euler.
+
+    Per-cell physics (hat units — conductances normalised by the mean
+    vertical conductance g₀ = 1/(m·Rth), capacitance C = τ·g₀ uniform):
+
+        T' = T + r·(Rth·P_tile − ĝ∘T + κ·(A·T − deg∘T)),   r = dt/(τ·s)
+
+    where ĝ is the vertical-conductance map (mean 1): the trailing
+    ``bridge_frac`` columns of every tile sit in an EMIB "bridge shadow"
+    with conductance scaled by (1 − grid_contrast) — those cells drain
+    slowly through the substrate, reproducing the §5.2 slow lateral pole
+    from geometry.  κ = grid_kappa is the lateral/vertical conductance
+    ratio; tile boundaries are adiabatic (inter-tile coupling stays Γ's
+    job, so the Γ-coupled control law is identical across rungs).  Power
+    is injected uniformly over the tile's patch; `delta_t` reads the patch
+    MEAN.  Control constants come from the patch operator itself: η from
+    its slowest eigen-decay, ΣG from the numerically-solved DC gain.
+
+    State layout: [*batch, gy, n_tiles·gx] — patches concatenated along x
+    (walls in the adjacency, not the layout), two trailing dims like every
+    plant.  `simulate` runs whole traces through the Pallas stencil kernel
+    (`repro.kernels.thermal_conv.grid_conv`); `step` is the pure-JAX form
+    every backend scans.
+    """
+
+    name = "grid"
+    family = "grid"
+    bridge_frac = 0.25   # fraction of tile columns under the bridge shadow
+
+    def __init__(self, cfg, fp: Fingerprint):
+        super().__init__(cfg, fp)
+        gy = gx = int(cfg.grid_cells)
+        if gy < 2:
+            raise ValueError(f"grid_cells must be >= 2, got {gy}")
+        if not (0.0 <= cfg.grid_contrast < 1.0):
+            raise ValueError(f"grid_contrast must be in [0, 1), got "
+                             f"{cfg.grid_contrast}")
+        if cfg.grid_substeps < 1:
+            raise ValueError("grid_substeps must be >= 1")
+        nt, W = cfg.n_tiles, cfg.n_tiles * gx
+        self.gy, self.gx, self.W = gy, gx, W
+        self.substeps = int(cfg.grid_substeps)
+        self.kappa = np.float32(cfg.grid_kappa)
+        self.r = np.float32(cfg.step_ms / (fp.tau_ms * self.substeps))
+        self.rth = np.float32(fp.rth_c_per_w)
+
+        # vertical-conductance column profile (mean exactly 1): bridge
+        # shadow on the trailing columns of every tile
+        n_b = max(1, round(gx * self.bridge_frac)) if cfg.grid_contrast else 0
+        col = np.ones(gx, np.float64)
+        if n_b:
+            col[gx - n_b:] = 1.0 - cfg.grid_contrast
+            col *= gx / col.sum()
+        self.ghat = np.asarray(np.tile(col, nt)[None, :]
+                               * np.ones((gy, 1)), np.float32)
+
+        # adjacency: horizontal within tiles (adiabatic walls at the tile
+        # boundaries), vertical within the patch; deg = neighbour counts
+        A = np.zeros((W, W), np.float32)
+        for x in range(W - 1):
+            if (x % gx) != gx - 1:
+                A[x, x + 1] = A[x + 1, x] = 1.0
+        B = np.zeros((gy, gy), np.float32)
+        for y in range(gy - 1):
+            B[y, y + 1] = B[y + 1, y] = 1.0
+        self.adj_h, self.adj_v = A, B
+        self.deg = np.asarray(A.sum(0)[None, :] + B.sum(0)[:, None],
+                              np.float32)
+
+        # one tile's patch operator (m×m, symmetric): eigen-decays give the
+        # stability check, η's slow mode, and the ROM fit's rate spread;
+        # its DC solve gives the budget law's ΣG
+        m = gy * gx
+        op = np.zeros((m, m), np.float64)
+        for y in range(gy):
+            for x in range(gx):
+                i = y * gx + x
+                op[i, i] -= col[x]
+                for j in ((y - 1, x), (y + 1, x), (y, x - 1), (y, x + 1)):
+                    yy, xx = j
+                    if 0 <= yy < gy and 0 <= xx < gx:
+                        k = yy * gx + xx
+                        op[i, k] += cfg.grid_kappa
+                        op[i, i] -= cfg.grid_kappa
+        evals = np.linalg.eigvalsh(np.eye(m) + float(self.r) * op)
+        if np.abs(evals).max() >= 1.0:
+            raise ValueError(
+                f"grid explicit-Euler unstable (spectral radius "
+                f"{np.abs(evals).max():.3f} >= 1) — raise "
+                f"SchedulerConfig.grid_substeps (now {self.substeps})")
+        # discrete eigen-decays over a FULL step (substeps folded in)
+        self.eigen_decay = np.sort(np.clip(evals, 0.0, None)) ** self.substeps
+        self.eta = float(_eta_f32(self.eigen_decay[-1],
+                                  cfg.lookahead_ms / cfg.step_ms))
+        # DC gain: steady state of op·T = −Rth·1 (unit tile power, uniform
+        # injection); the patch mean is the tile's effective Rth
+        dc = np.linalg.solve(op, -float(self.rth) * np.ones(m))
+        self.gain_sum = np.float32(dc.mean())
+
+    def init_state(self, batch_shape: tuple[int, ...] = ()) -> jnp.ndarray:
+        return jnp.zeros(batch_shape + (self.gy, self.W))
+
+    def step(self, state, power_w, poles=None):
+        if poles is not None:
+            raise ValueError("GridPlant has no per-package pole override "
+                             "(heterogeneous fleets need a pole-family "
+                             "plant)")
+        # [..., n_tiles] → uniform per-cell drive [..., 1, W]
+        drive = jnp.repeat(self.rth * power_w, self.gx, axis=-1)[..., None, :]
+        for _ in range(self.substeps):
+            lap = (jnp.einsum("ij,...jw->...iw", self.adj_v, state)
+                   + jnp.matmul(state, self.adj_h) - self.deg * state)
+            state = state + self.r * (drive - self.ghat * state
+                                      + self.kappa * lap)
+        return state
+
+    def delta_t(self, state):
+        s = state.reshape(state.shape[:-1] + (self.n_tiles, self.gx))
+        return s.mean(axis=(-1, -3))
+
+    def simulate(self, power_trace, state0=None, *, chunk: int = 128,
+                 interpret: bool | None = None):
+        """Whole-trace [T, n_tiles] run through the Pallas stencil kernel.
+
+        Returns (dts [T, n_tiles], final_state [gy, W]) — the grid analogue
+        of `thermal.simulate` / `kernels.thermal_conv.thermal_conv`.
+        """
+        from repro.kernels.thermal_conv import grid_conv
+        nt = self.n_tiles
+        inject = np.zeros((nt, self.W), np.float32)
+        readout = np.zeros((self.W, nt), np.float32)
+        for t in range(nt):
+            inject[t, t * self.gx:(t + 1) * self.gx] = self.rth
+            readout[t * self.gx:(t + 1) * self.gx, t] = 1.0 / (self.gy
+                                                               * self.gx)
+        if state0 is None:
+            state0 = jnp.zeros((self.gy, self.W), jnp.float32)
+        return grid_conv(power_trace, self.adj_h, self.adj_v, self.deg,
+                         self.ghat, inject, readout, state0,
+                         r=float(self.r), kappa=float(self.kappa),
+                         substeps=self.substeps, chunk=chunk,
+                         interpret=interpret)
+
+    def step_response(self, n_steps: int, power_w: float = 1.0) -> np.ndarray:
+        """[n_steps] tile-mean ΔT for a unit power step, in NUMPY.
+
+        Tiles are identical and adiabatic, so one all-tiles-on run is every
+        tile's self response.  Concrete (no tracing) — this is what
+        `FittedROMPlant.fit` regresses against, and fitted banks must be
+        constants under jit.
+        """
+        T = np.zeros((self.gy, self.W), np.float32)
+        drive = np.float32(self.rth * power_w)
+        out = np.empty(n_steps, np.float32)
+        for t in range(n_steps):
+            for _ in range(self.substeps):
+                lap = self.adj_v @ T + T @ self.adj_h - self.deg * T
+                T = T + self.r * (drive - self.ghat * T + self.kappa * lap)
+            out[t] = T[:, :self.gx].mean()
+        return out
+
+    def describe(self) -> str:
+        return (f"grid[{self.gy}x{self.gx}/tile,kappa={float(self.kappa):g},"
+                f"contrast={self.cfg.grid_contrast:g},sub={self.substeps}]")
+
+
+@register_plant
+class FittedROMPlant(PoleBankPlant):
+    """Reduced-order pole bank least-squares-fit from GridPlant responses.
+
+    `fit` regresses the grid's tile-mean step response onto a fixed bank of
+    ``rom_poles`` exponentials whose rates are log-spaced over the grid
+    operator's OWN eigen-rate spread (slowest eigen-decay up to its shoulder)
+    — so the slow pole is exact by construction and the least squares only
+    has to place the fast weight.  Being a pole bank (family "pole"), the
+    result steps through `core.thermal` like the paper's plant and rides the
+    fused kernel's heterogeneous-row path; unlike the fingerprint bank its
+    gains come from the spatial model, not the datasheet.
+    """
+
+    name = "rom"
+    family = "pole"
+
+    def __init__(self, cfg, fp: Fingerprint):
+        ThermalPlant.__init__(self, cfg, fp)
+        grid = GridPlant(cfg, fp)
+        self.poles, self.fit_rel_err = self.fit(
+            grid, n_poles=cfg.rom_poles, n_steps=cfg.rom_fit_steps)
+        self.eta = float(_eta_f32(self.poles.decay[-1],
+                                  cfg.lookahead_ms / cfg.step_ms))
+        self.gain_sum = self.poles.gain.sum(-1)          # [n_tiles] f32
+
+    @classmethod
+    def fit(cls, source: GridPlant, *, n_poles: int = 3,
+            n_steps: int = 2048):
+        """(PoleParams, rel_err): LSQ pole bank from grid step responses.
+
+        rel_err is max |fit − grid| / max grid over the fit window — the
+        honesty metric behind the documented ROM_PEAK_TOL gate.
+        """
+        if n_poles < 1:
+            raise ValueError("rom_poles must be >= 1")
+        y = source.step_response(n_steps)                # [n_steps]
+        # rates from the grid's own spectrum: slowest mode up to min(its
+        # 32× shoulder, the fastest mode) — log-spaced, slow pole LAST
+        # (mirrors thermal.two_pole's fast-first ordering)
+        lam = -np.log(np.clip(source.eigen_decay, 1e-12, 1.0))
+        lam_slow = lam[lam > 1e-9].min()
+        lam_fast = min(lam.max(), lam_slow * 32.0)
+        rates = (np.geomspace(lam_slow, lam_fast, n_poles) if n_poles > 1
+                 else np.asarray([lam_slow]))
+        decay = np.exp(-np.sort(rates)[::-1]).astype(np.float32)  # ascending
+        k = np.arange(1, n_steps + 1)[:, None]
+        basis = 1.0 - np.asarray(decay, np.float64)[None, :] ** k
+        g, *_ = np.linalg.lstsq(basis, np.asarray(y, np.float64), rcond=None)
+        rel_err = float(np.abs(basis @ g - y).max() / np.abs(y).max())
+        gain = np.tile(np.asarray(g, np.float32), (source.n_tiles, 1))
+        return thermal.PoleParams(decay=decay, gain=gain), rel_err
+
+    def describe(self) -> str:
+        return (f"rom[n_poles={self.poles.decay.shape[0]},"
+                f"fit_err={self.fit_rel_err:.2e}]")

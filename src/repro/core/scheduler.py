@@ -42,22 +42,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pdu_gate, thermal
+from repro.core import plant as plant_mod
 from repro.core.coupling import apply_coupling, coupling_matrix
 from repro.core.density import power_from_rho
 from repro.core.fingerprint import FINGERPRINT, Fingerprint
-
-
-def _eta_f32(decay_slow, ahead: float):
-    """η = 1 − a_slow^ahead in f32, via NUMPY.
-
-    One derivation shared by the homogeneous scheduler constant and the
-    per-package `PackageParams.eta` draws: identical inputs give bitwise
-    identical η on both paths, and the computation stays concrete even when
-    a scheduler is constructed inside a jit trace (jnp would stage it).
-    """
-    import numpy as np
-    a = np.asarray(decay_slow, np.float32)
-    return np.float32(1.0) - a ** np.float32(ahead)
+# shared η derivation lives with the plant ladder now; re-exported here for
+# existing importers (homogeneous constant, PackageParams draws, tests)
+from repro.core.plant import _eta_f32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +88,18 @@ class SchedulerConfig:
     degraded_fallback: bool = False
     stale_limit_steps: int = 5     # consecutive stale steps before fallback
     recover_steps: int = 10        # consecutive fresh steps before recovery
+    # thermal-plant fidelity rung (`repro.core.plant`): "pole" is the
+    # paper's bank (bit-matching the pre-refactor path), "grid" the spatial
+    # RC-grid ground truth, "rom" the reduced-order bank fit from it.  The
+    # grid_*/rom_* knobs are scalars so the config stays hashable (engine
+    # caches) and JSON-round-trips (service snapshot manifests).
+    plant: str = "pole"
+    grid_cells: int = 8            # cells per tile edge (gy = gx patches)
+    grid_kappa: float = 0.35       # lateral / vertical conductance ratio
+    grid_contrast: float = 0.5     # bridge-shadow g_v reduction (§5.2 EMIB)
+    grid_substeps: int = 1         # Euler substeps per scheduler step
+    rom_poles: int = 3             # fitted ROM bank size
+    rom_fit_steps: int = 2048      # step-response window the fit regresses
 
     @property
     def lookahead_ms(self) -> float:
@@ -125,7 +128,11 @@ class SchedulerState(NamedTuple):
     """All array leaves tolerate leading batch dims ([*batch, ...]) so one
     state can carry an entire fleet of packages stepped in lockstep."""
 
-    thermal: jnp.ndarray            # [..., n_tiles, n_poles]
+    # plant state, two trailing model dims: [..., n_tiles, n_poles] for
+    # pole-family plants, [..., gy, n_tiles·gx] for the RC grid — every
+    # rung keeps exactly two trailing dims so pspecs / lane surgery are
+    # plant-agnostic (see repro.core.plant)
+    thermal: jnp.ndarray
     # FiltrationStats (filtration_impl="incremental", the default) or
     # Filtration (the "ring" oracle) — structure follows the config
     filtration: "pdu_gate.FiltrationStats | pdu_gate.Filtration"
@@ -179,25 +186,37 @@ class ThermalScheduler:
                                       or cfg.recover_steps < 1):
             raise ValueError("stale_limit_steps and recover_steps must be "
                              ">= 1")
+        if cfg.plant not in plant_mod.available_plants():
+            raise ValueError(
+                f"unknown plant {cfg.plant!r} (available: "
+                f"{', '.join(plant_mod.available_plants())})")
+        if cfg.heterogeneous and cfg.plant != "pole":
+            raise ValueError(
+                "heterogeneous=True requires plant='pole' — per-package "
+                "PackageParams draws override the fingerprint pole bank; "
+                f"plant {cfg.plant!r} has no per-package override")
         self.cfg = cfg
         self.fp = fp
-        base = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
-                else thermal.single_pole(fp, cfg.step_ms))
-        self.poles = base
+        # the thermal plant is a pluggable fidelity rung (repro.core.plant):
+        # PoleBankPlant constructs the identical bank the scheduler used to
+        # build inline, so plant="pole" (the default) is op-for-op the
+        # pre-refactor path
+        self.plant = plant_mod.make_plant(cfg, fp)
+        # pole-family plants expose their bank (fused kernel, hetero draws,
+        # oracle comparisons); None for grid — package_params guards on it
+        self.poles = self.plant.poles
         self.gamma = (coupling_matrix(cfg.n_tiles) if cfg.use_coupling
                       and cfg.n_tiles > 1 else None)
         # per-tile Γ row-sum normalisation keeps multi-tile steady-state in the
         # same °C/W fingerprint frame as the single-tile validation
         if self.gamma is not None:
             self.gamma = self.gamma / self.gamma.sum(axis=1, keepdims=True)
-        # η = 1 − a_slow^(Δt_la/dt) (= 1 − e^(−Δt_la/τ)), derived from the
-        # slow pole's f32 decay with the SAME ops per-package heterogeneous
-        # draws use (`_eta_f32`, shared with PackageParams) — so a
-        # heterogeneous fleet whose draws all equal the fingerprint
-        # bit-matches the homogeneous path.  Numpy, not jnp: stays a
-        # concrete python float even under a jit trace.
-        self.eta = float(_eta_f32(self.poles.decay[-1],
-                                  cfg.lookahead_ms / cfg.step_ms))
+        # η = 1 − a_slow^(Δt_la/dt), derived by the plant from its OWN slow
+        # mode with the SAME f32 ops per-package heterogeneous draws use
+        # (`plant._eta_f32`, shared with PackageParams) — so a heterogeneous
+        # fleet whose draws all equal the fingerprint bit-matches the
+        # homogeneous path.  A concrete python float even under jit trace.
+        self.eta = self.plant.eta
         # reactive_poll ramp-back per step (mirrors dvfs.simulate_reactive)
         self.ramp = (1.0 - cfg.throttle_level) / max(
             int(cfg.recover_ms / cfg.step_ms), 1)
@@ -220,6 +239,10 @@ class ThermalScheduler:
         homogeneous interval).  η and ΣG are derived here, eagerly, in f32.
         """
         c = self.cfg
+        if self.poles is None:
+            raise ValueError(
+                f"package_params requires a pole-family plant "
+                f"(plant={c.plant!r} carries no pole bank)")
         if poles is None:
             poles = thermal.PoleParams(
                 decay=jnp.broadcast_to(self.poles.decay,
@@ -291,7 +314,7 @@ class ThermalScheduler:
         def make(pkg_in, fill_in) -> SchedulerState:
             fb = c.degraded_fallback
             return SchedulerState(
-                thermal=thermal.init_state(self.poles, c.n_tiles, batch_shape),
+                thermal=self.plant.init_state(batch_shape),
                 filtration=init_ft(
                     c.filtration_window, c.n_tiles, fill=fill_in,
                     batch_shape=batch_shape),
@@ -350,7 +373,7 @@ class ThermalScheduler:
                                 poll_ticks=P(*ba, None))
         fb = self.cfg.degraded_fallback
         return SchedulerState(
-            thermal=P(*ba, None, None),
+            thermal=self.plant.state_pspec(ba),
             filtration=ft,
             freq=P(*ba, None),
             step=P(),
@@ -373,12 +396,13 @@ class ThermalScheduler:
                                eta=P(), at_risk=tile, balance=tile)
 
     def _physics(self, st: SchedulerState):
-        """(poles, eta, gain_sum) — the shared fingerprint constants, or the
-        state's per-package draws when the fleet is heterogeneous.  Both
-        sources carry the same eagerly-derived f32 values, so identical
-        draws reproduce the homogeneous trajectory bit-for-bit."""
+        """(poles, eta, gain_sum) — the plant's constants (``poles=None`` ⇒
+        the plant steps its own physics), or the state's per-package draws
+        when the fleet is heterogeneous.  Both sources carry the same
+        eagerly-derived f32 values, so identical draws reproduce the
+        homogeneous trajectory bit-for-bit."""
         if st.pkg is None:
-            return self.poles, self.eta, self.poles.gain.sum()
+            return None, self.plant.eta, self.plant.gain_sum
         return (thermal.PoleParams(decay=st.pkg.decay, gain=st.pkg.gain),
                 st.pkg.eta, st.pkg.gain_sum)
 
@@ -418,7 +442,7 @@ class ThermalScheduler:
         if c.mode == "reactive_poll":
             return self._update_reactive_poll(st, ft, p_now, poles)
 
-        dt_now = thermal.delta_t(st.thermal)
+        dt_now = self.plant.delta_t(st.thermal)
         t_allow = fp.t_crit_c - c.t_safe_margin_c - fp.t_ambient_c
 
         if c.mode == "v24":
@@ -472,8 +496,8 @@ class ThermalScheduler:
         if degraded is None:
             p = p_now * freq ** c.power_exponent
             p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
-            thermal_next = thermal.step(poles, st.thermal, p_eff)
-            temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+            thermal_next = self.plant.step(st.thermal, p_eff, poles=poles)
+            temp = fp.t_ambient_c + self.plant.delta_t(thermal_next)
             events = st.events + jnp.any(temp > fp.t_crit_c,
                                          axis=-1).astype(jnp.int32)
         else:
@@ -486,8 +510,8 @@ class ThermalScheduler:
             f_used = jnp.where(deg_t, st.freq, freq)
             p = p_now * f_used ** c.power_exponent
             p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
-            thermal_next = thermal.step(poles, st.thermal, p_eff)
-            temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+            thermal_next = self.plant.step(st.thermal, p_eff, poles=poles)
+            temp = fp.t_ambient_c + self.plant.delta_t(thermal_next)
 
             poll = self.poll_ticks if st.pkg is None else st.pkg.poll_ticks
             polled = (st.step % poll) == 0
@@ -538,8 +562,8 @@ class ThermalScheduler:
         c, fp = self.cfg, self.fp
         p = p_now * st.freq ** c.power_exponent
         p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
-        thermal_next = thermal.step(poles, st.thermal, p_eff)
-        temp = fp.t_ambient_c + thermal.delta_t(thermal_next)
+        thermal_next = self.plant.step(st.thermal, p_eff, poles=poles)
+        temp = fp.t_ambient_c + self.plant.delta_t(thermal_next)
 
         poll = self.poll_ticks if st.pkg is None else st.pkg.poll_ticks
         polled = (st.step % poll) == 0

@@ -45,9 +45,35 @@ class FusedBackend(FleetBackend):
         self.block_packages = block_packages
         self.time_chunk = time_chunk
         self.interpret = interpret
+        self._rom_plant = None
+        plant = sched.plant
+        if plant.family != "pole":
+            # grid states can't live in the kernel's pole-bank VMEM plane:
+            # shadow the method with None so the engine's
+            # `backend_impl.run_block is not None` dispatch routes this
+            # backend through its pure-JAX scan path (same state layout,
+            # ≤1e-5-gated against the other backends) — a fleet can still
+            # run a fidelity mix by mapping plants to engines per package
+            # group
+            self.run_block = None
+            self.params = None
+            return
+        if plant.name != "pole":
+            # fitted ROM banks ride the kernel's heterogeneous-row path:
+            # the per-tile bank broadcasts as VMEM planes (`_rom_rows`)
+            self._rom_plant = plant
+        import numpy as np
         from repro.core.density import _RTOK_INTERCEPT, _RTOK_SLOPE
         from repro.core.fingerprint import FINGERPRINT
         c, fp = sched.cfg, sched.fp
+        gain = np.asarray(sched.poles.gain, np.float32)
+        if gain.ndim == 1:          # the paper's bank — exact scalars
+            gain_tuple = tuple(float(g) for g in gain)
+            gain_sum = float(gain.sum())
+        else:                       # per-tile fitted bank: the kernel reads
+            gain_tuple = tuple(float(g) for g in gain.mean(0))  # het rows —
+            gain_sum = float(np.asarray(plant.gain_sum,         # placeholders
+                                        np.float32).mean())
         self.params = FleetStepParams(
             window=c.filtration_window,
             recent=pdu_gate.recent_len(c.filtration_window),
@@ -57,7 +83,7 @@ class FusedBackend(FleetBackend):
             power_exponent=float(c.power_exponent),
             eta=float(sched.eta),
             t_allow=float(fp.t_crit_c - c.t_safe_margin_c - fp.t_ambient_c),
-            gain_sum=float(sched.poles.gain.sum()),
+            gain_sum=gain_sum,
             ahead=float(c.lookahead_ms / c.step_ms),
             # density.power_from_rho reads the module FINGERPRINT (not the
             # scheduler's fp) — mirror that so the kernel's power chain
@@ -72,7 +98,7 @@ class FusedBackend(FleetBackend):
             t_ambient_c=float(fp.t_ambient_c),
             throttle_floor=float(fp.throttle_floor),
             decay=tuple(float(d) for d in sched.poles.decay),
-            gain=tuple(float(g) for g in sched.poles.gain),
+            gain=gain_tuple,
             # reactive_poll baseline constants (homogeneous defaults; a
             # heterogeneous fleet overrides poll per package via het rows)
             throttle_level=float(c.throttle_level),
@@ -113,13 +139,37 @@ class FusedBackend(FleetBackend):
             one(pkg.eta), one(pkg.gain_sum), one(pkg.poll_ticks),
         ], axis=0)
 
+    def _rom_rows(self, n: int) -> jnp.ndarray:
+        """Fitted ROM bank as broadcast heterogeneous planes [2·np+3, t, n].
+
+        The kernel's het path already supports per-tile-varying decay/gain/
+        ΣG planes, so a `FittedROMPlant` fleet (homogeneous across packages,
+        per-tile gains from the grid fit) is just the same rows broadcast
+        over the package lanes — constants folded at trace time.
+        """
+        import numpy as np
+        p = self._rom_plant
+        n_poles, nt = p.poles.decay.shape[0], p.n_tiles
+        rows = np.empty((2 * n_poles + 3, nt, 1), np.float32)
+        rows[:n_poles] = np.asarray(p.poles.decay,
+                                    np.float32)[:, None, None]
+        rows[n_poles:2 * n_poles] = np.asarray(p.poles.gain,
+                                               np.float32).T[:, :, None]
+        rows[2 * n_poles] = np.float32(p.eta)
+        rows[2 * n_poles + 1] = np.asarray(p.gain_sum,
+                                           np.float32)[:, None]
+        rows[2 * n_poles + 2] = np.float32(self.sched.poll_ticks)
+        return jnp.broadcast_to(jnp.asarray(rows),
+                                (2 * n_poles + 3, nt, n))
+
     def run_block(self, state: SchedulerState, rho_trace: jnp.ndarray):
         """Advance T steps in one kernel.  rho_trace: [T, n, tiles].
 
         Returns (state', temps [T, n, tiles], freqs [T, n, tiles]).
         Heterogeneous fleets feed their per-package decay/gain/η/ΣG/poll
-        draws into the kernel alongside the ring (`_het_rows`), and the
-        ``reactive_poll`` baseline threads its hysteresis latch through
+        draws into the kernel alongside the ring (`_het_rows`) — fitted ROM
+        plants reuse the same path with broadcast rows (`_rom_rows`) — and
+        the ``reactive_poll`` baseline threads its hysteresis latch through
         kernel scratch.
         """
         t = rho_trace.shape[0]
@@ -130,7 +180,12 @@ class FusedBackend(FleetBackend):
         buf0 = jnp.roll(ft.buf, -ft.ptr, axis=-2)
         wsum, csum, rsum = pdu_gate.exact_stats(buf0, 0)
 
-        het = None if state.pkg is None else self._het_rows(state.pkg)
+        if state.pkg is not None:
+            het = self._het_rows(state.pkg)
+        elif self._rom_plant is not None:
+            het = self._rom_rows(state.freq.shape[0])
+        else:
+            het = None
         thr0 = (None if state.throttled is None
                 else state.throttled.astype(jnp.float32).T)
         fb0 = (None if state.degraded is None

@@ -56,6 +56,11 @@ class ShardedFusedBackend(ShardedBackend):
         # can run inside shard_map on each shard independently
         self._fused = FusedBackend(sched, block_packages=block_packages,
                                    time_chunk=time_chunk, interpret=interpret)
+        if self._fused.run_block is None:
+            # non-pole-family plant (grid): the wrapped kernel declined the
+            # fast path — shadow ours too so the engine falls back to the
+            # sharded pure-JAX scan (shard_map'd update) transparently
+            self.run_block = None
 
     # -- fused fast path ---------------------------------------------------
     def run_block(self, state: SchedulerState, rho_trace: jnp.ndarray):

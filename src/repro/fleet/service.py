@@ -43,8 +43,9 @@ returns the reproduced telemetry.
 Robustness (docs/serving.md "Fault tolerance & recovery"):
 ``snapshot_dir=...`` + ``snapshot_every=N`` takes crash-consistent async
 snapshots (engine state through `repro.checkpoint.CheckpointManager`,
-host bookkeeping in the manifest) and journals every membership/threshold
-op to ``journal.jsonl``; `FleetService.restore()` resumes a killed
+host bookkeeping — including still-queued `/ingest` chunks — in the
+manifest) and journals every membership/threshold/ingest op to
+``journal.jsonl``; `FleetService.restore()` resumes a killed
 service ≤1e-5-equivalent to an uninterrupted run.  ``heartbeat_timeout_s``
 arms a stalled-flush watchdog surfaced at GET /healthz, and a fleet run
 with `SchedulerConfig(degraded_fallback=True)` reports degraded-lane
@@ -59,8 +60,13 @@ while unfed lanes keep their synthetic workloads.
 The HTTP surface (stdlib `http.server`, no new dependencies) is documented
 operator-facing in docs/serving.md:
 
-    GET  /healthz /telemetry /fleet /alerts
+    GET  /healthz /telemetry /fleet /alerts /dashboard
     POST /attach /detach /thresholds /ingest /replay /shutdown
+
+`GET /dashboard` is the same surface rendered for humans: a stdlib-built
+HTML page (sparkline flush history, per-tenant table, alert feed) with a
+2-second meta-refresh — point a browser at it and it is a live operator
+view with zero extra dependencies.
 """
 from __future__ import annotations
 
@@ -231,7 +237,7 @@ class FleetService:
 
     # ----------------------------------------------------------- journaling
     def _journal(self, entry: dict) -> None:
-        """Append one membership/threshold op to the surgery journal —
+        """Append one membership/threshold/ingest op to the journal —
         crash-consistent bookkeeping between snapshots.  Entries carry a
         monotonic ``seq`` and the flush count they happened AFTER, so
         `restore()` can re-drive exactly the post-snapshot suffix at the
@@ -331,6 +337,14 @@ class FleetService:
             if q is None:
                 q = self._feeds[tenant] = HintQueue(self.feed_capacity)
             accepted = q.offer(arr)
+            if accepted:
+                # journal the ACCEPTED chunk: tenant-POSTed density is real
+                # data, not an advisory hint — a crash between accept and
+                # flush must not silently swap it for a synthetic workload.
+                # Replay re-offers at the recorded flush cursor, and the
+                # one-chunk-per-tick drain makes queue state deterministic.
+                self._journal({"op": "ingest", "tenant": tenant,
+                               "chunk": arr.tolist()})
             return {"tenant": tenant, "accepted": bool(accepted),
                     "queued": len(q),
                     "lookahead_ms": q.lookahead_ms(self.flush_every,
@@ -533,6 +547,13 @@ class FleetService:
                         for t in r._tenants.values()},
                 },
                 "kind_of": dict(self._kind_of),
+                # queued-but-unflushed /ingest chunks: journal entries from
+                # BEFORE the snapshot are not replayed, so chunks still
+                # sitting in a HintQueue at snapshot time must ride the
+                # manifest or a crash would drop them (restore re-offers
+                # these, then the journal re-drives post-snapshot posts)
+                "feeds": {t: [c.tolist() for c in q._q]
+                          for t, q in self._feeds.items() if len(q)},
                 "pkg_key": dict(self._pkg_key),
                 "next_key": self._next_key,
                 "flushes": self.flushes, "steps": self.steps,
@@ -560,9 +581,12 @@ class FleetService:
         per-package workload keys make bit-identical to the lost originals.
         The resumed stream is ≤1e-5-equivalent to an uninterrupted run
         (gated in tests/test_fleet_service_recovery.py).  Tenant-POSTed
-        `/ingest` chunks that were queued but unflushed at the crash are
-        NOT recovered — hints are advisory; the affected lanes replay their
-        synthetic workloads instead."""
+        `/ingest` chunks are recovered too: chunks queued but unflushed at
+        the snapshot ride the manifest's ``feeds`` dict, and accepted posts
+        after it are journaled (op ``ingest``) and re-offered at their
+        recorded flush cursor — the one-chunk-per-tick drain makes the
+        reconstructed queue state, and hence every fed flush window,
+        deterministic (gated in tests/test_service_ingest_recovery.py)."""
         from repro.checkpoint.manager import CheckpointManager
         ckpt = CheckpointManager(snapshot_dir)
         steps = ckpt.steps()
@@ -596,6 +620,10 @@ class FleetService:
                          packages=set(t["packages"]))
             for name, t in reg["tenants"].items()}
         svc._kind_of = dict(meta["kind_of"])
+        for tenant, chunks in meta.get("feeds", {}).items():
+            q = svc._feeds[tenant] = HintQueue(svc.feed_capacity)
+            for c in chunks:
+                q.offer(np.asarray(c, np.float32))
         svc._pkg_key = {p: int(k) for p, k in meta["pkg_key"].items()}
         svc._next_key = int(meta["next_key"])
         svc.flushes = int(meta["flushes"])
@@ -640,6 +668,8 @@ class FleetService:
                     self.detach(e["package"])
                 elif e["op"] == "thresholds":
                     self.set_thresholds(e["tenant"], **e["kw"])
+                elif e["op"] == "ingest":
+                    self.ingest(e["tenant"], e["chunk"])
                 else:
                     raise ValueError(f"unknown journal op {e['op']!r}")
                 self._journal_seq = e["seq"] + 1
@@ -737,6 +767,108 @@ class FleetService:
         return self._shutdown.is_set()
 
 
+# --------------------------------------------------------------- dashboard
+_BLOCKS = " ▁▂▃▄▅▆▇█"
+
+
+def _spark(values, width: int = 60, lo=None, hi=None) -> str:
+    """Unicode block sparkline of a numeric series (terminal-dashboard
+    idiom, HTML-safe in a monospace span)."""
+    values = [float(v) for v in values]
+    if not values:
+        return ""
+    n = min(width, len(values))
+    pick = [values[round(i * (len(values) - 1) / max(n - 1, 1))]
+            for i in range(n)]
+    lo = min(pick) if lo is None else lo
+    hi = max(pick) if hi is None else hi
+    span = max(hi - lo, 1e-9)
+    return "".join(
+        _BLOCKS[int(min(max((x - lo) / span, 0.0), 1.0) * (len(_BLOCKS) - 1))]
+        for x in pick)
+
+
+def _dashboard_html(svc: FleetService, last: int = 60) -> str:
+    """One self-contained page for GET /dashboard: fleet vitals, flush-
+    history sparklines, per-tenant stats and the recent alert feed —
+    stdlib-rendered (no templates, no static assets) with a meta-refresh
+    tag so a plain browser tab is a live operator view."""
+    import html as _html
+
+    esc = _html.escape
+    snap = svc.snapshot(last=last)
+    with svc.lock:
+        alerts = list(svc.alerts.history)[-10:]
+        backend = svc.engine.backend_impl.describe()
+        stalled = (svc.heartbeat.stalled if svc.heartbeat is not None
+                   else False)
+        degraded = int(svc.last_degraded)
+    recs = [r for r in snap["records"] if r.get("kind") == "flush"]
+    series = lambda k: [r["telemetry"][k] for r in recs]
+    rows = [
+        ("T_p99 (°C)", _spark(series("temp_p99_c"))),
+        ("T_max (°C)", _spark(series("temp_max_c"))),
+        ("f_mean", _spark(series("freq_mean"), lo=0.5, hi=1.0)),
+        ("at-risk", _spark(series("at_risk_frac"), lo=0.0, hi=1.0)),
+        ("released MTPS", _spark(series("released_mtps"))),
+    ] if recs else []
+    parts = [
+        "<!doctype html><html><head><meta charset='utf-8'>",
+        "<meta http-equiv='refresh' content='2'>",
+        "<title>fleet dashboard</title>",
+        "<style>body{font-family:monospace;background:#111;color:#ddd;"
+        "margin:2em}h1{font-size:1.1em}table{border-collapse:collapse}"
+        "td,th{padding:2px 10px;text-align:left}.spark{color:#6cf}"
+        ".bad{color:#f66}.ok{color:#6f6}</style></head><body>",
+        f"<h1>fleet control plane — {esc(svc.backend_name)} backend, "
+        f"plant <b>{esc(svc.cfg.plant)}</b></h1>",
+        f"<p>engine {esc(backend)} · capacity {snap['capacity']} · "
+        f"{snap['n_active']} active · {snap['flushes']} flushes · "
+        f"degraded {degraded} · health "
+        + ("<span class='bad'>STALLED</span>" if stalled
+           else "<span class='ok'>ok</span>") + "</p>",
+    ]
+    if recs:
+        parts.append(f"<p>flushes {int(recs[0]['flush'])}.."
+                     f"{int(recs[-1]['flush'])} ({len(recs)} shown)</p>")
+        parts.append("<table>")
+        for label, line in rows:
+            parts.append(f"<tr><td>{esc(label)}</td>"
+                         f"<td class='spark'>{esc(line)}</td></tr>")
+        parts.append("</table>")
+        tenants = recs[-1].get("tenants", {})
+        if tenants:
+            parts.append("<h1>tenants (last flush)</h1><table>"
+                         "<tr><th>tenant</th><th>pkgs</th><th>peak °C</th>"
+                         "<th>f_min</th><th>drift nm</th>"
+                         "<th>degraded</th></tr>")
+            for name, st in sorted(tenants.items()):
+                parts.append(
+                    f"<tr><td>{esc(name)}</td><td>{int(st['n_lanes'])}</td>"
+                    f"<td>{st['temp_peak_c']:.1f}</td>"
+                    f"<td>{st['freq_min']:.3f}</td>"
+                    f"<td>{st['drift_nm']:.3f}</td>"
+                    f"<td>{int(st.get('degraded_lanes', 0))}</td></tr>")
+            parts.append("</table>")
+    else:
+        parts.append("<p>(no flushes recorded yet — attach a package and "
+                     "wait one flush)</p>")
+    parts.append(f"<h1>alerts (last {len(alerts)})</h1>")
+    if alerts:
+        parts.append("<table>")
+        for ev in alerts:
+            parts.append(
+                f"<tr><td>flush {int(ev['flush'])}</td>"
+                f"<td>{esc(str(ev['tenant']))}</td>"
+                f"<td class='bad'>{esc(str(ev['kind']))}</td>"
+                f"<td>{ev['value']:.4g} &gt; {ev['limit']:.4g}</td></tr>")
+        parts.append("</table>")
+    else:
+        parts.append("<p class='ok'>none fired</p>")
+    parts.append("</body></html>")
+    return "".join(parts)
+
+
 # ------------------------------------------------------------------- HTTP
 class _Handler(BaseHTTPRequestHandler):
     """JSON over stdlib http.server; the service reference rides on the
@@ -755,6 +887,14 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
+
+    def _send_html(self, code: int, body: str) -> None:
+        data = body.encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "text/html; charset=utf-8")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
 
     def _body(self) -> dict:
         n = int(self.headers.get("Content-Length") or 0)
@@ -784,6 +924,12 @@ class _Handler(BaseHTTPRequestHandler):
         elif path == "/alerts":
             with svc.lock:
                 self._send(200, {"alerts": list(svc.alerts.history)})
+        elif path == "/dashboard":
+            last = 60
+            for part in query.split("&"):
+                if part.startswith("last="):
+                    last = max(1, int(part[5:]))
+            self._send_html(200, _dashboard_html(svc, last=last))
         else:
             self._send(404, {"error": f"unknown path {path!r}"})
 

@@ -384,3 +384,30 @@ def thermal_conv_ref(power, gamma, decay, gain, state0=None):
 
     stT, dts = jax.lax.scan(tick, state0, power.astype(jnp.float32))
     return dts, stT
+
+
+def grid_conv_ref(power, adj_h, adj_v, deg, ghat, inject, readout, state0,
+                  *, r: float, kappa: float, substeps: int = 1):
+    """RC-grid plant reference (explicit-Euler 5-point stencil, §5.2 ladder).
+
+    Same operands and op structure as the Pallas kernel
+    (`repro.kernels.thermal_conv.grid_conv`): the stencil as two adjacency
+    matmuls minus the degree term, uniform tile injection via ``inject``,
+    cell-region-mean readout via ``readout``.  Returns
+    (ΔT [T, n_tiles], final_state [gy, W]).
+    """
+    f32 = jnp.float32
+    adj_h, adj_v = jnp.asarray(adj_h, f32), jnp.asarray(adj_v, f32)
+    deg, ghat = jnp.asarray(deg, f32), jnp.asarray(ghat, f32)
+    inject, readout = jnp.asarray(inject, f32), jnp.asarray(readout, f32)
+
+    def tick(st, p):
+        d = (p @ inject)[None, :]
+        for _ in range(substeps):
+            lap = adj_v @ st + st @ adj_h - deg * st
+            st = st + r * (d - ghat * st + kappa * lap)
+        return st, (st.sum(0, keepdims=True) @ readout)[0]
+
+    stT, dts = jax.lax.scan(tick, jnp.asarray(state0, f32),
+                            power.astype(f32))
+    return dts, stT

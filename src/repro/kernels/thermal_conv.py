@@ -68,6 +68,121 @@ def _kernel(power_ref, gamma_ref, decay_ref, gain_ref, state0_ref,
     state_out_ref[...] = state
 
 
+def _grid_kernel(power_ref, adj_h_ref, adj_v_ref, deg_ref, ghat_ref,
+                 inject_ref, readout_ref, state0_ref,
+                 dts_ref, state_out_ref, state_scr,
+                 *, chunk, substeps, r, kappa):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        state_scr[...] = state0_ref[...]
+
+    # per-cell drive for the whole chunk at once: [ck, nt] @ [nt, W] on the
+    # MXU (inject carries the Rth scaling and the tile→patch fan-out)
+    drive = jnp.dot(power_ref[...], inject_ref[...],
+                    preferred_element_type=jnp.float32)       # [ck, W]
+
+    state = state_scr[...]                                    # [gy, W]
+    adj_h, adj_v = adj_h_ref[...], adj_v_ref[...]
+    deg, ghat, readout = deg_ref[...], ghat_ref[...], readout_ref[...]
+
+    def tick(i, carry):
+        state, out = carry
+        d = jax.lax.dynamic_slice_in_dim(drive, i, 1, 0)      # [1, W] bcast
+        for _ in range(substeps):
+            # 5-point stencil as two small adjacency matmuls (vertical on
+            # the sublane axis, horizontal on the lane axis) minus the
+            # degree term — adiabatic walls live in the adjacency zeros
+            lap = (jnp.dot(adj_v, state, preferred_element_type=jnp.float32)
+                   + jnp.dot(state, adj_h,
+                             preferred_element_type=jnp.float32)
+                   - deg * state)
+            state = state + r * (d - ghat * state + kappa * lap)
+        mean = jnp.dot(state.sum(0, keepdims=True), readout,
+                       preferred_element_type=jnp.float32)    # [1, nt]
+        out = jax.lax.dynamic_update_slice_in_dim(out, mean, i, 0)
+        return state, out
+
+    out0 = jnp.zeros((chunk, dts_ref.shape[1]), jnp.float32)
+    state, out = jax.lax.fori_loop(0, chunk, tick, (state, out0))
+    dts_ref[...] = out
+    state_scr[...] = state
+    state_out_ref[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("r", "kappa", "substeps",
+                                             "chunk", "interpret"))
+def grid_conv(power, adj_h, adj_v, deg, ghat, inject, readout, state0,
+              *, r: float, kappa: float, substeps: int = 1,
+              chunk: int = 128, interpret: bool | None = None):
+    """RC-grid plant over a [T, n_tiles] power stream (GridPlant's trace path).
+
+    The spatial analogue of `thermal_conv`: the [gy, W] cell grid lives in a
+    VMEM scratch carried across the sequential time grid, the explicit-Euler
+    5-point stencil runs as two adjacency matmuls per substep, and tile
+    temperatures are read out as cell-region means (``readout`` carries the
+    1/(gy·gx) weights, ``inject`` the Rth·(tile→patch) fan-out — both built
+    by `repro.core.plant.GridPlant.simulate`).  ``adj_h``/``adj_v`` are the
+    horizontal/vertical adjacency matrices (adiabatic tile walls = missing
+    edges), ``deg`` the neighbour counts and ``ghat`` the normalised
+    vertical-conductance map (the §5.2 bridge-shadow band).
+
+    Returns (dts [T, n_tiles], final_state [gy, W]).  Validated against
+    `repro.kernels.ref.grid_conv_ref` in interpret mode.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T, nt = power.shape
+    gy, W = state0.shape
+    nt_pad = max(LANE, ((nt + LANE - 1) // LANE) * LANE)
+    w_pad = max(LANE, ((W + LANE - 1) // LANE) * LANE)
+    gy_pad = max(8, ((gy + 7) // 8) * 8)
+    ck = min(chunk, T)
+    while T % ck:
+        ck //= 2
+    grid = (T // ck,)
+
+    f32 = jnp.float32
+    power_p = _pad_to(power.astype(f32), nt_pad, 1)
+    adj_h_p = _pad_to(_pad_to(jnp.asarray(adj_h, f32), w_pad, 0), w_pad, 1)
+    adj_v_p = _pad_to(_pad_to(jnp.asarray(adj_v, f32), gy_pad, 0), gy_pad, 1)
+    deg_p = _pad_to(_pad_to(jnp.asarray(deg, f32), gy_pad, 0), w_pad, 1)
+    ghat_p = _pad_to(_pad_to(jnp.asarray(ghat, f32), gy_pad, 0), w_pad, 1)
+    inject_p = _pad_to(_pad_to(jnp.asarray(inject, f32), nt_pad, 0), w_pad, 1)
+    readout_p = _pad_to(_pad_to(jnp.asarray(readout, f32), w_pad, 0),
+                        nt_pad, 1)
+    state0_p = _pad_to(_pad_to(state0.astype(f32), gy_pad, 0), w_pad, 1)
+
+    dts, state = pl.pallas_call(
+        functools.partial(_grid_kernel, chunk=ck, substeps=substeps,
+                          r=r, kappa=kappa),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ck, nt_pad), lambda t: (t, 0)),         # power
+            pl.BlockSpec((w_pad, w_pad), lambda t: (0, 0)),       # adj_h
+            pl.BlockSpec((gy_pad, gy_pad), lambda t: (0, 0)),     # adj_v
+            pl.BlockSpec((gy_pad, w_pad), lambda t: (0, 0)),      # deg
+            pl.BlockSpec((gy_pad, w_pad), lambda t: (0, 0)),      # ghat
+            pl.BlockSpec((nt_pad, w_pad), lambda t: (0, 0)),      # inject
+            pl.BlockSpec((w_pad, nt_pad), lambda t: (0, 0)),      # readout
+            pl.BlockSpec((gy_pad, w_pad), lambda t: (0, 0)),      # state0
+        ],
+        out_specs=[
+            pl.BlockSpec((ck, nt_pad), lambda t: (t, 0)),         # dts
+            pl.BlockSpec((gy_pad, w_pad), lambda t: (0, 0)),      # final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, nt_pad), jnp.float32),
+            jax.ShapeDtypeStruct((gy_pad, w_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((gy_pad, w_pad), jnp.float32)],
+        interpret=interpret,
+    )(power_p, adj_h_p, adj_v_p, deg_p, ghat_p, inject_p, readout_p,
+      state0_p)
+    return dts[:, :nt], state[:gy, :W]
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def thermal_conv(power, gamma, decay, gain, state0=None, *, chunk: int = 128,
                  interpret: bool | None = None):

@@ -85,11 +85,13 @@ def _montecarlo(args):
                        key=jax.random.PRNGKey(args.seed),
                        backend=args.fleet_backend,
                        devices=args.fleet_devices or None,
-                       filtration_impl=args.filtration)
+                       filtration_impl=args.filtration,
+                       plant=args.plant)
     s = r.stats()
     dt = time.time() - t0
     print(f"[mc] {args.montecarlo} trials x {args.mc_steps} steps "
-          f"(paired baseline+v24) on '{args.fleet_backend}' in {dt:.1f} s "
+          f"(paired baseline+v24) on '{args.fleet_backend}' "
+          f"plant '{args.plant}' in {dt:.1f} s "
           f"({args.montecarlo / dt:.0f} trials/s)")
     print(f"[mc] baseline peak-T {s['baseline_mean_c']:.1f}C "
           f"sigma {s['baseline_std_c']:.2f}C, exceedance "
@@ -189,7 +191,7 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
     server, _ = serve_http(svc, host=args.host, port=args.port)
     host, port = server.server_address[:2]
     print(f"[serve] control plane on http://{host}:{port} — "
-          f"GET /healthz /telemetry /fleet /alerts, "
+          f"GET /healthz /telemetry /fleet /alerts /dashboard, "
           f"POST /attach /detach /thresholds /ingest /replay /shutdown")
     flushes = 0
     try:
@@ -409,6 +411,12 @@ def main(argv=None):
                     choices=["incremental", "ring"],
                     help="filtration fast path (O(1) sliding stats) or the "
                          "ring-buffer oracle")
+    from repro.core.plant import available_plants
+    ap.add_argument("--plant", default="pole", choices=available_plants(),
+                    help="thermal-plant fidelity rung (docs/architecture.md "
+                         "'Thermal-plant fidelity ladder'): the paper's "
+                         "pole bank, the spatial RC grid, or the ROM "
+                         "fitted from it")
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
@@ -488,7 +496,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     max_seq = args.prompt_len + args.gen
     sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0,
-                                filtration_impl=args.filtration)
+                                filtration_impl=args.filtration,
+                                plant=args.plant)
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 

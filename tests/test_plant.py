@@ -1,0 +1,351 @@
+"""The thermal-plant fidelity ladder (repro.core.plant).
+
+Three gate families:
+
+  * **Refactor regression** — `PoleBankPlant` (plant="pole", the default)
+    must be OP-FOR-OP the pre-refactor scheduler.  The oracle here is a
+    frozen copy of the pre-refactor homogeneous v24 update, calling
+    `core.thermal` / `core.pdu_gate` directly and never touching
+    `repro.core.plant`; the refactored path must reproduce it BITWISE
+    (and every fleet backend within its previously-gated tolerance) over
+    the paper's 90k-step trace length.
+  * **Ladder fidelity** — `FittedROMPlant` must track `GridPlant`'s peak
+    ΔT within `ROM_PEAK_TOL` over a 90k-step trace, and the grid's Pallas
+    trace kernel must match its pure-JAX reference and the scanned `step`.
+  * **Serving invariants** — swapping plants causes ZERO post-warmup XLA
+    compiles (each rung's programs compile once; revisiting a rung reuses
+    them), and the config/validation surface fails loudly.
+
+Property-based versions run under hypothesis where installed; a fixed
+parameter grid covers the same cases otherwise (the repo's CI image has no
+hypothesis — see tests/test_properties.py for the importorskip precedent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdu_gate, thermal
+from repro.core.coupling import apply_coupling, coupling_matrix
+from repro.core.density import power_from_rho
+from repro.core.fingerprint import FINGERPRINT as FP
+from repro.core.plant import (ROM_PEAK_TOL, FittedROMPlant, GridPlant,
+                              PoleBankPlant, _eta_f32, available_plants,
+                              make_plant, plant_class)
+from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+from repro.fleet import FleetEngine, available_backends
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+# module-level compile counter (listeners cannot be unregistered)
+_COMPILES: list = []
+_COUNTING = [False]
+
+
+def _on_event(event, duration, **kw):
+    if _COUNTING[0] and "backend_compile" in event:
+        _COMPILES.append(event)
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_event)
+
+
+def _trace(steps, shape, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return 0.9 + 1.8 * jax.random.uniform(key, (steps,) + shape)
+
+
+# ---------------------------------------------------- pre-refactor oracle
+def _oracle_scan(cfg, trace, batch_shape=()):
+    """Frozen pre-refactor homogeneous v24 update, scanned.
+
+    A faithful copy of what `ThermalScheduler.update` computed before the
+    plant interface existed: inline pole bank, inline η/ΣG, direct
+    `thermal.step`/`thermal.delta_t` calls.  DO NOT "simplify" this to call
+    repro.core.plant — its whole value is that it cannot drift with the
+    code under test.
+    """
+    fp = FP
+    poles = (thermal.two_pole(fp, cfg.step_ms) if cfg.two_pole
+             else thermal.single_pole(fp, cfg.step_ms))
+    eta = float(_eta_f32(poles.decay[-1], cfg.lookahead_ms / cfg.step_ms))
+    gain_sum = poles.gain.sum()
+    gamma = (coupling_matrix(cfg.n_tiles)
+             if cfg.use_coupling and cfg.n_tiles > 1 else None)
+    if gamma is not None:
+        gamma = gamma / gamma.sum(axis=1, keepdims=True)
+    t_allow = fp.t_crit_c - cfg.t_safe_margin_c - fp.t_ambient_c
+
+    def body(carry, rho):
+        th, ft, freq, step, events = carry
+        rho = jnp.broadcast_to(jnp.asarray(rho), freq.shape)
+        ft = pdu_gate.observe(ft, rho)
+        p_now = power_from_rho(rho)
+        dt_now = thermal.delta_t(th)
+        hint = pdu_gate.hint(ft, gamma, cfg.lookahead_ms, cfg.step_ms)
+        hint = jnp.maximum(hint, p_now if gamma is None
+                           else apply_coupling(gamma, p_now))
+        budget = (t_allow - (1.0 - eta) * dt_now) * (1.0 / (eta * gain_sum))
+        f_uni = jnp.clip((budget / jnp.maximum(hint, 1e-3))
+                         ** (1.0 / cfg.power_exponent), 0.05, 1.0)
+        if gamma is None:
+            f = f_uni
+        else:
+            gd = jnp.diagonal(gamma)
+            p_prev = p_now * freq ** cfg.power_exponent
+            neigh = apply_coupling(gamma, p_prev) - gd * p_prev
+            f_cpl = jnp.clip(
+                (jnp.maximum(budget - neigh, 1e-6)
+                 / jnp.maximum(gd * p_now, 1e-3))
+                ** (1.0 / cfg.power_exponent), 0.05, 1.0)
+            f = jnp.minimum(jnp.minimum(f_uni, f_cpl), freq + 0.05)
+        p = p_now * f ** cfg.power_exponent
+        p_eff = p if gamma is None else apply_coupling(gamma, p)
+        th = thermal.step(poles, th, p_eff)
+        temp = fp.t_ambient_c + thermal.delta_t(th)
+        events = events + jnp.any(temp > fp.t_crit_c,
+                                  axis=-1).astype(jnp.int32)
+        return (th, ft, f, step + 1, events), (f, temp)
+
+    carry0 = (thermal.init_state(poles, cfg.n_tiles, batch_shape),
+              pdu_gate.init_filtration_stats(
+                  cfg.filtration_window, cfg.n_tiles, fill=fp.rho_min,
+                  batch_shape=batch_shape),
+              jnp.ones(batch_shape + (cfg.n_tiles,)),
+              jnp.zeros((), jnp.int32),
+              jnp.zeros(batch_shape, jnp.int32))
+    return jax.jit(lambda c, t: jax.lax.scan(body, c, t))(carry0, trace)
+
+
+def _sched_scan(cfg, trace, batch_shape=()):
+    sched = ThermalScheduler(cfg)
+
+    def body(c, r):
+        s, o = sched.update(c, r)
+        return s, (o.freq, o.temp_c)
+
+    st0 = sched.init(batch_shape)
+    return jax.jit(lambda c, t: jax.lax.scan(body, c, t))(st0, trace)
+
+
+def _assert_oracle_bitmatch(seed, steps, n_tiles, two_pole):
+    cfg = SchedulerConfig(n_tiles=n_tiles, mode="v24", two_pole=two_pole)
+    trace = _trace(steps, (n_tiles,), seed=seed)
+    (oth, _, ofreq, _, oev), (ofs, ots) = _oracle_scan(cfg, trace)
+    st, (fs, ts) = _sched_scan(cfg, trace)
+    np.testing.assert_array_equal(np.asarray(st.thermal), np.asarray(oth))
+    np.testing.assert_array_equal(np.asarray(st.freq), np.asarray(ofreq))
+    np.testing.assert_array_equal(np.asarray(st.events), np.asarray(oev))
+    np.testing.assert_array_equal(np.asarray(fs), np.asarray(ofs))
+    np.testing.assert_array_equal(np.asarray(ts), np.asarray(ots))
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st_
+
+    @settings(max_examples=15, deadline=None)
+    @given(st_.integers(0, 2**31 - 1), st_.integers(32, 256),
+           st_.sampled_from([1, 2, 4]), st_.booleans())
+    def test_polebank_bitmatches_prerefactor_oracle(seed, steps, n_tiles,
+                                                    two_pole):
+        _assert_oracle_bitmatch(seed, steps, n_tiles, two_pole)
+except ImportError:
+    @pytest.mark.parametrize("seed,steps,n_tiles,two_pole", [
+        (0, 256, 4, True), (1, 128, 1, True), (2, 200, 2, False),
+        (3, 64, 4, False), (4, 96, 1, False), (5, 150, 2, True),
+    ])
+    def test_polebank_bitmatches_prerefactor_oracle(seed, steps, n_tiles,
+                                                    two_pole):
+        _assert_oracle_bitmatch(seed, steps, n_tiles, two_pole)
+
+
+def test_polebank_bitmatches_oracle_90k():
+    """The acceptance gate: bit-equal to the pre-refactor path over the
+    paper's full 90k-step trace length (Γ-coupled multi-tile v24)."""
+    _assert_oracle_bitmatch(seed=7, steps=90_000, n_tiles=2, two_pole=True)
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_all_backends_match_oracle_pole_90k(backend):
+    """Every fleet backend on plant="pole" vs the frozen oracle over 90k
+    steps: broadcast (the pre-refactor reference path) BITWISE, the
+    re-associating backends within their previously-gated ≤1e-5, event
+    counters exactly equal."""
+    n, n_tiles, steps = 4, 2, 90_000
+    cfg = SchedulerConfig(n_tiles=n_tiles, mode="v24")
+    trace = _trace(steps, (n, n_tiles), seed=3)
+    (oth, _, ofreq, _, oev), _ = _oracle_scan(cfg, trace, batch_shape=(n,))
+    eng = FleetEngine(cfg, backend=backend, donate_state=False)
+    st, _ = eng.run_chunked(eng.init(n), trace, flush_every=9_000)
+    np.testing.assert_array_equal(np.asarray(st.events), np.asarray(oev))
+    if backend == "broadcast":
+        np.testing.assert_array_equal(np.asarray(st.thermal),
+                                      np.asarray(oth))
+        np.testing.assert_array_equal(np.asarray(st.freq),
+                                      np.asarray(ofreq))
+    else:
+        np.testing.assert_allclose(np.asarray(st.thermal), np.asarray(oth),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(st.freq), np.asarray(ofreq),
+                                   **TOL)
+
+
+# ------------------------------------------------------- ladder fidelity
+def _plant_peak(plant, power):
+    """Peak tile ΔT of a plant scanned over a [T, n_tiles] power trace."""
+
+    def body(c, pw):
+        st, pk = c
+        st = plant.step(st, pw)
+        return (st, jnp.maximum(pk, plant.delta_t(st).max())), None
+
+    carry0 = (plant.init_state(()), jnp.float32(0.0))
+    (st, pk), _ = jax.jit(lambda c, p: jax.lax.scan(body, c, p))(
+        carry0, power)
+    return float(pk)
+
+
+def test_rom_tracks_grid_peak_90k():
+    """The documented ROM_PEAK_TOL gate: the fitted bank's peak ΔT over a
+    90k-step varied-load trace stays within the tolerance of the grid it
+    was fit from (docs/architecture.md, benchmarks/bench_fleet.py)."""
+    cfg = SchedulerConfig(n_tiles=2, plant="grid")
+    power = power_from_rho(_trace(90_000, (2,), seed=9))
+    grid, rom = GridPlant(cfg, FP), FittedROMPlant(cfg, FP)
+    pk_grid, pk_rom = _plant_peak(grid, power), _plant_peak(rom, power)
+    rel = abs(pk_rom - pk_grid) / pk_grid
+    assert rel <= ROM_PEAK_TOL, (
+        f"ROM peak ΔT {pk_rom:.3f} vs grid {pk_grid:.3f}: rel err "
+        f"{rel:.4f} > ROM_PEAK_TOL={ROM_PEAK_TOL}")
+
+
+def test_grid_kernel_matches_ref_and_scan():
+    """Pallas trace kernel == pure-JAX reference (same op order), and both
+    match the scanned per-step `step`/`delta_t` path."""
+    from repro.kernels.ref import grid_conv_ref
+    cfg = SchedulerConfig(n_tiles=2, plant="grid")
+    plant = GridPlant(cfg, FP)
+    power = power_from_rho(_trace(256, (2,), seed=4))
+    dts_k, st_k = plant.simulate(jnp.asarray(power))
+    nt, gx, gy, W = plant.n_tiles, plant.gx, plant.gy, plant.W
+    inject = np.zeros((nt, W), np.float32)
+    readout = np.zeros((W, nt), np.float32)
+    for t in range(nt):
+        inject[t, t * gx:(t + 1) * gx] = plant.rth
+        readout[t * gx:(t + 1) * gx, t] = 1.0 / (gy * gx)
+    dts_r, st_r = grid_conv_ref(
+        jnp.asarray(power), plant.adj_h, plant.adj_v, plant.deg, plant.ghat,
+        inject, readout, jnp.zeros((gy, W), jnp.float32),
+        r=float(plant.r), kappa=float(plant.kappa), substeps=plant.substeps)
+    np.testing.assert_allclose(np.asarray(dts_k), np.asarray(dts_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=1e-6, atol=1e-6)
+
+    def body(st, pw):
+        st = plant.step(st, pw)
+        return st, plant.delta_t(st)
+
+    st_s, dts_s = jax.lax.scan(body, plant.init_state(()),
+                               jnp.asarray(power))
+    np.testing.assert_allclose(np.asarray(dts_k), np.asarray(dts_s),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grid_multi_exponential():
+    """The bridge shadow is not decorative: the grid's tile-mean step
+    response must NOT be single-exponential (a uniform grid's region mean
+    collapses exactly to the lumped pole — 'fidelity theatre')."""
+    cfg = SchedulerConfig(n_tiles=1, plant="grid")
+    y = GridPlant(cfg, FP).step_response(2048).astype(np.float64)
+    yinf = y[-1]
+    # fit a single exponential through two anchors inside the transient
+    # and check the curve misses it by far more than float noise
+    t1, t2 = 5, 40
+    lam = np.log((yinf - y[t1]) / (yinf - y[t2])) / (t2 - t1)
+    fit = yinf - (yinf - y[t1]) * np.exp(-lam * (np.arange(2048) - t1))
+    assert np.abs(fit - y)[t1:].max() / yinf > 5e-3
+
+
+# ----------------------------------------------------- serving invariants
+def test_plant_swap_zero_recompiles():
+    """Swapping fidelity rungs on warmed engines triggers ZERO XLA
+    compiles: each rung's programs compile once during warmup, and
+    revisiting any rung — on the pure-JAX path or the fused kernel
+    (het-row ROM / scan-fallback grid) — reuses them."""
+    engines, states = {}, {}
+    for p in available_plants():
+        for be in ("broadcast", "fused"):
+            cfg = SchedulerConfig(n_tiles=2, plant=p)
+            eng = FleetEngine(cfg, backend=be, donate_state=False)
+            engines[p, be] = eng
+            states[p, be] = eng.init(4)
+    trace = jnp.asarray(_trace(32, (4, 2), seed=5))
+    # warmup: two blocks per program — the first call's output state is the
+    # aval fixed point (init()'s weak types strengthen), the second compiles
+    # the steady-state program every later call must reuse
+    for _ in range(2):
+        for k, eng in engines.items():
+            states[k], _ = eng.run_block(states[k], trace)
+    jax.block_until_ready(states)
+    _COMPILES.clear()
+    _COUNTING[0] = True
+    try:
+        for _ in range(2):                  # swap across every rung, twice
+            for k, eng in engines.items():
+                states[k], telem = eng.run_block(states[k], trace)
+                jax.block_until_ready(telem)
+    finally:
+        _COUNTING[0] = False
+    assert _COMPILES == [], (f"{len(_COMPILES)} compiles after plant-swap "
+                             f"warmup: {_COMPILES}")
+
+
+def test_registry_and_validation():
+    assert available_plants() == ["grid", "pole", "rom"]
+    assert plant_class("pole") is PoleBankPlant
+    cfg = SchedulerConfig(n_tiles=2)
+    assert isinstance(make_plant(cfg), PoleBankPlant)
+    with pytest.raises(ValueError, match="unknown plant"):
+        plant_class("lava-lamp")
+    with pytest.raises(ValueError, match="unknown plant"):
+        ThermalScheduler(SchedulerConfig(plant="lava-lamp"))
+    with pytest.raises(ValueError, match="grid_cells"):
+        GridPlant(SchedulerConfig(grid_cells=1, plant="grid"), FP)
+    with pytest.raises(ValueError, match="grid_contrast"):
+        GridPlant(SchedulerConfig(grid_contrast=1.0, plant="grid"), FP)
+    with pytest.raises(ValueError, match="grid_substeps"):
+        GridPlant(SchedulerConfig(grid_substeps=0, plant="grid"), FP)
+    with pytest.raises(ValueError, match="heterogeneous"):
+        ThermalScheduler(SchedulerConfig(plant="grid", heterogeneous=True))
+    sched = ThermalScheduler(SchedulerConfig(plant="grid"))
+    with pytest.raises(ValueError, match="pole-family"):
+        sched.package_params(batch_shape=(2,))
+
+
+def test_grid_instability_raises_with_fix():
+    """A too-stiff grid fails LOUDLY at construction, names the knob —
+    and the suggested fix (more substeps) actually works."""
+    bad = SchedulerConfig(plant="grid", grid_kappa=3.0)
+    with pytest.raises(ValueError, match="grid_substeps"):
+        GridPlant(bad, FP)
+    ok = SchedulerConfig(plant="grid", grid_kappa=3.0, grid_substeps=4)
+    GridPlant(ok, FP)   # stable now
+
+
+def test_state_contract_two_trailing_dims():
+    """Every rung emits two trailing non-batch dims, so pspecs and the
+    control plane's lane surgery are plant-agnostic."""
+    from jax.sharding import PartitionSpec as P
+    for name in available_plants():
+        cfg = SchedulerConfig(n_tiles=2, plant=name)
+        plant = make_plant(cfg)
+        assert plant.init_state(()).ndim == 2, name
+        assert plant.init_state((5,)).shape[0] == 5, name
+        assert plant.init_state((5,)).ndim == 3, name
+        assert plant.state_pspec(("fleet",)) == P("fleet", None, None), name
+        dt = plant.delta_t(plant.init_state((5,)))
+        assert dt.shape == (5, 2), name

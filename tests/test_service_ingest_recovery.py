@@ -1,0 +1,140 @@
+"""Ingest-path crash consistency: tenant-POSTed density survives SIGKILL.
+
+A victim service runs in a REAL subprocess, feeding every flush window
+through `/ingest` (direct `FleetService.ingest` calls — same code path as
+the HTTP handler) so its tenant never runs a synthetic workload, and dies
+by SIGKILL mid-stream with one chunk always queued-but-unflushed.  Recovery
+must reconstruct BOTH halves of the queue:
+
+  * chunks still queued at the last snapshot ride the manifest's ``feeds``
+    dict (journal entries from before a snapshot are never replayed);
+  * accepted posts after it are journaled (op ``ingest``) and re-offered at
+    their recorded flush cursor, where the one-chunk-per-tick drain makes
+    the reconstructed queue state deterministic.
+
+The restored service must hold a non-empty pending feed, and resuming the
+scripted schedule must land ≤1e-5 from an uninterrupted oracle — if a fed
+window had been silently swapped for the synthetic workload the telemetry
+and raw state would diverge far beyond that.
+"""
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet.service import FleetService
+
+N_TILES = 2
+FLUSH_EVERY = 50
+TOTAL_FLUSHES = 40
+KILL_AFTER = 20
+SEED = 11
+
+
+def _cfg():
+    return SchedulerConfig(n_tiles=N_TILES, mode="v24", filtration_window=16)
+
+
+def _chunk(flush):
+    """The deterministic per-flush tenant feed every party agrees on."""
+    rng = np.random.default_rng(1000 + flush)
+    return rng.uniform(0.9, 2.7, (FLUSH_EVERY, N_TILES)).astype(np.float32)
+
+
+def _drive(svc, until):
+    """The scripted schedule: keep the tenant's queue topped up to TWO
+    windows (the poster's steady state — one in flight, one ahead), then
+    flush.  The next chunk index comes off the QUEUE DEPTH, not a host
+    counter: a restored service's journal replay has already re-offered
+    the post-crash windows, and a poster that blindly re-posted them
+    would double-feed (exactly the bug class this schedule must expose)."""
+    while svc.flushes < until:
+        while len(svc._feeds.get("acme", ())) < 2:
+            nxt = svc.flushes + len(svc._feeds.get("acme", ()))
+            assert svc.ingest("acme", _chunk(nxt))["accepted"]
+        rec = svc.tick()
+        assert rec["ingest_fed"] == ["acme"], rec["ingest_fed"]
+
+
+_CHILD = f"""
+import sys
+import numpy as np
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet.service import FleetService
+
+cfg = SchedulerConfig(n_tiles={N_TILES}, mode="v24", filtration_window=16)
+svc = FleetService(cfg, flush_every={FLUSH_EVERY}, seed={SEED},
+                   snapshot_dir=sys.argv[1], snapshot_every=5)
+svc.warmup(4)
+for i in range(2):
+    svc.attach(f"pkg{{i}}", tenant="acme")
+
+def chunk(flush):
+    rng = np.random.default_rng(1000 + flush)
+    return rng.uniform(0.9, 2.7, ({FLUSH_EVERY}, {N_TILES})
+                       ).astype(np.float32)
+
+svc.ingest("acme", chunk(0))
+while svc.flushes < {TOTAL_FLUSHES}:
+    svc.ingest("acme", chunk(svc.flushes + 1))
+    svc.tick()
+    print(f"flush {{svc.flushes}}", flush=True)
+"""
+
+
+def test_sigkill_preserves_posted_ingest_chunks(tmp_path):
+    snap = tmp_path / "snaps"
+    driver = tmp_path / "driver.py"
+    driver.write_text(_CHILD)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    proc = subprocess.Popen([sys.executable, str(driver), str(snap)],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        for line in proc.stdout:
+            if int(line.split()[1]) >= KILL_AFTER:
+                proc.send_signal(signal.SIGKILL)
+                break
+        else:
+            raise AssertionError(f"victim exited early (rc={proc.wait()})")
+    finally:
+        proc.kill()
+        proc.wait()
+
+    # -- oracle: the same fed schedule, never interrupted -----------------
+    oracle = FleetService(_cfg(), flush_every=FLUSH_EVERY, seed=SEED)
+    for i in range(2):
+        oracle.attach(f"pkg{i}", tenant="acme")
+    _drive(oracle, TOTAL_FLUSHES)
+
+    # -- restore: the queued-but-unflushed chunk must be back -------------
+    svc = FleetService.restore(str(snap))
+    assert 5 <= svc.flushes <= KILL_AFTER + 5, svc.flushes
+    pending = {t: len(q) for t, q in svc._feeds.items() if len(q)}
+    assert pending.get("acme", 0) >= 1, (
+        f"queued-but-unflushed ingest chunk lost across the crash "
+        f"(pending feeds: {pending})")
+    # ...and be the RIGHT chunk: the schedule's next-window feed
+    np.testing.assert_array_equal(svc._feeds["acme"]._q[0],
+                                  _chunk(svc.flushes))
+
+    # -- resume to the end: equivalence with the uninterrupted oracle -----
+    _drive(svc, TOTAL_FLUSHES)
+    assert svc.flushes == oracle.flushes == TOTAL_FLUSHES
+    assert svc.steps == oracle.steps == TOTAL_FLUSHES * FLUSH_EVERY
+    t_svc = svc.log.rows()[-1]["telemetry"]
+    t_ora = oracle.log.rows()[-1]["telemetry"]
+    for k, v in t_ora.items():
+        np.testing.assert_allclose(t_svc[k], v, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"telemetry[{k}]")
+    for f in ("freq", "thermal", "events"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(svc.state, f), np.float32),
+            np.asarray(getattr(oracle.state, f), np.float32),
+            rtol=1e-5, atol=1e-5, err_msg=f"state.{f}")
