@@ -30,6 +30,11 @@ Acceptance bars:
     density latch, per-lane mode mask) is near-free on the fault-free hot
     path: a fault-free `degraded_fallback=True` run_block stays within
     1.10× of the same fleet with the fallback compiled out;
+  * the ISSUE-10 mixed-profile fleet (pole+rom plant groups, two node
+    banks, 50% canary-pinned reactive lanes) stays within 1.15× of a
+    homogeneous pole/v24 fleet at the same capacity, and decomposes into
+    per-group homogeneous oracles to ≤1e-5 per lane over the 90k-step
+    trace;
   * the plant fidelity ladder (`run_plants`, surfaced as
     ``benchmarks.bench_plant``): the default pole bank served THROUGH the
     plant interface stays within 1.05× of scanning `core.thermal` directly
@@ -342,6 +347,118 @@ def _degraded_overhead(cfg) -> None:
         f"fault-free degraded-mode machinery {ratio:.3f}x of plain (>1.10)"
 
 
+MIX_CAPACITY = 256
+MIX_STEPS = 64
+
+
+def _mixed_profile_overhead() -> None:
+    """ISSUE-10 gate: a mixed-profile fleet — pole+rom plant groups under
+    `GroupedFleetEngine`, two node banks on the pole group, 50% of lanes
+    canary-pinned to the reactive controller — must stay within 1.15× of
+    a homogeneous pole/v24 fleet at the SAME total capacity.  What the
+    gate bounds: the per-group dispatch (two scans instead of one), the
+    merged telemetry flush, the traced ctrl_mode select and the
+    per-lane PackageParams rows.  Grid is deliberately NOT in this gate
+    (a grid rung costs what the fidelity ladder says it costs —
+    ``fleet.plant_grid_256``); mixed pole+grid correctness is gated by
+    tests/test_fleet_groups.py instead."""
+    from repro.core import nodebank
+    from repro.fleet import GroupedFleetEngine
+
+    half = MIX_CAPACITY // 2
+    rng = np.random.default_rng(9)
+    trace = jnp.asarray((0.9 + 1.8 * rng.random(
+        (MIX_STEPS, MIX_CAPACITY, N_TILES))).astype(np.float32))
+
+    base = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24"),
+                       backend="broadcast")
+    st_base = base.init(MIX_CAPACITY)
+
+    def homogeneous():
+        _, telem = base.run_block(st_base, trace)
+        return telem
+
+    mcfg = SchedulerConfig(n_tiles=N_TILES, mode="v24", mixed_mode=True,
+                           heterogeneous=True)
+    ge = GroupedFleetEngine(mcfg, backend="broadcast",
+                            groups=("pole", "rom"))
+    nodes = ["base" if i % 2 else "n5" for i in range(half)]
+    pkg = {"pole": nodebank.fleet_package_params(ge.engines["pole"].sched,
+                                                 nodes)}
+    states = ge.init({"pole": half, "rom": half}, pkg=pkg)
+    pin = jnp.asarray(np.arange(half) < half // 2)     # 50% canary
+    for g in ge.groups:
+        states[g] = states[g]._replace(ctrl_mode=pin)
+
+    def mixed():
+        _, telem = ge.run_block(states, trace)
+        return telem
+
+    _, us_homog = timed(homogeneous, iters=10, best=True)
+    telem, us_mixed = timed(mixed, iters=10, best=True)
+    assert int(telem.as_dict()["n_packages"]) == MIX_CAPACITY
+    ratio = us_mixed / us_homog
+    rate = MIX_STEPS * MIX_CAPACITY / (us_mixed / 1e6)
+    row("fleet.mixed_profile_overhead", us_mixed / MIX_STEPS,
+        f"pkg_steps_per_s={rate:.0f};mixed_vs_homogeneous={ratio:.3f}"
+        f"(need<=1.15);groups=pole+rom;nodes=base+n5;canary=0.5")
+    assert ratio <= 1.15, \
+        f"mixed-profile fleet {ratio:.3f}x of homogeneous (>1.15)"
+
+
+def _mixed_equivalence_90k() -> None:
+    """ISSUE-10 acceptance bar at Appendix-B scale: the mixed-profile
+    fleet decomposes into per-group homogeneous oracles over the full
+    90k-step trace to ≤1e-5 per lane (bitwise in practice — the grouped
+    engine runs the SAME per-group programs).  All five backends carry
+    this contract at block scale in tests/test_fleet_groups.py; the 90k
+    soak runs the serving default (broadcast)."""
+    from repro.core import nodebank
+    from repro.fleet import GroupedFleetEngine
+
+    pole_n, rom_n = 4, 4
+    n = pole_n + rom_n
+    rng = np.random.default_rng(12)
+    trace = jnp.asarray((0.9 + 1.8 * rng.random(
+        (STREAM_STEPS, n, N_TILES))).astype(np.float32))
+
+    mcfg = SchedulerConfig(n_tiles=N_TILES, mode="v24", mixed_mode=True,
+                           heterogeneous=True)
+    ge = GroupedFleetEngine(mcfg, backend="broadcast",
+                            groups=("pole", "rom"))
+    nodes = ["base", "n5", "n3", "base"]
+    pkg = {"pole": nodebank.fleet_package_params(ge.engines["pole"].sched,
+                                                 nodes)}
+    states = ge.init({"pole": pole_n, "rom": rom_n}, pkg=pkg)
+    pins = {"pole": np.array([1, 0, 1, 0], bool),
+            "rom": np.array([0, 1, 0, 0], bool)}
+    for g in ge.groups:
+        states[g] = states[g]._replace(ctrl_mode=jnp.asarray(pins[g]))
+
+    t0 = time.perf_counter()
+    _, temps, freqs = ge.block_traces(states, trace)
+    temps = np.asarray(temps, np.float64)
+    freqs = np.asarray(freqs, np.float64)
+    dt = time.perf_counter() - t0
+
+    sl = {"pole": slice(0, pole_n), "rom": slice(pole_n, n)}
+    err = 0.0
+    for g in ge.groups:
+        eng = FleetEngine(ge.engines[g].cfg, backend="broadcast")
+        st = eng.init(sl[g].stop - sl[g].start, pkg=pkg.get(g))
+        st = st._replace(ctrl_mode=jnp.asarray(pins[g]))
+        _, tg, fg = eng.block_traces(st, trace[:, sl[g]])
+        for got, want in ((temps[:, sl[g]], np.asarray(tg, np.float64)),
+                          (freqs[:, sl[g]], np.asarray(fg, np.float64))):
+            err = max(err, float(np.max(np.abs(got - want)
+                                        / np.maximum(np.abs(want), 1.0))))
+    row("fleet.mixed_equiv90k", dt / STREAM_STEPS * 1e6,
+        f"rel_err={err:.2e}(need<=1e-5);"
+        f"pkg_steps_per_s={STREAM_STEPS * n / dt:.0f};"
+        f"groups=pole+rom;nodes=base+n5+n3;pins=mixed")
+    assert err <= 1e-5, f"mixed-profile 90k drift {err:.2e} exceeds 1e-5"
+
+
 def _streaming_90k(cfg) -> None:
     """Streaming ingest over the Appendix-B-scale 90k-step trace: the sync
     contract (1 host sync per flush window) must hold end-to-end."""
@@ -540,12 +657,14 @@ def run() -> None:
 
     _masked_occupancy(cfg)
     _degraded_overhead(cfg)
+    _mixed_profile_overhead()
     _filtration_fast_path()
     _fused_backend(cfg)
     _sharded_scaling("sharded")
     _sharded_scaling("sharded_fused")
     _streaming_90k(cfg)
     _equivalence_90k()
+    _mixed_equivalence_90k()
 
 
 if __name__ == "__main__":

@@ -36,12 +36,29 @@ ap.add_argument("--stream", action="store_true",
 ap.add_argument("--filtration", default="incremental",
                 choices=["incremental", "ring"],
                 help="O(1) sliding-stats fast path or ring-buffer oracle")
+from repro.core.nodebank import available_nodes  # noqa: E402
+from repro.core.plant import available_plants  # noqa: E402
+
+ap.add_argument("--plant", default="pole", choices=available_plants(),
+                help="thermal-plant fidelity rung (flag parity with "
+                     "repro.launch.serve)")
+ap.add_argument("--node", default="base", choices=available_nodes(),
+                help="technology-node parameter bank: every lane gets that "
+                     "node's thermal/DVFS rows (non-base = heterogeneous "
+                     "pole fleet)")
 args = ap.parse_args()
 
 eng = FleetEngine(SchedulerConfig(n_tiles=N_TILES, mode="v24",
-                                  filtration_impl=args.filtration),
+                                  filtration_impl=args.filtration,
+                                  plant=args.plant,
+                                  heterogeneous=args.node != "base"),
                   backend=args.backend, devices=args.devices or None)
-state = eng.init(N_PACKAGES)
+if args.node != "base":
+    from repro.core.nodebank import fleet_package_params
+    state = eng.init(N_PACKAGES, pkg=fleet_package_params(
+        eng.sched, [args.node] * N_PACKAGES))
+else:
+    state = eng.init(N_PACKAGES)
 
 key = jax.random.PRNGKey(0)
 # diurnal swell + per-package/tile heterogeneity (process variation)
@@ -82,7 +99,11 @@ else:
           f"(target 0), final p99 {d['temp_p99_c']:.1f}C")
 
     # same trace through the scan-based runner — one compiled program
-    state2 = eng.init(N_PACKAGES)
+    if args.node != "base":
+        state2 = eng.init(N_PACKAGES, pkg=fleet_package_params(
+            eng.sched, [args.node] * N_PACKAGES))
+    else:
+        state2 = eng.init(N_PACKAGES)
     _, telems = eng.run(state2, trace)
     peak = float(np.asarray(telems.temp_p99_c).max())
     print(f"scan runner agrees: peak p99 {peak:.1f}C, "

@@ -77,11 +77,47 @@ class MCResult(NamedTuple):
         }
 
 
-def sample_params(key, n_trials: int, fp: Fingerprint = FINGERPRINT):
-    """(rth, tau, util, poll_ticks) draws per §10.1 (+ OEM polling spread)."""
+def _ar1(z: jnp.ndarray, corr: float) -> jnp.ndarray:
+    """AR(1) chain over i.i.d. standard normals, unit marginal variance.
+
+    z_i' = corr·z'_{i−1} + √(1−corr²)·z_i — neighbouring trials end up
+    with correlation ``corr`` while each marginal stays N(0, 1), so the
+    downstream scale/clip pipeline sees the same per-trial distribution
+    as the i.i.d. draw."""
+    c = jnp.asarray(corr, z.dtype)
+    root = jnp.sqrt(1.0 - c * c)
+
+    def step(prev, e):
+        cur = c * prev + root * e
+        return cur, cur
+
+    _, rest = jax.lax.scan(step, z[0], z[1:])
+    return jnp.concatenate([z[:1], rest])
+
+
+def sample_params(key, n_trials: int, fp: Fingerprint = FINGERPRINT, *,
+                  corr: float = 0.0):
+    """(rth, tau, util, poll_ticks) draws per §10.1 (+ OEM polling spread).
+
+    ``corr`` > 0 makes the Rth/τ draws RETICLE-NEIGHBOUR correlated:
+    adjacent trial indices model adjacent reticle sites, whose process
+    variation is spatially correlated rather than i.i.d., via an AR(1)
+    chain over the underlying normals (corr = the neighbour correlation
+    coefficient; marginals stay N(0,1), so per-trial distributions are
+    unchanged).  Workload utilisation and OEM polling stay i.i.d. — they
+    are not process-linked.  ``corr=0.0`` (default) is BIT-IDENTICAL to
+    the historical i.i.d. sampler (regression-gated in
+    tests/test_montecarlo_corr.py)."""
+    if not -1.0 < corr < 1.0:
+        raise ValueError(f"corr must be in (-1, 1), got {corr}")
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    rth = fp.rth_c_per_w * (1 + 0.08 * jax.random.normal(k1, (n_trials,)))
-    tau = fp.tau_ms * (1 + 0.12 * jax.random.normal(k2, (n_trials,)))
+    z_rth = jax.random.normal(k1, (n_trials,))
+    z_tau = jax.random.normal(k2, (n_trials,))
+    if corr:
+        z_rth = _ar1(z_rth, corr)
+        z_tau = _ar1(z_tau, corr)
+    rth = fp.rth_c_per_w * (1 + 0.08 * z_rth)
+    tau = fp.tau_ms * (1 + 0.12 * z_tau)
     util = 1.02 + 0.15 * jax.random.normal(k3, (n_trials,))
     poll = jax.random.randint(k4, (n_trials,), 15, 76)   # ms, OEM diversity
     return (jnp.clip(rth, 0.25, 0.70), jnp.clip(tau, 30.0, 160.0),
@@ -153,7 +189,7 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
         fp: Fingerprint = FINGERPRINT, *,
         backend: str = "broadcast", devices: int | None = None,
         filtration_impl: str = "incremental",
-        plant: str = "pole") -> MCResult:
+        plant: str = "pole", corr: float = 0.0) -> MCResult:
     """Run the paired (baseline, V24) Monte-Carlo experiment at fleet scale.
 
     One trial = one lane of a heterogeneous `FleetEngine` fleet (per-trial
@@ -174,6 +210,10 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
     compare the two stats dicts to see how much of the §3.4 guard-band
     reduction survives the higher-fidelity plant
     (`repro.core.guardband.from_montecarlo`).
+
+    ``corr`` threads through to `sample_params`: > 0 makes the per-trial
+    Rth/τ draws reticle-neighbour correlated (0.0 keeps the historical
+    i.i.d. population bit-identically).
     """
     from repro.fleet import FleetEngine   # late import: engine ← core cycle
 
@@ -182,7 +222,7 @@ def run(key=None, n_trials: int = 2_000, n_steps: int = 3_000,
     cfg = dvfs.DVFSConfig() if cfg is None else cfg
     key = jax.random.PRNGKey(2_000) if key is None else key
     k_par, k_tr = jax.random.split(key)
-    rth, tau, util, poll = sample_params(k_par, n_trials, fp)
+    rth, tau, util, poll = sample_params(k_par, n_trials, fp, corr=corr)
     trial_keys = jax.random.split(k_tr, n_trials)
 
     lanes = _pack(n_trials)

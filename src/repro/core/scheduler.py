@@ -88,6 +88,14 @@ class SchedulerConfig:
     degraded_fallback: bool = False
     stale_limit_steps: int = 5     # consecutive stale steps before fallback
     recover_steps: int = 10        # consecutive fresh steps before recovery
+    # operator-settable per-lane controller mode (v24 only): the state
+    # carries a `ctrl_mode` [*batch] bool plane — True pins that lane to
+    # reactive_poll semantics, False keeps v24 — shifted LIVE by the
+    # control plane (canary rollouts: POST /canary pins fleet fractions
+    # per mode with zero recompiles).  Composes with degraded_fallback:
+    # a lane runs reactive when EITHER the staleness latch or the
+    # operator pin says so.
+    mixed_mode: bool = False
     # thermal-plant fidelity rung (`repro.core.plant`): "pole" is the
     # paper's bank (bit-matching the pre-refactor path), "grid" the spatial
     # RC-grid ground truth, "rom" the reduced-order bank fit from it.  The
@@ -152,6 +160,10 @@ class SchedulerState(NamedTuple):
     rho_last: "jnp.ndarray | None" = None   # [..., n_tiles] last finite ρ
     stale: "jnp.ndarray | None" = None      # [...] int32 staleness counter
     degraded: "jnp.ndarray | None" = None   # [...] bool — on reactive floor
+    # operator controller-mode plane (config.mixed_mode) — None otherwise.
+    # True pins the lane to reactive_poll; a VALUE, never a trace constant,
+    # so canary shifts reuse the compiled step (no recompiles).
+    ctrl_mode: "jnp.ndarray | None" = None  # [...] bool — pinned reactive
 
 
 class SchedulerOutput(NamedTuple):
@@ -186,6 +198,11 @@ class ThermalScheduler:
                                       or cfg.recover_steps < 1):
             raise ValueError("stale_limit_steps and recover_steps must be "
                              ">= 1")
+        if cfg.mixed_mode and cfg.mode != "v24":
+            raise ValueError(
+                f"mixed_mode=True requires mode='v24' (per-lane pins shift "
+                f"lanes v24 <-> reactive_poll — mode {cfg.mode!r} has no "
+                f"predictive layer to pin away from)")
         if cfg.plant not in plant_mod.available_plants():
             raise ValueError(
                 f"unknown plant {cfg.plant!r} (available: "
@@ -323,7 +340,8 @@ class ThermalScheduler:
                 events=jnp.zeros(batch_shape, jnp.int32),
                 pkg=pkg_in,
                 throttled=(jnp.zeros(batch_shape + (c.n_tiles,), bool)
-                           if c.mode == "reactive_poll" or fb else None),
+                           if c.mode == "reactive_poll" or fb
+                           or c.mixed_mode else None),
                 # hold-last-value seed = the filtration seed: if the very
                 # first chunk is already faulted the lane holds the same
                 # benign density the ring was primed with
@@ -332,6 +350,8 @@ class ThermalScheduler:
                     batch_shape + (c.n_tiles,)) if fb else None),
                 stale=(jnp.zeros(batch_shape, jnp.int32) if fb else None),
                 degraded=(jnp.zeros(batch_shape, bool) if fb else None),
+                ctrl_mode=(jnp.zeros(batch_shape, bool)
+                           if c.mixed_mode else None),
             )
 
         if shardings is None:
@@ -380,10 +400,12 @@ class ThermalScheduler:
             events=P(*ba),
             pkg=pkg,
             throttled=(P(*ba, None)
-                       if self.cfg.mode == "reactive_poll" or fb else None),
+                       if self.cfg.mode == "reactive_poll" or fb
+                       or self.cfg.mixed_mode else None),
             rho_last=(P(*ba, None) if fb else None),
             stale=(P(*ba) if fb else None),
             degraded=(P(*ba) if fb else None),
+            ctrl_mode=(P(*ba) if self.cfg.mixed_mode else None),
         )
 
     def output_pspecs(self, batch_axes: tuple = (None,)) -> SchedulerOutput:
@@ -431,6 +453,14 @@ class ThermalScheduler:
                             c.stale_limit_steps + c.recover_steps))
             degraded = ((st.degraded & (stale > 0))
                         | (stale >= c.stale_limit_steps))
+
+        # effective per-lane reactive mask: the staleness latch OR the
+        # operator's controller pin — either routes the lane through the
+        # reactive_poll semantics of the merged branch below
+        reactive = degraded
+        if st.ctrl_mode is not None:
+            reactive = (st.ctrl_mode if reactive is None
+                        else reactive | st.ctrl_mode)
 
         ft = pdu_gate.observe(st.filtration, rho)
 
@@ -493,7 +523,7 @@ class ThermalScheduler:
                     else apply_coupling(self.gamma, p_now))
 
         throttled = st.throttled
-        if degraded is None:
+        if reactive is None:
             p = p_now * freq ** c.power_exponent
             p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
             thermal_next = self.plant.step(st.thermal, p_eff, poles=poles)
@@ -501,12 +531,13 @@ class ThermalScheduler:
             events = st.events + jnp.any(temp > fp.t_crit_c,
                                          axis=-1).astype(jnp.int32)
         else:
-            # merged plant: degraded packages run reactive_poll semantics —
-            # the plant advances at LAST step's frequency, the sensor polls
-            # the post-step junction, and the throttle latch carries the
-            # hysteresis — healthy packages take the v24 law untouched.
-            # The plant steps ONCE, at the per-lane blended frequency.
-            deg_t = degraded[..., None]
+            # merged plant: reactive lanes (staleness-degraded OR operator-
+            # pinned) run reactive_poll semantics — the plant advances at
+            # LAST step's frequency, the sensor polls the post-step
+            # junction, and the throttle latch carries the hysteresis —
+            # v24 lanes take the predictive law untouched.  The plant
+            # steps ONCE, at the per-lane blended frequency.
+            deg_t = reactive[..., None]
             f_used = jnp.where(deg_t, st.freq, freq)
             p = p_now * f_used ** c.power_exponent
             p_eff = p if self.gamma is None else apply_coupling(self.gamma, p)
@@ -524,10 +555,10 @@ class ThermalScheduler:
                 jnp.where(throttled, c.throttle_level,
                           jnp.minimum(st.freq + self.ramp, 1.0)),
                 freq)
-            # degraded lanes count fresh throttle engagements (the §10
-            # baseline statistic); healthy lanes count T_crit crossings
+            # reactive lanes count fresh throttle engagements (the §10
+            # baseline statistic); v24 lanes count T_crit crossings
             events = st.events + jnp.where(
-                degraded, jnp.any(trig & ~st.throttled, axis=-1),
+                reactive, jnp.any(trig & ~st.throttled, axis=-1),
                 jnp.any(temp > fp.t_crit_c, axis=-1)).astype(jnp.int32)
             hint = jnp.where(deg_t, p_eff, hint)
 
@@ -544,7 +575,8 @@ class ThermalScheduler:
                                         else st.rho_last),
                               stale=stale if stale is not None else st.stale,
                               degraded=(degraded if degraded is not None
-                                        else st.degraded)), out
+                                        else st.degraded),
+                              ctrl_mode=st.ctrl_mode), out
 
     def _update_reactive_poll(self, st: SchedulerState, ft, p_now,
                               poles) -> tuple[SchedulerState, SchedulerOutput]:

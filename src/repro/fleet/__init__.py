@@ -19,17 +19,21 @@ from repro.fleet.distributed_ingest import (LaneSpan, distributed_stream,
                                             local_chunk_source, local_lanes)
 from repro.fleet.engine import FleetEngine, FleetSurvey, FleetTelemetry
 from repro.fleet.faults import FaultPlan, HintOutage, HostStall, SensorFault
+from repro.fleet.groups import GroupedFleetEngine
 from repro.fleet.ingest import (HintQueue, StreamStats, chunk_source,
                                 merge_sources, stream)
-from repro.fleet.registry import CapacityPlan, FleetRegistry, Tenant
+from repro.fleet.registry import (CapacityPlan, FleetRegistry, LaneProfile,
+                                  Tenant)
 from repro.fleet.service import FleetService, serve_http
 
-__all__ = ["FleetEngine", "FleetSurvey", "FleetTelemetry",
+__all__ = ["FleetEngine", "GroupedFleetEngine", "FleetSurvey",
+           "FleetTelemetry",
            "available_backends", "get_backend", "register", "HintQueue",
            "StreamStats", "chunk_source", "merge_sources", "stream",
            "LaneSpan", "distributed_stream", "local_chunk_source",
            "local_lanes",
-           "FleetRegistry", "Tenant", "CapacityPlan", "AlertEngine",
+           "FleetRegistry", "Tenant", "CapacityPlan", "LaneProfile",
+           "AlertEngine",
            "TenantWindowStats", "tenant_window_stats", "LogSink",
            "JsonlSink", "WebhookSink", "FleetService", "serve_http",
            "FaultPlan", "HintOutage", "SensorFault", "HostStall"]

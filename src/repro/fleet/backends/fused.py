@@ -109,6 +109,9 @@ class FusedBackend(FleetBackend):
             fallback=bool(c.degraded_fallback),
             stale_limit=int(c.stale_limit_steps),
             recover=int(c.recover_steps),
+            # operator-pinned per-lane controller mode (canary rollouts):
+            # the ctrl_mode state leaf enters as a chunk-constant plane
+            mixed=bool(c.mixed_mode),
         )
 
     # -- state ------------------------------------------------------------
@@ -192,6 +195,8 @@ class FusedBackend(FleetBackend):
                else (state.rho_last.astype(jnp.float32).T,
                      state.stale.astype(jnp.float32),
                      state.degraded.astype(jnp.float32)))
+        mode0 = (None if state.ctrl_mode is None
+                 else state.ctrl_mode.astype(jnp.float32))
 
         # tiles-on-sublanes, packages-on-lanes layout
         tnl = lambda x: jnp.moveaxis(x, -1, -2)            # [.., n, t]->[.., t, n]
@@ -208,6 +213,7 @@ class FusedBackend(FleetBackend):
             thr0=thr0,
             step0=state.step,
             fb0=fb0,
+            mode0=mode0,
             block_packages=self.block_packages,
             time_chunk=self.time_chunk,
             interpret=self.interpret,
@@ -231,6 +237,7 @@ class FusedBackend(FleetBackend):
             rho_last=None if fb is None else fb[0].T,
             stale=None if fb is None else fb[1].astype(jnp.int32),
             degraded=None if fb is None else (fb[2] > 0.5),
+            ctrl_mode=state.ctrl_mode,
         )
         return state, tnl(temps), tnl(freqs)
 

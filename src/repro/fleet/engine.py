@@ -595,6 +595,16 @@ class FleetEngine:
         fsum, comp = self._kahan(fsum, comp, freqs.sum(0))
         return state, (peak, exceed, fsum, comp)
 
+    @staticmethod
+    def _step0(state0: SchedulerState):
+        """Fleet-global scheduler step at block entry.  The vmap layout
+        carries a per-lane [n] step counter, but lanes advance in lockstep
+        (attached lanes poll in the fleet's phase — see the module
+        docstring), so any lane's value IS the fleet step; the broadcast
+        layouts carry the scalar directly."""
+        s = state0.step
+        return s if jnp.ndim(s) == 0 else s.reshape(-1)[0]
+
     def _reactive_poll_events(self, state0: SchedulerState,
                               temps: jnp.ndarray,
                               active=None) -> jnp.ndarray:
@@ -611,7 +621,7 @@ class FleetEngine:
         poll = (self.sched.poll_ticks if state0.pkg is None
                 else state0.pkg.poll_ticks)
         t = temps.shape[0]
-        steps = state0.step + jnp.arange(t)
+        steps = self._step0(state0) + jnp.arange(t)
 
         def tick(latch, x):
             temp, k = x
@@ -643,8 +653,10 @@ class FleetEngine:
         poll = (self.sched.poll_ticks if state0.pkg is None
                 else state0.pkg.poll_ticks)
         t = temps.shape[0]
-        steps = state0.step + jnp.arange(t)
+        steps = self._step0(state0) + jnp.arange(t)
         lim, rec = c.stale_limit_steps, c.recover_steps
+
+        ctrl = state0.ctrl_mode
 
         def tick(carry, x):
             rho_last, stale, deg, thr = carry
@@ -655,12 +667,17 @@ class FleetEngine:
             stale_n = jnp.where(valid, jnp.maximum(stale - 1, 0),
                                 jnp.minimum(stale + 1, lim + rec))
             deg_n = (deg & (stale_n > 0)) | (stale_n >= lim)
+            # effective reactive mask: the staleness latch OR the operator's
+            # controller pin (mixed_mode) — either routes the lane through
+            # the reactive_poll semantics, mirroring the merged branch in
+            # `ThermalScheduler.update` and the kernel
+            reactive = deg_n if ctrl is None else (deg_n | ctrl)
             polled = (k % poll) == 0
             trig = (temp >= fp.t_crit_c) & polled
             cool = (temp <= c.resume_below_c) & polled
-            deg_t = deg_n[..., None]
+            deg_t = reactive[..., None]
             thr_n = jnp.where(deg_t, (thr | trig) & ~cool, False)
-            ev = jnp.where(deg_n, jnp.any(trig & ~thr, axis=-1),
+            ev = jnp.where(reactive, jnp.any(trig & ~thr, axis=-1),
                            jnp.any(temp > fp.t_crit_c, axis=-1))
             deg_vis = deg_n
             if active is not None:
@@ -676,6 +693,64 @@ class FleetEngine:
             tick, carry0, (rho_trace, temps, steps))
         return ev_step, deg_count, rho_safe
 
+    def _mixed_mode_events(self, state0: SchedulerState, temps,
+                           active=None) -> jnp.ndarray:
+        """[T] event plane for operator-pinned mixed fleets WITHOUT the
+        degraded fallback (config.mixed_mode, degraded_fallback off):
+        pinned lanes count fresh throttle engagements (the reactive_poll
+        statistic, latch replayed from the pre-block state), v24 lanes
+        count T_crit crossings — mirroring the merged branch the scheduler
+        and kernel step."""
+        c, fp = self.cfg, self.fp
+        poll = (self.sched.poll_ticks if state0.pkg is None
+                else state0.pkg.poll_ticks)
+        t = temps.shape[0]
+        steps = self._step0(state0) + jnp.arange(t)
+        ctrl = state0.ctrl_mode
+
+        def tick(latch, x):
+            temp, k = x
+            polled = (k % poll) == 0
+            trig = (temp >= fp.t_crit_c) & polled
+            cool = (temp <= c.resume_below_c) & polled
+            latch_n = jnp.where(ctrl[..., None], (latch | trig) & ~cool,
+                                False)
+            ev = jnp.where(ctrl, jnp.any(trig & ~latch, axis=-1),
+                           jnp.any(temp > fp.t_crit_c, axis=-1))
+            if active is not None:
+                ev = ev & active
+            return latch_n, ev.sum().astype(jnp.int32)
+
+        _, ev_step = jax.lax.scan(tick, state0.throttled, (temps, steps))
+        return ev_step
+
+    def _event_plane(self, rho_trace, temps, state0: SchedulerState,
+                     active=None):
+        """Per-step event/degraded planes for one chunk's streamed traces:
+        ([T] event counts, [T] degraded-lane counts, rho_trace — sanitised
+        under the degraded fallback, passed through otherwise).  Split out
+        from `_telemetry_from_traces` so profile-group dispatch
+        (`repro.fleet.groups`) can derive each group's plane under its own
+        config before merging one fleet-wide record."""
+        t = temps.shape[0]
+        deg_count = jnp.zeros((t,), jnp.int32)
+        if self.cfg.mode == "reactive_poll":
+            ev_step = self._reactive_poll_events(state0, temps, active)
+        elif self.cfg.degraded_fallback:
+            # one recurrence pass yields the mixed-mode event plane, the
+            # degraded-lane counts AND the sanitised density the MTPS
+            # reductions below must see instead of raw NaN/Inf words
+            ev_step, deg_count, rho_trace = self._fallback_replay(
+                state0, rho_trace, temps, active)
+        elif self.cfg.mixed_mode:
+            ev_step = self._mixed_mode_events(state0, temps, active)
+        else:
+            crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)  # [T, n]
+            if active is not None:
+                crossed = crossed & active[None, :]
+            ev_step = crossed.sum(axis=-1).astype(jnp.int32)
+        return ev_step, deg_count, rho_trace
+
     def _telemetry_from_traces(self, rho_trace, temps, freqs, prev_events,
                                state0: SchedulerState,
                                active=None) -> FleetTelemetry:
@@ -687,22 +762,19 @@ class FleetEngine:
         statistic); every other mode counts T_crit crossings.  With an
         ``active`` lane mask every reduction covers the active lanes only
         (padded capacity-pool lanes are invisible to the operator)."""
+        ev_step, deg_count, rho_trace = self._event_plane(
+            rho_trace, temps, state0, active)
+        return self._traces_record(rho_trace, temps, freqs, prev_events,
+                                   ev_step, deg_count, active)
+
+    def _traces_record(self, rho_trace, temps, freqs, prev_events,
+                       ev_step, deg_count, active=None) -> FleetTelemetry:
+        """The masked/unmasked trace reductions behind
+        `_telemetry_from_traces`, taking pre-computed event/degraded
+        planes — profile-group dispatch concatenates per-group traces and
+        sums per-group planes before calling this once fleet-wide."""
         t, n = temps.shape[0], temps.shape[1]
         flat = lambda x: x.reshape(t, -1)
-        deg_count = jnp.zeros((t,), jnp.int32)
-        if self.cfg.mode == "reactive_poll":
-            ev_step = self._reactive_poll_events(state0, temps, active)
-        elif self.cfg.degraded_fallback:
-            # one recurrence pass yields the mixed-mode event plane, the
-            # degraded-lane counts AND the sanitised density the MTPS
-            # reductions below must see instead of raw NaN/Inf words
-            ev_step, deg_count, rho_trace = self._fallback_replay(
-                state0, rho_trace, temps, active)
-        else:
-            crossed = jnp.any(temps > self.fp.t_crit_c, axis=-1)  # [T, n]
-            if active is not None:
-                crossed = crossed & active[None, :]
-            ev_step = crossed.sum(axis=-1).astype(jnp.int32)
         rtok = rtok_from_rho(rho_trace)
         if active is None:
             return FleetTelemetry(

@@ -1,0 +1,246 @@
+"""Profile-group dispatch — one fleet running a fidelity MIX.
+
+`FleetEngine` is one scheduler config per fleet: a single plant fidelity,
+stepped under a single backend path.  `GroupedFleetEngine` lets one fleet
+mix plant fidelities per lane: lanes are grouped by plant family into
+sub-fleets, each stepped under its own backend path — pole/rom groups
+keep the fused whole-step kernel, grid groups take the pure-JAX scan path
+(the fused backends already decline non-pole families by shadowing
+`run_block = None`) — with telemetry merged back into ONE flush record.
+
+Lane order is GROUP-BLOCKED and stable: global lane `i` is
+`offset(group) + local_lane`, where groups keep their construction order
+and offsets are the running sum of the group capacities.  Per-lane
+trajectories are identical to running each group as its own homogeneous
+fleet (lane independence — only the telemetry reductions cross lanes), so
+the mixed fleet is gated per lane against per-group homogeneous oracles
+exactly like backends are gated against each other
+(tests/test_fleet_groups.py).
+
+The telemetry merge reuses the engine's own split reduction: each group
+derives its per-step event/degraded planes under ITS config
+(`FleetEngine._event_plane` — reactive replay, fallback staleness
+recurrence, mixed-mode pins), the planes are summed, traces are
+concatenated in group order, and `FleetEngine._traces_record` reduces the
+whole fleet once — percentiles, MTPS splits and event counters cover the
+mix as one fleet, and an ``active`` mask spans the global lane axis.
+
+Per-group sub-states are a plain ``{group: SchedulerState}`` dict — a
+pytree, so `repro.checkpoint.CheckpointManager` snapshots a mixed fleet
+unchanged, and the zero-recompile contract holds per group (capacity
+changes respecialise only the group that crossed a bucket boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import FINGERPRINT, Fingerprint
+from repro.core.scheduler import SchedulerConfig, SchedulerState
+from repro.fleet.engine import FleetEngine, FleetTelemetry
+
+__all__ = ["GroupedFleetEngine"]
+
+
+class GroupedFleetEngine:
+    """Sub-fleet-per-plant-group dispatch behind the FleetEngine surface.
+
+    ``groups`` is an ordered tuple of plant names (see
+    `repro.core.plant.available_plants`); each gets its own `FleetEngine`
+    over ``cfg`` with that plant substituted.  Heterogeneous per-package
+    draws (`PackageParams`, node banks) apply to the ``pole`` group only —
+    the scheduler's heterogeneous path is pole-exact — so grid/rom groups
+    run their group-homogeneous physics.
+
+    State is ``{group: SchedulerState}``; traces and masks span the
+    group-blocked global lane axis (group order = construction order).
+    """
+
+    def __init__(self, cfg: SchedulerConfig | None = None,
+                 fp: Fingerprint = FINGERPRINT,
+                 backend: str = "broadcast",
+                 groups: tuple[str, ...] = ("pole",),
+                 devices: int | None = None,
+                 donate_state: bool | None = None):
+        if not groups or len(set(groups)) != len(groups):
+            raise ValueError(f"groups must be a non-empty tuple of unique "
+                             f"plant names, got {groups!r}")
+        self.cfg = cfg = SchedulerConfig() if cfg is None else cfg
+        self.fp = fp
+        self.groups = tuple(groups)
+        self.engines: dict[str, FleetEngine] = {}
+        for g in self.groups:
+            gcfg = dataclasses.replace(
+                cfg, plant=g,
+                heterogeneous=cfg.heterogeneous and g == "pole")
+            self.engines[g] = FleetEngine(gcfg, fp, backend=backend,
+                                          devices=devices,
+                                          donate_state=donate_state)
+        lead = self.engines[self.groups[0]]
+        self.backend = lead.backend
+        self.donate_state = lead.donate_state
+        dn = (0,) if self.donate_state else ()
+        self._run_block = jax.jit(self._run_block_impl, donate_argnums=dn)
+        self._step = jax.jit(self._step_impl, donate_argnums=dn)
+
+    # ------------------------------------------------------------------ api
+    def init(self, counts, pkg=None) -> dict[str, SchedulerState]:
+        """Per-group fleet states.  ``counts``: ``{group: n_lanes}`` (or an
+        int, replicated to every group); ``pkg``: optional
+        ``{group: PackageParams}`` heterogeneous rows (pole groups only)."""
+        if isinstance(counts, int):
+            counts = {g: counts for g in self.groups}
+        if set(counts) != set(self.groups):
+            raise ValueError(f"counts must cover exactly the groups "
+                             f"{self.groups}, got {tuple(counts)}")
+        pkg = pkg or {}
+        return {g: self.engines[g].init(int(counts[g]), pkg=pkg.get(g))
+                for g in self.groups}
+
+    def lane_slices(self, states) -> dict[str, slice]:
+        """Global-lane slice per group (group-blocked order)."""
+        out, off = {}, 0
+        for g in self.groups:
+            n = states[g].freq.shape[0]
+            out[g] = slice(off, off + n)
+            off += n
+        return out
+
+    def n_lanes(self, states) -> int:
+        return sum(states[g].freq.shape[0] for g in self.groups)
+
+    def step(self, states, rho, active=None):
+        """One fleet step: rho scalar, [n_total] or [n_total, tiles]
+        spanning the group-blocked lane axis; returns
+        (states, SchedulerOutput, FleetTelemetry) — outputs merged into
+        one record."""
+        self._guard(states, None)
+        n = self.n_lanes(states)
+        rho = jnp.asarray(rho, states[self.groups[0]].freq.dtype)
+        if rho.ndim == 1:
+            rho = rho[:, None]
+        rho = jnp.broadcast_to(rho, (n, self.cfg.n_tiles))
+        return self._step(states, rho, active)
+
+    def run_block(self, states, rho_trace, active=None):
+        """Advance a [T, n_total, tiles] chunk; one merged flush record."""
+        self._guard(states, rho_trace.shape[1])
+        return self._run_block(states, rho_trace, active)
+
+    def run_chunked(self, states, rho_trace, flush_every: int, active=None):
+        """ceil(T/K) merged flush records over a [T, n_total, tiles] trace
+        (tail chunks shorten, nothing dropped) — one host-visible record
+        pytree with [n_flush]-leaved fields, like `FleetEngine.run_chunked`.
+        """
+        self._guard(states, rho_trace.shape[1])
+        t = rho_trace.shape[0]
+        recs = []
+        for i in range(0, t, flush_every):
+            states, rec = self._run_block(states, rho_trace[i:i + flush_every],
+                                          active)
+            recs.append(rec)
+        telems = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *recs)
+        return states, telems
+
+    def block_traces(self, states, rho_trace):
+        """(states', temps [T, n_total, tiles], freqs [T, n_total, tiles])
+        concatenated in group order — trace-safe, NOT jitted here (the
+        per-lane equivalence tests and the control plane compose it)."""
+        sl = self.lane_slices(states)
+        new, temps, freqs = {}, [], []
+        for g in self.groups:
+            st, tg, fg = self.engines[g].block_traces(states[g],
+                                                      rho_trace[:, sl[g]])
+            new[g] = st
+            temps.append(tg)
+            freqs.append(fg)
+        return new, jnp.concatenate(temps, 1), jnp.concatenate(freqs, 1)
+
+    def describe(self) -> str:
+        return f"groups[{','.join(self.groups)}]@{self.backend}"
+
+    # ------------------------------------------------------------ internals
+    def _guard(self, states, n_lanes) -> None:
+        if set(states) != set(self.groups):
+            raise ValueError(f"state dict must cover exactly the groups "
+                             f"{self.groups}, got {tuple(states)}")
+        for g in self.groups:
+            self.engines[g]._guard_donated(states[g])
+        if n_lanes is not None and n_lanes != self.n_lanes(states):
+            raise ValueError(
+                f"trace lane axis ({n_lanes}) must span the group-blocked "
+                f"fleet ({self.n_lanes(states)} lanes: "
+                + ", ".join(f"{g}={states[g].freq.shape[0]}"
+                            for g in self.groups) + ")")
+
+    def _split_mask(self, states, active):
+        if active is None:
+            return {g: None for g in self.groups}
+        sl = self.lane_slices(states)
+        return {g: active[sl[g]] for g in self.groups}
+
+    def _prev_events(self, states, act):
+        tot = jnp.zeros((), jnp.int32)
+        for g in self.groups:
+            ev = states[g].events
+            tot = tot + (ev.sum() if act[g] is None
+                         else jnp.where(act[g], ev, 0).sum())
+        return tot
+
+    def _run_block_impl(self, states, rho_trace, active=None):
+        """One merged flush record: per-group traces + event planes under
+        each group's OWN config, reduced once fleet-wide."""
+        sl = self.lane_slices(states)
+        act = self._split_mask(states, active)
+        prev_events = self._prev_events(states, act)
+        new, temps_l, freqs_l, rho_l = {}, [], [], []
+        ev_step = deg_count = 0
+        for g in self.groups:
+            eng, st0 = self.engines[g], states[g]
+            rho_g = rho_trace[:, sl[g]]
+            st, temps, freqs = eng.block_traces(st0, rho_g)
+            ev_g, deg_g, rho_g = eng._event_plane(rho_g, temps, st0, act[g])
+            new[g] = st
+            temps_l.append(temps)
+            freqs_l.append(freqs)
+            rho_l.append(rho_g)
+            ev_step = ev_step + ev_g
+            deg_count = deg_count + deg_g
+        lead = self.engines[self.groups[0]]
+        telem = lead._traces_record(
+            jnp.concatenate(rho_l, 1), jnp.concatenate(temps_l, 1),
+            jnp.concatenate(freqs_l, 1), prev_events, ev_step, deg_count,
+            active)
+        return new, telem.reduce()
+
+    def _step_impl(self, states, rho, active=None):
+        """One merged per-step record: per-group backend updates, outputs
+        concatenated, the lead engine's masked reduction covering the mix
+        (a full-true mask when no mask is given — same interpolated
+        percentiles as the trace path)."""
+        sl = self.lane_slices(states)
+        act = self._split_mask(states, active)
+        prev_events = self._prev_events(states, act)
+        new, outs, deg = {}, [], jnp.zeros((), jnp.int32)
+        for g in self.groups:
+            eng = self.engines[g]
+            st, out = eng.backend_impl.update(states[g], rho[sl[g]])
+            if eng.cfg.degraded_fallback:
+                rho = rho.at[sl[g]].set(st.rho_last)
+            new[g] = st
+            outs.append(out)
+            deg = deg + eng._degraded_count(st, act[g])
+        cat = lambda field: jnp.concatenate(
+            [getattr(o, field) for o in outs], 0)
+        out = outs[0]._replace(
+            freq=cat("freq"), temp_c=cat("temp_c"), hint_w=cat("hint_w"),
+            at_risk=cat("at_risk"), balance=cat("balance"))
+        events = jnp.concatenate([new[g].events for g in self.groups])
+        mask = (jnp.ones(self.n_lanes(states), bool) if active is None
+                else active)
+        lead = self.engines[self.groups[0]]
+        telem = lead._masked_step_telemetry(rho, out, prev_events, events,
+                                            mask, deg)
+        return new, out, telem

@@ -31,17 +31,50 @@ can apply the matching jitted surgery op.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-__all__ = ["FleetRegistry", "Tenant", "CapacityPlan", "next_pow2"]
+__all__ = ["FleetRegistry", "Tenant", "CapacityPlan", "LaneProfile",
+           "next_pow2"]
 
 
 def next_pow2(n: int) -> int:
     """Smallest power of two ≥ n (and ≥ 1)."""
     n = max(int(n), 1)
     return 1 << (n - 1).bit_length()
+
+
+_PROFILE_MODES = ("v24", "reactive_poll")
+
+
+@dataclass(frozen=True)
+class LaneProfile:
+    """Per-lane membership profile: ``(node, mode, plant)``.
+
+    * ``node`` — a `repro.core.nodebank` bank name; the service resolves
+      it to that lane's heterogeneous `PackageParams` row at attach time
+      (process-node physics per lane).
+    * ``mode`` — the lane's controller policy: ``"v24"`` (predictive) or
+      ``"reactive_poll"`` (operator-pinned reactive).  Pins land in the
+      traced ``ctrl_mode`` state plane, so shifting a fleet's mode mix
+      (canary rollout) never recompiles.
+    * ``plant`` — the thermal-plant group the lane is dispatched under;
+      profile-group dispatch (`repro.fleet.groups`) steps each group as a
+      sub-fleet under its own backend path.
+
+    The registry stores profiles as plain bookkeeping; it never touches
+    jax.  Name validity against the node/plant registries is the caller's
+    concern (the service validates at attach)."""
+
+    node: str = "base"
+    mode: str = "v24"
+    plant: str = "pole"
+
+    def __post_init__(self):
+        if self.mode not in _PROFILE_MODES:
+            raise ValueError(f"profile mode must be one of "
+                             f"{_PROFILE_MODES}, got {self.mode!r}")
 
 
 @dataclass
@@ -74,6 +107,10 @@ class CapacityPlan:
     old_capacity: int
     new_capacity: int
     perm: tuple = ()
+    # plant group whose pool transitions (profile-group dispatch); "" on a
+    # single-group fleet — the service routes the surgery to that group's
+    # sub-state
+    group: str = ""
 
 
 class FleetRegistry:
@@ -93,6 +130,7 @@ class FleetRegistry:
         self.capacity = self.min_capacity
         self._lane_of: dict[str, int] = {}      # package id -> lane
         self._tenant_of: dict[str, str] = {}    # package id -> tenant name
+        self._profile_of: dict[str, LaneProfile] = {}
         self._free: list[int] = list(range(self.capacity - 1, -1, -1))
         self._tenants: dict[str, Tenant] = {}
 
@@ -142,10 +180,13 @@ class FleetRegistry:
     def lane(self, package: str) -> int:
         return self._lane_of[package]
 
-    def attach(self, package: str, tenant: str = "default"
+    def attach(self, package: str, tenant: str = "default",
+               profile: LaneProfile | None = None
                ) -> tuple[int, CapacityPlan]:
         """Attach a package; returns (lane, plan).  Apply the plan's state
-        surgery FIRST, then scatter the fresh lane."""
+        surgery FIRST, then scatter the fresh lane.  ``profile`` pins the
+        lane's `(node, mode, plant)` membership attributes (defaults to
+        the homogeneous base profile)."""
         if package in self._lane_of:
             raise ValueError(f"package {package!r} already attached "
                              f"(lane {self._lane_of[package]})")
@@ -155,6 +196,7 @@ class FleetRegistry:
         lane = self._free.pop()
         self._lane_of[package] = lane
         self._tenant_of[package] = tenant
+        self._profile_of[package] = profile or LaneProfile()
         self._tenants[tenant].packages.add(package)
         return lane, plan
 
@@ -166,10 +208,57 @@ class FleetRegistry:
         lane = self._lane_of.pop(package)
         tname = self._tenant_of.pop(package)
         self._tenants[tname].packages.discard(package)
+        self._profile_of.pop(package, None)
         self._free.append(lane)
         plan = self._plan(self.n_active)
         self._apply_plan(plan)
         return lane, plan
+
+    # -- per-lane profiles -------------------------------------------------
+    def profile(self, package: str) -> LaneProfile:
+        if package not in self._lane_of:
+            raise ValueError(f"package {package!r} is not attached")
+        return self._profile_of[package]
+
+    def set_mode(self, package: str, mode: str) -> LaneProfile:
+        """Pin one package's controller mode (validated by LaneProfile)."""
+        pr = self.profile(package)
+        pr = replace(pr, mode=mode)
+        self._profile_of[package] = pr
+        return pr
+
+    def canary(self, reactive_frac: float) -> dict:
+        """Pin a fleet FRACTION to reactive_poll, deterministically.
+
+        The first ``round(frac · n_active)`` active packages in sorted-id
+        order get ``mode="reactive_poll"``; the rest return to ``"v24"``.
+        Sorted-id order makes repeated canary calls idempotent and
+        monotone: raising the fraction only ever ADDS pinned lanes, so a
+        25% → 50% rollout never flips an already-canaried package back.
+        Returns a summary dict (the `POST /canary` response body)."""
+        if not 0.0 <= reactive_frac <= 1.0:
+            raise ValueError(f"reactive_frac must be in [0, 1], got "
+                             f"{reactive_frac}")
+        pkgs = sorted(self._lane_of)
+        k = round(reactive_frac * len(pkgs))
+        changed = 0
+        for i, p in enumerate(pkgs):
+            mode = "reactive_poll" if i < k else "v24"
+            if self._profile_of[p].mode != mode:
+                self._profile_of[p] = replace(self._profile_of[p], mode=mode)
+                changed += 1
+        return {"reactive_frac": float(reactive_frac),
+                "pinned_reactive": k, "changed": changed,
+                "n_active": len(pkgs)}
+
+    def ctrl_mode_mask(self) -> np.ndarray:
+        """[capacity] bool — True on lanes pinned to reactive_poll.  A
+        traced operand beside `active_mask`: shifting the fleet's mode mix
+        is a value change, never a recompile."""
+        m = np.zeros(self.capacity, bool)
+        for pkg, lane in self._lane_of.items():
+            m[lane] = self._profile_of[pkg].mode == "reactive_poll"
+        return m
 
     # -- capacity ----------------------------------------------------------
     def _plan(self, n_active: int) -> CapacityPlan:
@@ -247,7 +336,10 @@ class FleetRegistry:
         return {
             "capacity": self.capacity,
             "n_active": self.n_active,
-            "packages": {p: {"lane": l, "tenant": self._tenant_of[p]}
+            "packages": {p: {"lane": l, "tenant": self._tenant_of[p],
+                             "node": self._profile_of[p].node,
+                             "mode": self._profile_of[p].mode,
+                             "plant": self._profile_of[p].plant}
                          for p, l in sorted(self._lane_of.items())},
             "tenants": {t.name: {"slot": t.slot,
                                  "t_crit_c": t.t_crit_c,

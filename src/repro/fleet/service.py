@@ -62,6 +62,16 @@ operator-facing in docs/serving.md:
 
     GET  /healthz /telemetry /fleet /alerts /dashboard
     POST /attach /detach /thresholds /ingest /replay /shutdown
+    POST /canary /mode           (per-lane controller-mode rollout)
+
+Per-lane profiles (`repro.fleet.registry.LaneProfile`) ride membership:
+`POST /attach` accepts optional ``node`` (a `repro.core.nodebank` bank,
+resolved to that lane's heterogeneous `PackageParams` row), ``mode``
+(``v24`` | ``reactive_poll`` — pinned into the traced ctrl_mode plane of
+a `SchedulerConfig(mixed_mode=True)` fleet) and ``plant`` keys, and
+`POST /canary {"reactive_frac": f}` shifts the fleet's mode mix live —
+pure value changes, ZERO recompiles after warmup (the §9/§10 canary
+rollout path; see docs/serving.md).
 
 `GET /dashboard` is the same surface rendered for humans: a stdlib-built
 HTML page (sparkline flush history, per-tenant table, alert feed) with a
@@ -87,7 +97,7 @@ from repro.core.workload import KINDS, make_trace
 from repro.fleet.alerts import AlertEngine, tenant_window_stats
 from repro.fleet.engine import FleetEngine
 from repro.fleet.ingest import HintQueue, merge_sources
-from repro.fleet.registry import FleetRegistry
+from repro.fleet.registry import FleetRegistry, LaneProfile
 
 __all__ = ["FleetService", "serve_http"]
 
@@ -160,6 +170,11 @@ class FleetService:
         self._attach_jit = jax.jit(self._attach_op, donate_argnums=dn)
         self._grow_jit = jax.jit(self._grow_op, donate_argnums=dn)
         self._shrink_jit = jax.jit(self._shrink_op, donate_argnums=dn)
+        # per-lane node banks: the scatter of one node's PackageParams row
+        # into a heterogeneous fleet state (one program per capacity, warmed
+        # with the rest); rows are cached per node name
+        self._node_jit = jax.jit(self._node_op, donate_argnums=dn)
+        self._node_rows: dict[str, object] = {}
         # one persistent jit for workload generation: eager `make_trace`
         # rebuilds its lax.scan closure every call, which recompiles every
         # tick — under ONE jit object the (kind, shape) programs cache
@@ -211,6 +226,15 @@ class FleetService:
         return jax.tree_util.tree_map(grow, state, template)
 
     @staticmethod
+    def _node_op(state, row, lane):
+        """Scatter one node bank's `PackageParams` row (batch 1) into the
+        heterogeneous per-lane draws at ``lane`` — the jitted tail of a
+        profile-carrying attach."""
+        pkg = jax.tree_util.tree_map(lambda a, b: a.at[lane].set(b[0]),
+                                     state.pkg, row)
+        return state._replace(pkg=pkg)
+
+    @staticmethod
     def _shrink_op(state, perm):
         old = state.freq.shape[0]
 
@@ -251,30 +275,122 @@ class FleetService:
             f.flush()
             os.fsync(f.fileno())
 
+    # ---------------------------------------------------- per-lane profiles
+    def _node_row(self, node: str):
+        """Cached single-lane `PackageParams` row for ``node`` (strong-typed
+        like every other scatter source)."""
+        row = self._node_rows.get(node)
+        if row is None:
+            from repro.core.nodebank import fleet_package_params
+            row = fleet_package_params(self.engine.sched, [node])
+            row = jax.tree_util.tree_map(lambda a: a.astype(a.dtype), row)
+            self._node_rows[node] = row
+        return row
+
+    def _profile_for(self, node: str, mode: str,
+                     plant: str | None) -> LaneProfile:
+        """Validate one attach's profile against the service config: node
+        names must exist, non-base nodes need a heterogeneous fleet,
+        reactive pins need `mixed_mode`, and the resident engine serves
+        exactly ONE plant group (a fidelity mix runs through
+        `repro.fleet.groups.GroupedFleetEngine`)."""
+        from repro.core.nodebank import available_nodes, get_node
+        get_node(node)                       # raises on unknown names
+        if node != "base" and not self.cfg.heterogeneous:
+            raise ValueError(
+                f"node {node!r} needs SchedulerConfig(heterogeneous=True) "
+                f"— a homogeneous fleet carries no per-lane parameter rows "
+                f"(available nodes: {', '.join(available_nodes())})")
+        if mode == "reactive_poll" and not self.cfg.mixed_mode:
+            raise ValueError(
+                "pinning mode='reactive_poll' needs "
+                "SchedulerConfig(mixed_mode=True) — the fleet carries no "
+                "ctrl_mode plane otherwise")
+        plant = self.cfg.plant if plant is None else plant
+        if plant != self.cfg.plant:
+            raise ValueError(
+                f"this service steps plant group {self.cfg.plant!r}; "
+                f"got plant={plant!r} — run a fidelity mix through "
+                f"repro.fleet.groups.GroupedFleetEngine")
+        return LaneProfile(node=node, mode=mode, plant=plant)
+
+    def _refresh_ctrl(self) -> None:
+        """Re-derive the traced ctrl_mode plane from the registry's
+        profiles.  Pure value substitution on one state leaf — shifting the
+        fleet's mode mix never compiles anything."""
+        if self.state.ctrl_mode is not None:
+            self.state = self.state._replace(
+                ctrl_mode=jnp.asarray(self.registry.ctrl_mode_mask()))
+
+    def canary(self, reactive_frac: float) -> dict:
+        """Canary rollout: pin the first ``round(frac·n_active)`` packages
+        (sorted-id order — monotone and idempotent, see
+        `FleetRegistry.canary`) to reactive_poll, the rest back to v24,
+        live.  The pins land in the ctrl_mode value plane, so fraction
+        shifts after warmup trigger ZERO XLA compiles."""
+        with self.lock:
+            if not self.cfg.mixed_mode:
+                raise ValueError(
+                    "canary rollout needs SchedulerConfig(mixed_mode=True)")
+            out = self.registry.canary(float(reactive_frac))
+            self._refresh_ctrl()
+            self._journal({"op": "canary",
+                           "frac": float(reactive_frac)})
+            return out
+
+    def set_mode(self, package: str, mode: str) -> dict:
+        """Pin ONE package's controller mode (v24 ↔ reactive_poll)."""
+        with self.lock:
+            if mode == "reactive_poll" and not self.cfg.mixed_mode:
+                raise ValueError(
+                    "pinning mode='reactive_poll' needs "
+                    "SchedulerConfig(mixed_mode=True)")
+            pr = self.registry.set_mode(package, mode)
+            self._refresh_ctrl()
+            self._journal({"op": "mode", "package": package, "mode": mode})
+            return {"package": package, "node": pr.node, "mode": pr.mode,
+                    "plant": pr.plant}
+
     # ------------------------------------------------------------ membership
     def attach(self, package: str, tenant: str = "default",
-               kind: str = "inference") -> dict:
+               kind: str = "inference", *, node: str = "base",
+               mode: str = "v24", plant: str | None = None) -> dict:
         """Attach a package: bucket surgery if occupancy crosses a boundary,
-        then scatter a fresh lane state in (jitted, traced lane index)."""
+        then scatter a fresh lane state in (jitted, traced lane index).
+
+        ``node``/``mode``/``plant`` pin the lane's `LaneProfile`: a
+        non-base node scatters that node bank's `PackageParams` row into
+        the lane (heterogeneous fleets), and a reactive mode pin lands in
+        the ctrl_mode plane (mixed-mode fleets)."""
         if kind not in KINDS:
             raise ValueError(f"unknown workload kind {kind!r}; "
                              f"want one of {KINDS}")
+        profile = self._profile_for(node, mode, plant)
         with self.lock:
-            lane, plan = self.registry.attach(package, tenant)
+            lane, plan = self.registry.attach(package, tenant,
+                                              profile=profile)
             self._apply_plan(plan)
             self.state = self._attach_jit(
                 self.state, self._template(self.registry.capacity),
                 jnp.asarray(lane, jnp.int32))
+            if node != "base":
+                self.state = self._node_jit(self.state,
+                                            self._node_row(node),
+                                            jnp.asarray(lane, jnp.int32))
+            self._refresh_ctrl()
             self._kind_of[package] = kind
             self._pkg_key[package] = self._next_key
             self._next_key += 1
             self._attached_since_flush.append(lane)
             self._surgery_since_flush.append({"op": "attach", "lane": lane})
             self._journal({"op": "attach", "package": package,
-                           "tenant": tenant, "workload": kind})
+                           "tenant": tenant, "workload": kind,
+                           "profile": {"node": node, "mode": mode,
+                                       "plant": profile.plant}})
             return {"package": package, "tenant": tenant, "kind": kind,
                     "lane": lane, "capacity": self.registry.capacity,
-                    "plan": plan.kind}
+                    "plan": plan.kind, "node": profile.node,
+                    "mode": profile.mode, "plant": profile.plant}
 
     def detach(self, package: str) -> dict:
         with self.lock:
@@ -290,6 +406,7 @@ class FleetService:
             else:
                 self._attached_since_flush = [
                     l for l in self._attached_since_flush if l != lane]
+            self._refresh_ctrl()    # departed pin + any capacity change
             self._journal({"op": "detach", "package": package})
             return {"package": package, "lane": lane,
                     "capacity": self.registry.capacity, "plan": plan.kind}
@@ -499,6 +616,11 @@ class FleetService:
                 tpl = self._template(cap)
                 st = self._fresh(cap)
                 st = self._attach_jit(st, tpl, jnp.asarray(0, jnp.int32))
+                if self.cfg.heterogeneous:
+                    # node-row scatter: same program for every node (rows
+                    # share shapes) — one compile per capacity
+                    st = self._node_jit(st, self._node_row("base"),
+                                        jnp.asarray(0, jnp.int32))
                 chunk = jnp.full((self.flush_every, cap, tiles),
                                  self.pad_rho, jnp.float32)
                 active = jnp.asarray(np.ones(cap, bool))
@@ -536,6 +658,8 @@ class FleetService:
                     "capacity": r.capacity,
                     "lane_of": dict(r._lane_of),
                     "tenant_of": dict(r._tenant_of),
+                    "profiles": {p: [pr.node, pr.mode, pr.plant]
+                                 for p, pr in r._profile_of.items()},
                     "free": list(r._free),     # pop ORDER matters: lane
                     #          assignment must resume deterministically
                     "tenants": {t.name: {
@@ -609,6 +733,12 @@ class FleetService:
         r.capacity = int(reg["capacity"])
         r._lane_of = {p: int(l) for p, l in reg["lane_of"].items()}
         r._tenant_of = dict(reg["tenant_of"])
+        # pre-profile snapshots default every lane to the service's plant
+        r._profile_of = {
+            p: (LaneProfile(*reg["profiles"][p])
+                if p in reg.get("profiles", {})
+                else LaneProfile(plant=svc.cfg.plant))
+            for p in r._lane_of}
         r._free = [int(l) for l in reg["free"]]
         r._tenants = {
             name: Tenant(name=name, slot=int(t["slot"]),
@@ -633,6 +763,7 @@ class FleetService:
         for name, kind in meta.get("latched", []):
             svc.alerts._latched[(name, kind)] = True
         svc.state = ckpt.restore(step, template=svc._fresh(r.capacity))
+        svc._refresh_ctrl()        # ctrl plane re-derived from profiles
         if svc._warmed_max:        # compile cache back before any stepping
             svc.warmup(svc._warmed_max)
         svc._replay_journal()
@@ -663,11 +794,16 @@ class FleetService:
                 while self.flushes < e["flush"]:
                     self.tick()
                 if e["op"] == "attach":
-                    self.attach(e["package"], e["tenant"], e["workload"])
+                    self.attach(e["package"], e["tenant"], e["workload"],
+                                **e.get("profile", {}))
                 elif e["op"] == "detach":
                     self.detach(e["package"])
                 elif e["op"] == "thresholds":
                     self.set_thresholds(e["tenant"], **e["kw"])
+                elif e["op"] == "canary":
+                    self.canary(e["frac"])
+                elif e["op"] == "mode":
+                    self.set_mode(e["package"], e["mode"])
                 elif e["op"] == "ingest":
                     self.ingest(e["tenant"], e["chunk"])
                 else:
@@ -803,6 +939,7 @@ def _dashboard_html(svc: FleetService, last: int = 60) -> str:
         stalled = (svc.heartbeat.stalled if svc.heartbeat is not None
                    else False)
         degraded = int(svc.last_degraded)
+        lanes = svc.registry.describe()["packages"]
     recs = [r for r in snap["records"] if r.get("kind") == "flush"]
     series = lambda k: [r["telemetry"][k] for r in recs]
     rows = [
@@ -853,6 +990,21 @@ def _dashboard_html(svc: FleetService, last: int = 60) -> str:
     else:
         parts.append("<p>(no flushes recorded yet — attach a package and "
                      "wait one flush)</p>")
+    if lanes:
+        # per-lane profile columns: which node bank, controller mode and
+        # plant group each attached package runs under (canary rollouts
+        # show up here as a growing reactive_poll column)
+        parts.append("<h1>lane profiles</h1><table>"
+                     "<tr><th>package</th><th>lane</th><th>tenant</th>"
+                     "<th>node</th><th>mode</th><th>plant</th></tr>")
+        for pkg, row in sorted(lanes.items()):
+            parts.append(
+                f"<tr><td>{esc(pkg)}</td><td>{int(row['lane'])}</td>"
+                f"<td>{esc(str(row['tenant']))}</td>"
+                f"<td>{esc(str(row['node']))}</td>"
+                f"<td>{esc(str(row['mode']))}</td>"
+                f"<td>{esc(str(row['plant']))}</td></tr>")
+        parts.append("</table>")
     parts.append(f"<h1>alerts (last {len(alerts)})</h1>")
     if alerts:
         parts.append("<table>")
@@ -940,9 +1092,17 @@ class _Handler(BaseHTTPRequestHandler):
             if self.path == "/attach":
                 self._send(200, svc.attach(
                     body["package"], body.get("tenant", "default"),
-                    body.get("kind", "inference")))
+                    body.get("kind", "inference"),
+                    node=body.get("node", "base"),
+                    mode=body.get("mode", "v24"),
+                    plant=body.get("plant")))
             elif self.path == "/detach":
                 self._send(200, svc.detach(body["package"]))
+            elif self.path == "/canary":
+                self._send(200, svc.canary(body["reactive_frac"]))
+            elif self.path == "/mode":
+                self._send(200, svc.set_mode(body["package"],
+                                             body["mode"]))
             elif self.path == "/thresholds":
                 tenant = body.pop("tenant")
                 allowed = {"t_crit_c", "at_risk_limit", "drift_budget_nm",

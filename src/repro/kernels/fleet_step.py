@@ -97,6 +97,12 @@ class FleetStepParams:
     fallback: bool = False
     stale_limit: int = 5   # consecutive stale steps before fallback
     recover: int = 10      # hysteresis: fresh steps before recovery
+    # operator-pinned controller mode (mode == "v24" +
+    # SchedulerConfig.mixed_mode): a [n]-wide 0/1 input plane pins lanes to
+    # reactive_poll semantics through the SAME merged branch the fallback
+    # uses — the plane is chunk-constant (a VALUE, so canary shifts reuse
+    # the compiled kernel) and ORs with the staleness latch when both ride
+    mixed: bool = False
 
 
 def _pad_axis(x, n, axis, value=0.0):
@@ -109,8 +115,8 @@ def _pad_axis(x, n, axis, value=0.0):
 
 
 def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
-            ev0_ref, het_ref, thr0_ref, step0_ref, fb0_ref, temp_ref,
-            freqs_ref, buf_ref, th_ref, ev_ref, thr_ref, fb_ref,
+            ev0_ref, het_ref, thr0_ref, step0_ref, fb0_ref, mode0_ref,
+            temp_ref, freqs_ref, buf_ref, th_ref, ev_ref, thr_ref, fb_ref,
             ring_scr, th_scr, stat_scr, f_scr, e_scr, thr_scr, fb_scr, *,
             ck: int, tp: int, n_tiles: int, het: bool, p: FleetStepParams):
     c = pl.program_id(1)
@@ -182,6 +188,12 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
             fb_scr[0:tp, :] = rho
             fb_scr[tp:tp + 1, :] = stale_n
             fb_scr[tp + 1:tp + 2, :] = deg
+        if p.mixed:
+            # operator pin rides the same merged branch: a pinned lane is
+            # reactive whether or not the staleness latch fired — the row
+            # is input-only (chunk-constant), never latched into fb state
+            mrow = mode0_ref[...]                            # [1, blk]
+            deg = jnp.maximum(deg, mrow) if p.fallback else mrow
 
         # -- incremental filtration: O(1) evict-reads + FMAs ---------------
         x_old = ring_scr[pl.ds(ptr * tp, tp), :]
@@ -305,7 +317,7 @@ def _kernel(rho_ref, gamma_ref, buf0_ref, th0_ref, stats0_ref, freq0_ref,
             freq = jnp.ones_like(f_prev)
 
         # -- plant + events -----------------------------------------------
-        if p.fallback and p.mode == "v24":
+        if (p.fallback or p.mixed) and p.mode == "v24":
             # merged plant: degraded lanes run reactive_poll semantics
             # (plant at LAST step's frequency, polled sensor, throttle
             # hysteresis in thr_scr), healthy lanes take the v24 law — the
@@ -374,7 +386,7 @@ def _divisor_chunk(t: int, target: int) -> int:
 
 def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
                params: FleetStepParams, *, het=None, thr0=None, step0=0,
-               fb0=None, block_packages: int = LANE,
+               fb0=None, mode0=None, block_packages: int = LANE,
                time_chunk: int = 256, interpret: bool | None = None):
     """Fused K-step fleet advance.
 
@@ -397,6 +409,11 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
               ``params.fallback``): a (rho_last [n_tiles, n], stale [n],
               degraded [n]) triple of f32-coercible arrays — resident in
               VMEM as `n_tiles + 2` mode rows beside the het rows
+      mode0:  optional [n] 0/1 operator controller-mode plane (required
+              iff ``params.mixed``): 1 pins the lane to reactive_poll for
+              the whole chunk — input-only (the caller's `ctrl_mode` state
+              leaf passes through unchanged), so canary shifts are value
+              changes against the same compiled kernel
 
     Returns (temps [T, n_tiles, n], freqs [T, n_tiles, n],
              buf [W, n_tiles, n] (ring, ptr = T mod W),
@@ -409,6 +426,9 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
         raise ValueError("FleetStepParams.fallback requires the fb0 "
                          "(rho_last, stale, degraded) plane and the thr0 "
                          "latch")
+    if params.mixed and (mode0 is None or thr0 is None):
+        raise ValueError("FleetStepParams.mixed requires the mode0 "
+                         "controller-mode plane and the thr0 latch")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     t, n_tiles, n = rho.shape
@@ -478,6 +498,13 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
     else:
         fb_p = jnp.zeros((1, n_pad), f32)
         fb_rows = 1
+    # operator mode plane: padded lanes get 0.0 (v24 — benign: phantom
+    # lanes never take the reactive branch, matching the fb padding)
+    has_mode = mode0 is not None
+    if has_mode:
+        mode_p = _pad_axis(jnp.asarray(mode0, f32)[None, :], n_pad, 1, 0.0)
+    else:
+        mode_p = jnp.zeros((1, n_pad), f32)
     # global-step offset: f32 is exact for the 90k-scale step counts
     step0_p = jnp.broadcast_to(jnp.asarray(step0, f32), (1, 1))
 
@@ -504,6 +531,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
             state_spec(t_rows),                                # thr0
             pl.BlockSpec((1, 1), lambda b, c: (0, 0)),         # step0
             state_spec(fb_rows),                               # fb0
+            state_spec(1),                                     # mode0
         ],
         out_specs=[
             trace_spec,                                        # temps
@@ -534,7 +562,7 @@ def fleet_step(rho, buf0, th0, stats0, freq0, ev0, gamma,
         ],
         interpret=interpret,
     )(rho_p, g, buf_p, th_p, stats_p, freq_p, ev_p, het_p, thr_p, step0_p,
-      fb_p)
+      fb_p, mode_p)
 
     return (temps[:, :n_tiles, :n], freqs[:, :n_tiles, :n],
             buf.reshape(w, tp, n_pad)[:, :n_tiles, :n],

@@ -71,6 +71,15 @@ from repro.launch import steps as S
 from repro.models import transformer as tf
 
 
+def _node_pkg(eng, node: str, n: int):
+    """Per-lane `PackageParams` rows for a non-base ``--node`` fleet (None
+    keeps the homogeneous fast path)."""
+    if node == "base":
+        return None
+    from repro.core.nodebank import fleet_package_params
+    return fleet_package_params(eng.sched, [node] * n)
+
+
 def _montecarlo(args):
     """--montecarlo N: §10 process-variation population through the fleet.
 
@@ -139,7 +148,7 @@ def _stream_soak(args, sched_cfg: SchedulerConfig, rho: float, key):
                   f"released {d['released_mtps']:.1f} MTPS "
                   f"events {int(d['events_total'])}")
 
-    state = eng.init(n)
+    state = eng.init(n, pkg=_node_pkg(eng, args.node, n))
     # the mesh is resolved at init: log the ACTUAL device count so a soak
     # degraded by an indivisible fleet size can't masquerade as multi-device
     tag = (f"[stream p{jax.process_index()}/{jax.process_count()}]"
@@ -173,8 +182,14 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
     snapshots every ``--snapshot-every`` flushes; a SIGTERM (preemption)
     takes one final BLOCKING snapshot before exiting, so
     `FleetService.restore()` resumes the stream losslessly."""
+    import dataclasses
+
     from repro.distributed.fault_tolerance import PreemptionGuard
     from repro.fleet.service import FleetService, serve_http
+    # the resident plane always carries the per-lane controller pins so
+    # operators can canary (`POST /canary` / `/mode`) without a restart;
+    # unpinned lanes are bit-identical to a plain v24 fleet
+    sched_cfg = dataclasses.replace(sched_cfg, mixed_mode=True)
     svc = FleetService(sched_cfg, backend=args.fleet_backend,
                        min_capacity=4, flush_every=args.flush_every,
                        seed=args.seed,
@@ -186,13 +201,15 @@ def _serve_resident(args, sched_cfg: SchedulerConfig):
     print(f"[serve] warmed {buckets} capacity buckets "
           f"(zero recompiles from here)")
     for i in range(n0):
-        svc.attach(f"pkg{i}", tenant="default", kind="inference")
+        svc.attach(f"pkg{i}", tenant="default", kind="inference",
+                   node=args.node)
     guard = PreemptionGuard()
     server, _ = serve_http(svc, host=args.host, port=args.port)
     host, port = server.server_address[:2]
     print(f"[serve] control plane on http://{host}:{port} — "
           f"GET /healthz /telemetry /fleet /alerts /dashboard, "
-          f"POST /attach /detach /thresholds /ingest /replay /shutdown")
+          f"POST /attach /detach /thresholds /ingest /replay /shutdown "
+          f"/canary /mode")
     flushes = 0
     try:
         while (not svc.shutting_down and not guard.should_exit
@@ -417,6 +434,12 @@ def main(argv=None):
                          "'Thermal-plant fidelity ladder'): the paper's "
                          "pole bank, the spatial RC grid, or the ROM "
                          "fitted from it")
+    from repro.core.nodebank import available_nodes
+    ap.add_argument("--node", default="base", choices=available_nodes(),
+                    help="technology-node parameter bank "
+                         "(repro.core.nodebank): every fleet lane gets "
+                         "that node's thermal/DVFS rows; non-base nodes "
+                         "run a heterogeneous pole fleet")
     ap.add_argument("--stream", action="store_true",
                     help="streaming control-plane soak instead of serving "
                          "(async ingest, 1 host sync per gen-step flush)")
@@ -497,7 +520,8 @@ def main(argv=None):
     max_seq = args.prompt_len + args.gen
     sched_cfg = SchedulerConfig(n_tiles=1, mode="v24", step_ms=5.0,
                                 filtration_impl=args.filtration,
-                                plant=args.plant)
+                                plant=args.plant,
+                                heterogeneous=args.node != "base")
     shape = ShapeConfig("serve", max_seq, args.batch, "decode")
     rho = rho_v24(cfg, shape)
 
@@ -515,7 +539,7 @@ def main(argv=None):
     n_pkgs = max(args.fleet, 1)
     fleet = FleetEngine(sched_cfg, backend=args.fleet_backend,
                         devices=args.fleet_devices or None)
-    fst = fleet.init(n_pkgs)
+    fst = fleet.init(n_pkgs, pkg=_node_pkg(fleet, args.node, n_pkgs))
     if args.fleet > 1:
         print(f"[fleet] backend {fleet.backend_impl.describe()} "
               f"({fleet.backend_impl.n_devices()} device(s))")

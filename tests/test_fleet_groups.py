@@ -1,0 +1,283 @@
+"""Profile-group dispatch + per-lane controller modes (ISSUE 10 tentpole).
+
+The mixed-profile fleet decomposes exactly: per-lane trajectories of a
+`GroupedFleetEngine` (pole+grid plant groups, mixed v24/reactive pins,
+multiple node banks) must MATCH per-group homogeneous oracles run under
+the same backend — bitwise, since grouping only re-blocks the lane axis
+and lanes are independent outside the telemetry reductions.  The
+ctrl_mode plane's per-lane semantics are gated the same way: a pinned
+lane reproduces a reactive_poll fleet's lane, an unpinned lane a v24
+fleet's, on the pure path bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nodebank
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet import (FleetEngine, FleetRegistry, GroupedFleetEngine,
+                         LaneProfile, available_backends)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TILES, T, W = 2, 192, 16
+POLE_N, GRID_N = 6, 4
+NODES = ["base", "n7", "n5", "n3", "base", "n5"]
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _trace(n, t=T, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.9, 2.7, (t, n, TILES)).astype(np.float32)
+
+
+def _cfg(**kw):
+    kw.setdefault("n_tiles", TILES)
+    kw.setdefault("mode", "v24")
+    kw.setdefault("filtration_window", W)
+    return SchedulerConfig(**kw)
+
+
+# ------------------------------------------------- per-lane controller mode
+def test_mode_pins_match_per_mode_oracles_bitwise():
+    """Pinned lanes == a reactive_poll fleet's lanes; unpinned == a v24
+    fleet's — exactly, on the pure broadcast path."""
+    n = 8
+    trace = jnp.asarray(_trace(n))
+    pin = np.zeros(n, bool)
+    pin[::2] = True
+
+    em = FleetEngine(_cfg(mixed_mode=True), backend="broadcast")
+    sm = em.init(n)._replace(ctrl_mode=jnp.asarray(pin))
+    sm, tm, fm = em.block_traces(sm, trace)
+
+    oracles = {}
+    for mode in ("v24", "reactive_poll"):
+        e = FleetEngine(_cfg(mode=mode), backend="broadcast")
+        _, tt, ff = e.block_traces(e.init(n), trace)
+        oracles[mode] = (np.asarray(tt), np.asarray(ff))
+
+    tm, fm = np.asarray(tm), np.asarray(fm)
+    for lane in range(n):
+        want_t, want_f = oracles["reactive_poll" if pin[lane] else "v24"]
+        assert np.array_equal(tm[:, lane], want_t[:, lane]), f"lane {lane}"
+        assert np.array_equal(fm[:, lane], want_f[:, lane]), f"lane {lane}"
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_mixed_mode_backends_agree(backend):
+    """All five backends agree on a mode-mixed fleet (events exactly,
+    traces ≤1e-5 — the fused whole-step kernel reads the pin plane)."""
+    n = 8
+    trace = jnp.asarray(_trace(n, seed=3))
+    pin = np.zeros(n, bool)
+    pin[1::2] = True
+
+    def run(be):
+        e = FleetEngine(_cfg(mixed_mode=True), backend=be)
+        st = e.init(n)._replace(ctrl_mode=jnp.asarray(pin))
+        st, temps, freqs = e.block_traces(st, trace)
+        return st, np.asarray(temps), np.asarray(freqs)
+
+    s0, t0, f0 = run("broadcast")
+    s1, t1, f1 = run(backend)
+    np.testing.assert_allclose(t1, t0, **TOL)
+    np.testing.assert_allclose(f1, f0, **TOL)
+    assert np.array_equal(np.asarray(s1.events), np.asarray(s0.events))
+    assert np.array_equal(np.asarray(s1.ctrl_mode), pin)   # pin is input-only
+
+
+def test_mixed_mode_composes_with_degraded_fallback():
+    """Hysteresis fallback still rides on top: a pinned lane stays
+    reactive regardless of staleness, an unpinned lane still degrades on
+    stale hints (the latch) — and the latch never writes into the pin."""
+    n = 4
+    cfg = _cfg(mixed_mode=True, degraded_fallback=True,
+               stale_limit_steps=4, recover_steps=8)
+    trace = _trace(n, seed=5)
+    trace[64:96, 2, :] = np.nan          # lane 2's hints go dark
+    pin = np.array([True, False, False, False])
+    e = FleetEngine(cfg, backend="broadcast", debug_nan=True)
+    st = e.init(n)._replace(ctrl_mode=jnp.asarray(pin))
+    st, telem = e.run_chunked(st, jnp.asarray(trace), W)
+    dc = np.asarray(telem.degraded_count)
+    assert dc.max() >= 1                 # lane 2 latched while dark
+    assert int(dc[-1]) == 0              # and recovered
+    assert np.array_equal(np.asarray(st.ctrl_mode), pin)
+
+
+# --------------------------------------------------- profile-group dispatch
+def _grouped(backend):
+    cfg = _cfg(mixed_mode=True, heterogeneous=True, n_tiles=TILES)
+    ge = GroupedFleetEngine(cfg, backend=backend, groups=("pole", "grid"))
+    pkg = {"pole": nodebank.fleet_package_params(
+        ge.engines["pole"].sched, NODES)}
+    states = ge.init({"pole": POLE_N, "grid": GRID_N}, pkg=pkg)
+    pins = {"pole": np.array([0, 1, 0, 1, 1, 0], bool),
+            "grid": np.array([1, 0, 0, 1], bool)}
+    for g in ge.groups:
+        states[g] = states[g]._replace(ctrl_mode=jnp.asarray(pins[g]))
+    return ge, states, pins, pkg
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_grouped_matches_per_group_oracles_bitwise(backend):
+    """The ISSUE 10 acceptance gate: a mixed-profile fleet (pole+grid
+    groups, mixed v24/reactive pins, ≥2 node banks) decomposes into
+    per-group homogeneous oracles under the SAME backend, per lane,
+    exactly."""
+    ge, states, pins, pkg = _grouped(backend)
+    trace = jnp.asarray(_trace(POLE_N + GRID_N, seed=11))
+    _, temps, freqs = ge.block_traces(states, trace)
+    temps, freqs = np.asarray(temps), np.asarray(freqs)
+
+    sl = {"pole": slice(0, POLE_N), "grid": slice(POLE_N, POLE_N + GRID_N)}
+    for g in ge.groups:
+        eng = FleetEngine(ge.engines[g].cfg, backend=backend)
+        st = eng.init(sl[g].stop - sl[g].start, pkg=pkg.get(g))
+        st = st._replace(ctrl_mode=jnp.asarray(pins[g]))
+        _, tg, fg = eng.block_traces(st, trace[:, sl[g]])
+        assert np.array_equal(temps[:, sl[g]], np.asarray(tg)), g
+        assert np.array_equal(freqs[:, sl[g]], np.asarray(fg)), g
+
+
+def test_grouped_merged_flush_record():
+    """run_chunked merges the groups into ONE fleet-wide record: lane
+    counts span the mix, final event counter equals the summed per-group
+    state counters, masked lanes stay invisible."""
+    ge, states, _, _ = _grouped("broadcast")
+    n = POLE_N + GRID_N
+    trace = jnp.asarray(_trace(n, seed=13))
+    states, telems = ge.run_chunked(states, trace, W)
+    d = {k: np.asarray(v) for k, v in telems._asdict().items()}
+    assert int(d["n_packages"][-1]) == n
+    want = sum(int(np.asarray(states[g].events).sum()) for g in ge.groups)
+    assert int(d["events_total"][-1]) == want
+
+    # active mask spans the group-blocked global lane axis
+    ge2, states2, _, _ = _grouped("broadcast")
+    active = np.ones(n, bool)
+    active[[0, POLE_N]] = False          # one lane masked in each group
+    _, telems2 = ge2.run_chunked(states2, trace, W,
+                                 active=jnp.asarray(active))
+    assert int(np.asarray(telems2.n_packages)[-1]) == n - 2
+
+
+def test_grouped_lane_order_stable_across_group_resize():
+    """Group-blocked lane order: pole lanes keep their global indices and
+    their exact trajectories when the OTHER group grows (the grouped
+    analogue of attach/grow surgery leaving existing lanes untouched)."""
+    cfg = _cfg(mixed_mode=True, heterogeneous=True)
+    trace_pole = _trace(POLE_N, seed=17)
+
+    def run(grid_n):
+        ge = GroupedFleetEngine(cfg, backend="broadcast",
+                                groups=("pole", "grid"))
+        pkg = {"pole": nodebank.fleet_package_params(
+            ge.engines["pole"].sched, NODES)}
+        states = ge.init({"pole": POLE_N, "grid": grid_n}, pkg=pkg)
+        sl = ge.lane_slices(states)
+        assert sl["pole"] == slice(0, POLE_N)
+        assert sl["grid"] == slice(POLE_N, POLE_N + grid_n)
+        trace = np.concatenate(
+            [trace_pole, _trace(grid_n, seed=19 + grid_n)], axis=1)
+        _, temps, _ = ge.block_traces(states, jnp.asarray(trace))
+        return np.asarray(temps)[:, sl["pole"]]
+
+    assert np.array_equal(run(4), run(8))
+
+
+def test_grouped_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="unique"):
+        GroupedFleetEngine(cfg, groups=("pole", "pole"))
+    ge = GroupedFleetEngine(cfg, groups=("pole", "grid"))
+    with pytest.raises(ValueError, match="counts"):
+        ge.init({"pole": 4})
+    states = ge.init(4)
+    with pytest.raises(ValueError, match="lane axis"):
+        ge.run_block(states, jnp.zeros((8, 3, TILES)))
+
+
+# ------------------------------------- registry surgery keeps profiles/lanes
+def _registry_invariants(reg):
+    mask = reg.ctrl_mode_mask()
+    act = reg.active_mask()
+    for pkg, lane in reg.packages.items():
+        pr = reg.profile(pkg)
+        assert act[lane]
+        assert mask[lane] == (pr.mode == "reactive_poll")
+    assert act.sum() == reg.n_active
+    assert mask[~act].sum() == 0        # free lanes never pinned
+
+
+def test_profiles_follow_lanes_across_grow_and_shrink():
+    """Attach → grow → detach → shrink: every package's `LaneProfile`
+    stays with its (remapped) lane — the ctrl_mode plane re-derived after
+    surgery still pins exactly the reactive packages."""
+    reg = FleetRegistry(min_capacity=4)
+    for i in range(10):                  # 4 -> 8 -> 16 growth
+        reg.attach(f"p{i}", profile=LaneProfile(
+            node=NODES[i % len(NODES)],
+            mode="reactive_poll" if i % 3 == 0 else "v24"))
+        _registry_invariants(reg)
+    assert reg.capacity == 16
+    for i in range(2, 10):               # down to 2 active → shrink
+        reg.detach(f"p{i}")
+        _registry_invariants(reg)
+    assert reg.capacity < 16
+    assert reg.profile("p0").mode == "reactive_poll"
+    assert reg.profile("p1").mode == "v24"
+    assert reg.profile("p1").node == NODES[1]
+
+
+def test_canary_monotone_and_idempotent():
+    reg = FleetRegistry(min_capacity=4)
+    for i in range(8):
+        reg.attach(f"p{i}")
+    pinned = set()
+    for frac in (0.0, 0.25, 0.5, 0.5, 0.75, 1.0):
+        out = reg.canary(frac)
+        now = {p for p in reg.packages
+               if reg.profile(p).mode == "reactive_poll"}
+        assert len(now) == out["pinned_reactive"] == round(frac * 8)
+        if len(now) >= len(pinned):
+            assert pinned <= now        # raising frac only ADDS pins
+        pinned = now
+        _registry_invariants(reg)
+    assert reg.canary(0.5)["changed"] == 4   # rollback half
+    with pytest.raises(ValueError, match="reactive_frac"):
+        reg.canary(1.5)
+
+
+# --------------------------------------------------------- hypothesis sweep
+# (guarded import rather than importorskip: a missing hypothesis must not
+# skip the deterministic tests above)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    pass
+else:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["attach", "detach", "canary"]),
+                  st.integers(0, 15), st.floats(0.0, 1.0)),
+        min_size=1, max_size=40))
+    def test_registry_surgery_preserves_profiles(ops):
+        """Random attach/detach/canary sequences (driving grow AND shrink
+        surgery) never break the profile↔lane mapping."""
+        reg = FleetRegistry(min_capacity=4)
+        for kind, i, frac in ops:
+            name = f"p{i}"
+            if kind == "attach" and name not in reg.packages:
+                reg.attach(name, profile=LaneProfile(
+                    mode="reactive_poll" if i % 2 else "v24"))
+            elif kind == "detach" and name in reg.packages:
+                reg.detach(name)
+            elif kind == "canary":
+                reg.canary(frac)
+            _registry_invariants(reg)

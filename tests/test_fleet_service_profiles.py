@@ -1,0 +1,214 @@
+"""Control-plane lane profiles: profile-carrying attach, canary rollout
+(`POST /canary`) with ZERO post-warmup recompiles, per-lane profile
+columns on the operator surface, and snapshot/journal recovery of
+profiles (ISSUE 10 acceptance)."""
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.scheduler import SchedulerConfig
+from repro.fleet.service import FleetService, _dashboard_html, serve_http
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_TILES = 2
+W = 16
+
+# module-level compile counter, same idiom as test_fleet_service.py
+# (jax.monitoring listeners cannot be removed)
+_COMPILES: list = []
+_COUNTING = [False]
+
+
+def _on_event(event, duration, **kw):
+    if _COUNTING[0] and "backend_compile" in event:
+        _COMPILES.append(event)
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_event)
+
+
+def _service(**kw):
+    cfg = SchedulerConfig(n_tiles=N_TILES, mixed_mode=True,
+                          heterogeneous=True,
+                          filtration_window=W)
+    return FleetService(cfg, min_capacity=4, flush_every=W, **kw)
+
+
+# -------------------------------------------------------- profile plumbing
+def test_attach_carries_profile_to_fleet_view():
+    svc = _service()
+    svc.attach("a", tenant="acme", node="n5", mode="reactive_poll")
+    svc.attach("b", tenant="acme")           # defaults: base / v24
+    d = svc.registry.describe()["packages"]
+    assert d["a"]["node"] == "n5" and d["a"]["mode"] == "reactive_poll"
+    assert d["b"]["node"] == "base" and d["b"]["mode"] == "v24"
+    assert d["a"]["plant"] == svc.cfg.plant
+    mask = np.asarray(svc.state.ctrl_mode)
+    assert mask[svc.registry.lane("a")] and not mask[svc.registry.lane("b")]
+
+
+def test_profile_validation():
+    svc = _service()
+    with pytest.raises(ValueError, match="unknown node"):
+        svc.attach("x", node="n999")
+    with pytest.raises(ValueError, match="profile mode"):
+        svc.attach("x", mode="bogus")
+    with pytest.raises(ValueError, match="plant group"):
+        svc.attach("x", plant="grid")
+    plain = FleetService(SchedulerConfig(n_tiles=N_TILES,
+                                         filtration_window=W),
+                         min_capacity=4, flush_every=W)
+    with pytest.raises(ValueError, match="heterogeneous"):
+        plain.attach("x", node="n5")
+    with pytest.raises(ValueError, match="mixed_mode"):
+        plain.attach("x", mode="reactive_poll")
+    with pytest.raises(ValueError, match="mixed_mode"):
+        plain.canary(0.5)
+    assert plain.registry.n_active == 0      # failed attaches left no trace
+
+
+def test_node_rows_land_in_state():
+    """A non-base attach scatters that node's PackageParams row into the
+    lane; a base attach keeps the template row."""
+    from repro.core import nodebank
+    svc = _service()
+    svc.attach("a", node="n3")
+    svc.attach("b")
+    la, lb = svc.registry.lane("a"), svc.registry.lane("b")
+    rows = nodebank.fleet_package_params(svc.engine.sched, ["n3", "base"])
+    pkg = svc.state.pkg
+    assert np.array_equal(np.asarray(pkg.decay[la]),
+                          np.asarray(rows.decay[0]))
+    assert np.array_equal(np.asarray(pkg.gain[la]),
+                          np.asarray(rows.gain[0]))
+    assert np.array_equal(np.asarray(pkg.decay[lb]),
+                          np.asarray(rows.decay[1]))
+
+
+def test_set_mode_flips_one_lane():
+    svc = _service()
+    svc.attach("a")
+    svc.attach("b")
+    out = svc.set_mode("a", "reactive_poll")
+    assert out["mode"] == "reactive_poll"
+    mask = np.asarray(svc.state.ctrl_mode)
+    assert mask[svc.registry.lane("a")] and not mask[svc.registry.lane("b")]
+    svc.set_mode("a", "v24")
+    assert not np.asarray(svc.state.ctrl_mode).any()
+
+
+# --------------------------------------------------- canary zero recompile
+def test_canary_shifts_trigger_zero_recompiles():
+    """The ISSUE 10 acceptance gate: shifting canary fractions through the
+    control plane after warmup is a pure ctrl_mode VALUE change — zero
+    XLA compiles across pins, fraction sweeps and interleaved flushes."""
+    svc = _service()
+    svc.warmup(max_packages=8)
+    for i in range(6):
+        svc.attach(f"p{i}", tenant="acme",
+                   node=("base", "n7", "n5")[i % 3])
+    svc.tick()
+    _COMPILES.clear()
+    _COUNTING[0] = True
+    try:
+        for frac in (0.0, 0.25, 0.5, 1.0, 0.5, 0.0):
+            svc.canary(frac)
+            svc.tick()
+        svc.set_mode("p3", "reactive_poll")
+        svc.tick()
+    finally:
+        _COUNTING[0] = False
+    assert _COMPILES == [], (f"{len(_COMPILES)} post-warmup compiles: "
+                             f"{_COMPILES}")
+
+
+def test_canary_pins_change_flush_behaviour():
+    """The pins are live, not cosmetic: under a sustained hot workload a
+    fully-reactive fleet flushes different frequency telemetry than an
+    all-v24 one over the SAME chunks."""
+    def run(frac):
+        svc = _service(seed=7)
+        for i in range(4):
+            svc.attach(f"p{i}")
+        svc.canary(frac)
+        hot = np.full((W, svc.registry.capacity, N_TILES), 2.0, np.float32)
+        return [float(svc.tick(chunk=hot)["telemetry"]["freq_mean"])
+                for _ in range(4)]
+    assert run(0.0) != run(1.0)
+
+
+# ----------------------------------------------------------- HTTP surface
+def test_http_canary_mode_and_fleet_columns():
+    svc = _service()
+    svc.attach("pkg0", tenant="acme", node="n7")
+    server, _ = serve_http(svc, port=0)
+    port = server.server_address[1]
+    base = f"http://127.0.0.1:{port}"
+
+    def post(path, body):
+        req = urllib.request.Request(
+            base + path, data=json.dumps(body).encode(),
+            headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req) as r:
+            return json.loads(r.read())
+
+    try:
+        out = post("/attach", {"package": "pkg1", "tenant": "acme",
+                               "node": "n5", "mode": "reactive_poll"})
+        assert out["node"] == "n5" and out["mode"] == "reactive_poll"
+        out = post("/canary", {"reactive_frac": 0.5})
+        assert out["pinned_reactive"] == 1 and out["n_active"] == 2
+        out = post("/mode", {"package": "pkg1", "mode": "v24"})
+        assert out["mode"] == "v24"
+        with urllib.request.urlopen(base + "/fleet") as r:
+            fleet = json.loads(r.read())
+        pkgs = fleet["packages"]
+        assert {"node", "mode", "plant"} <= set(pkgs["pkg0"])
+        assert pkgs["pkg0"]["mode"] == "reactive_poll"   # canary pin
+        with urllib.request.urlopen(base + "/dashboard") as r:
+            html = r.read().decode()
+        assert "lane profiles" in html
+        for col in ("node", "mode", "plant", "n7"):
+            assert col in html
+    finally:
+        server.shutdown()
+
+
+def test_dashboard_renders_profile_rows_directly():
+    svc = _service()
+    svc.attach("edge-7", node="n3", mode="reactive_poll")
+    html = _dashboard_html(svc)
+    assert "lane profiles" in html
+    assert "edge-7" in html and "n3" in html and "reactive_poll" in html
+
+
+# ------------------------------------------------------- snapshot recovery
+def test_profiles_and_canary_survive_restore(tmp_path):
+    """Snapshot + journal recovery reproduces the profile state: profiles
+    ride the manifest, post-snapshot canary/mode/attach ops replay from
+    the journal, and the restored ctrl plane matches."""
+    svc = _service(seed=3, snapshot_dir=str(tmp_path), snapshot_every=0)
+    svc.warmup(8)
+    svc.attach("a", node="n5", mode="reactive_poll")
+    svc.attach("b")
+    svc.tick()
+    svc.save_snapshot(blocking=True)
+    # post-snapshot ops land in the journal only
+    svc.attach("c", node="n7")
+    svc.canary(1.0)
+    svc.tick()
+    svc.set_mode("b", "v24")
+    want = {p: (d["node"], d["mode"])
+            for p, d in svc.registry.describe()["packages"].items()}
+    want_mask = np.asarray(svc.state.ctrl_mode).copy()
+    del svc
+
+    r = FleetService.restore(str(tmp_path))
+    got = {p: (d["node"], d["mode"])
+           for p, d in r.registry.describe()["packages"].items()}
+    assert got == want
+    assert np.array_equal(np.asarray(r.state.ctrl_mode), want_mask)

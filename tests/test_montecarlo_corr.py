@@ -1,0 +1,79 @@
+"""Covariance-aware §10 sampling (`sample_params(corr=...)`).
+
+The reticle-neighbour correlated Rth/τ draws must leave the historical
+i.i.d. sampler BIT-IDENTICAL at ``corr=0`` (every published §10 number
+keys off those exact draws), induce the requested neighbour correlation
+when on, and keep the per-trial marginals inside the same clip windows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fingerprint import FINGERPRINT as FP
+from repro.core.montecarlo import sample_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _legacy(key, n):
+    """The pre-ISSUE-10 sampler body, verbatim — the bit-identity oracle."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    rth = FP.rth_c_per_w * (1 + 0.08 * jax.random.normal(k1, (n,)))
+    tau = FP.tau_ms * (1 + 0.12 * jax.random.normal(k2, (n,)))
+    util = 1.02 + 0.15 * jax.random.normal(k3, (n,))
+    poll = jax.random.randint(k4, (n,), 15, 76)
+    return (jnp.clip(rth, 0.25, 0.70), jnp.clip(tau, 30.0, 160.0),
+            jnp.clip(util, 0.5, 1.35), poll)
+
+
+@pytest.mark.parametrize("n", [1, 7, 500])
+def test_default_bit_identical_to_legacy(n):
+    key = jax.random.PRNGKey(1234)
+    for a, b in zip(_legacy(key, n), sample_params(key, n)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corr_zero_float_is_still_identical():
+    key = jax.random.PRNGKey(9)
+    for a, b in zip(sample_params(key, 64),
+                    sample_params(key, 64, corr=0.0)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corr_induces_neighbour_correlation():
+    key = jax.random.PRNGKey(7)
+    rth, tau, util, _ = sample_params(key, 4_000, corr=0.8)
+    r, t = np.asarray(rth), np.asarray(tau)
+    assert np.corrcoef(r[:-1], r[1:])[0, 1] > 0.6
+    assert np.corrcoef(t[:-1], t[1:])[0, 1] > 0.6
+    # util stays i.i.d. — workload diversity is not process-linked
+    u = np.asarray(util)
+    assert abs(np.corrcoef(u[:-1], u[1:])[0, 1]) < 0.1
+
+
+def test_corr_preserves_marginals():
+    """AR(1) keeps unit marginal variance: the correlated population's
+    spread matches the i.i.d. one within sampling noise, and the clip
+    windows still bound every draw."""
+    key = jax.random.PRNGKey(3)
+    rth0, tau0, *_ = sample_params(key, 20_000)
+    rth1, tau1, *_ = sample_params(key, 20_000, corr=0.7)
+    for a, b in ((rth0, rth1), (tau0, tau1)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert abs(b.std() / a.std() - 1.0) < 0.1
+        assert abs(b.mean() / a.mean() - 1.0) < 0.02
+    r, t = np.asarray(rth1), np.asarray(tau1)
+    assert r.min() >= 0.25 and r.max() <= 0.70
+    assert t.min() >= 30.0 and t.max() <= 160.0
+
+
+def test_corr_validation():
+    key = jax.random.PRNGKey(0)
+    for bad in (1.0, -1.0, 1.5):
+        with pytest.raises(ValueError, match="corr"):
+            sample_params(key, 8, corr=bad)
+    # negative correlation is legal (anti-correlated neighbours)
+    rth, *_ = sample_params(key, 2_000, corr=-0.6)
+    r = np.asarray(rth)
+    assert np.corrcoef(r[:-1], r[1:])[0, 1] < -0.4

@@ -1,0 +1,147 @@
+"""Per-technology-node parameter banks (`repro.core.nodebank`).
+
+Property surface (ISSUE 10): the `from_scale` laws are monotone in the
+gate-pitch scale, the Vth-derived DVFS envelope brackets nominal, and the
+``base`` bank reproduces the scheduler's own pole bank BIT-FOR-BIT (a
+fleet of all-base nodes is indistinguishable from a homogeneous fleet).
+Hypothesis deepens the monotonicity sweep when installed; the
+deterministic ladder checks always run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import nodebank
+from repro.core.scheduler import SchedulerConfig, ThermalScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _sched(plant="pole", **kw):
+    return ThermalScheduler(SchedulerConfig(n_tiles=2, plant=plant, **kw))
+
+
+# ----------------------------------------------------------------- registry
+def test_builtin_ladder_registered():
+    names = nodebank.available_nodes()
+    for n in ("base", "n7", "n5", "n3"):
+        assert n in names
+        assert nodebank.get_node(n).name == n
+
+
+def test_unknown_node_raises():
+    with pytest.raises(ValueError, match="unknown node"):
+        nodebank.get_node("n999")
+
+
+def test_invalid_banks_raise():
+    with pytest.raises(ValueError, match="scale must be > 0.25"):
+        nodebank.from_scale(0.2)
+    with pytest.raises(ValueError, match="vth"):
+        nodebank.NodeBank(name="bad", scale=1.0, vdd_nom=0.5, vdd_min=0.6,
+                          vdd_max=0.7, vth=0.3)
+
+
+# ------------------------------------------------------------- DVFS bounds
+def test_dvfs_envelope_brackets_nominal():
+    for name in nodebank.available_nodes():
+        b = nodebank.get_node(name)
+        lo, hi = b.dvfs_bounds()
+        assert lo <= 1.0 <= hi
+        assert b.freq_at(b.vdd_nom) == pytest.approx(1.0)
+        # alpha-power law is increasing in vdd on the window
+        vs = np.linspace(b.vdd_min, b.vdd_max, 17)
+        fs = [b.freq_at(v) for v in vs]
+        assert all(a < c for a, c in zip(fs, fs[1:]))
+        ps = [b.power_scale(v) for v in vs]
+        assert all(a < c for a, c in zip(ps, ps[1:]))
+
+
+def test_from_scale_monotone_ladder():
+    """Every derived quantity of `from_scale` is monotone in scale — the
+    deterministic version of the hypothesis sweep below."""
+    scales = [0.3, 0.45, 0.61, 0.78, 1.0, 1.4, 2.0]
+    banks = [nodebank.from_scale(s) for s in scales]
+    inc = lambda xs: all(a < b for a, b in zip(xs, xs[1:]))
+    assert inc([b.vdd_nom for b in banks])
+    assert inc([b.vdd_min for b in banks])
+    assert inc([b.vdd_max for b in banks])
+    assert inc([b.vth for b in banks])
+    assert inc([b.tau_scale for b in banks])
+    assert inc([-b.rth_scale for b in banks])   # denser node: hotter Rth
+
+
+# --------------------------------------------------------- base bit-identity
+def test_base_node_poles_bit_identical():
+    sched = _sched()
+    p = nodebank.node_poles(sched, nodebank.get_node("base"))
+    assert np.array_equal(np.asarray(p.decay), np.asarray(sched.poles.decay))
+    assert np.array_equal(np.asarray(p.gain), np.asarray(sched.poles.gain))
+
+
+def test_base_fleet_rows_match_homogeneous_package_params():
+    """`fleet_package_params` over all-base nodes == the scheduler's own
+    default heterogeneous rows, leaf by leaf, bitwise."""
+    sched = _sched(heterogeneous=True)
+    n = 5
+    rows = nodebank.fleet_package_params(sched, ["base"] * n)
+    ref = sched.package_params(batch_shape=(n,))
+    for a, b in zip(jax.tree_util.tree_leaves(rows),
+                    jax.tree_util.tree_leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_node_rows_scale_the_pole_bank():
+    sched = _sched(heterogeneous=True)
+    rows = nodebank.fleet_package_params(sched, ["base", "n3"])
+    decay = np.asarray(rows.decay)          # [2, 1, n_poles]
+    gain = np.asarray(rows.gain)
+    n3 = nodebank.get_node("n3")
+    # n3: tau_scale < 1 → faster decay (smaller decay coefficient);
+    # rth_scale > 1 → larger gains
+    assert (decay[1] < decay[0]).all()
+    assert (gain[1] > gain[0]).all()
+    assert np.allclose(gain[1], gain[0] * np.float32(n3.rth_scale))
+
+
+def test_node_poles_requires_pole_family():
+    sched = _sched(plant="grid")
+    with pytest.raises(ValueError, match="pole-family"):
+        nodebank.node_poles(sched, nodebank.get_node("n5"))
+
+
+# ------------------------------------------------------- hypothesis sweep
+# (guarded import rather than importorskip: a missing hypothesis must not
+# skip the deterministic tests above)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    pass
+else:
+    short = settings(max_examples=40, deadline=None)
+
+    @short
+    @given(st.floats(0.26, 2.5), st.floats(0.26, 2.5))
+    def test_from_scale_monotone_property(s1, s2):
+        """DVFS-relevant quantities of `from_scale` are monotone in
+        scale."""
+        if s1 == s2:
+            return
+        lo, hi = sorted((s1, s2))
+        a, b = nodebank.from_scale(lo), nodebank.from_scale(hi)
+        assert a.vdd_nom < b.vdd_nom
+        assert a.vdd_min < b.vdd_min
+        assert a.vdd_max < b.vdd_max
+        assert a.vth < b.vth
+        assert a.tau_scale < b.tau_scale
+        assert a.rth_scale > b.rth_scale
+
+    @short
+    @given(st.floats(0.26, 2.5))
+    def test_dvfs_bounds_property(s):
+        """Any derived bank's Vth envelope brackets 1.0, lo < hi."""
+        b = nodebank.from_scale(s)
+        lo, hi = b.dvfs_bounds()
+        assert lo < hi
+        assert lo <= 1.0 + 1e-12 and hi >= 1.0 - 1e-12
